@@ -1,0 +1,55 @@
+"""§VI-C microbenchmark: measured blind/unblind throughput on this host,
+vs the paper's 4 ms / 6 MB SGX figure, plus the per-inference blinded-byte
+totals our implementation produces for VGG-16/19 (paper: 47 MB / 51 MB)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blinding import BlindingSpec, blind_activations, \
+    blinding_stream, unblind_result
+from repro.configs import get_config
+from repro.core.trust import vgg_layer_profiles
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(emit):
+    spec = BlindingSpec()
+    mb6 = 6 * 2 ** 20 // 4                     # 6 MB of fp32 elements
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(mb6,)),
+                    jnp.float32).reshape(1536, 1024)
+    r = blinding_stream(jax.random.PRNGKey(0), x.shape)
+    blind_t = _time(lambda a, b: blind_activations(a, b, spec), x, r)
+    u = jnp.zeros_like(r)
+    y = blind_activations(x, r, spec)
+    unblind_t = _time(lambda a, b: unblind_result(a, b, spec), y, u)
+    emit("blinding/blind_6MB", blind_t * 1e6,
+         f"GBps={6/1024/blind_t:.2f} paper_sgx=4ms/6MB")
+    emit("blinding/unblind_6MB", unblind_t * 1e6,
+         f"GBps={6/1024/unblind_t:.2f}")
+    # per-inference blinded feature totals (paper §VI-C: 47MB / 51MB)
+    for arch, paper_mb in (("vgg16", 47), ("vgg19", 51)):
+        cfg = get_config(arch)
+        total = sum(l.out_bytes for l in vgg_layer_profiles(cfg)
+                    if l.linear)
+        emit(f"blinding/features_{arch}", total / 1e3,
+             f"MB={total/2**20:.0f} paper={paper_mb}MB")
+
+
+def main():
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Measured executor microbenchmarks on this host: per-mode wall time of the
+smoke VGG under the real OrigamiExecutor (functional path, CPU), plus the
+limb-matmul kernel throughput in interpret mode. These are *measured*
+numbers complementing the modeled paper tables."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.origami import OrigamiExecutor
+from repro.models import model as M
+
+
+def run(emit):
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(
+        jax.random.PRNGKey(1), (4, cfg.image_size, cfg.image_size, 3)) * 0.5}
+    for mode in ("open", "split", "origami", "slalom"):
+        ex = OrigamiExecutor(cfg, params, mode=mode)
+        ex.infer(batch)                      # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(ex.infer(batch).logits)
+        dt = (time.perf_counter() - t0) / 3
+        emit(f"exec/{mode}", dt * 1e6,
+             f"blinded_MB={ex.telemetry.blinded_bytes/1e6:.2f}")
+
+    from repro.kernels.limb_matmul.ops import field_matmul
+    from repro.kernels.limb_matmul.ref import P
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, P, (256, 1024), dtype=np.int32))
+    w = jnp.asarray(rng.integers(0, P, (1024, 256), dtype=np.int32))
+    field_matmul(x, w).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        field_matmul(x, w).block_until_ready()
+    dt = (time.perf_counter() - t0) / 3
+    emit("kernel/limb_matmul_256x1024x256", dt * 1e6,
+         f"GFLOPs_field={2*256*1024*256/dt/1e9:.2f}")
+
+
+def main():
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig 8: SSIM between real and c-GAN-reconstructed images per
+partition layer (smoke-scale VGG on the synthetic dataset).
+
+Full sweep is minutes of CPU; ``--budget`` trades steps for time. The
+qualitative target from the paper: high SSIM in the first conv layers, a
+dip at the first max-pool, a REBOUND at the following conv (the paper's
+"surprising observation"), then low beyond the safe partition point.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.privacy.reconstruct import train_adversary
+
+
+def run(emit, steps: int = 120, layers=None):
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    layers = layers or range(1, len(cfg.cnn_layers) - 1)
+    for layer in layers:
+        rep = train_adversary(params, cfg, layer=layer, steps=steps,
+                              batch=8, n_eval=32)
+        kind = cfg.cnn_layers[layer - 1]
+        emit(f"fig8/ssim_layer{layer}", rep.ssim * 1e6,
+             f"ssim={rep.ssim:.3f} layer_type={kind}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"), steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Figs 9/10 + 12/13: inference runtime of every strategy, GPU and CPU
+offload, for VGG-16/19 — from the calibrated enclave cost model driven by
+our models' actual per-layer FLOP/byte profiles (core/trust.py)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.trust import EnclaveSim
+
+PAPER_SPEEDUPS = {  # (arch, device) -> {strategy: paper speedup vs enclave}
+    ("vgg16", "gpu"): {"slalom": 10.0, "origami": 12.7},
+    ("vgg19", "gpu"): {"slalom": 11.0, "origami": 15.1},
+    ("vgg16", "cpu"): {"slalom": 2.9, "origami": 3.9},
+    ("vgg19", "cpu"): {"slalom": 2.9, "origami": 3.9},
+}
+
+
+def run(emit):
+    for arch in ("vgg16", "vgg19"):
+        cfg = get_config(arch)
+        for device in ("gpu", "cpu"):
+            sim = EnclaveSim(cfg, device=device)
+            cs = sim.all_strategies(cfg.origami.tier1_layers)
+            base = cs["enclave"].runtime_s
+            paper = PAPER_SPEEDUPS.get((arch, device), {})
+            for mode, c in cs.items():
+                speedup = base / c.runtime_s
+                emit(f"fig9_10/{arch}/{device}/{mode}",
+                     c.runtime_s * 1e6,
+                     f"speedup={speedup:.1f}x"
+                     + (f" paper={paper[mode]:.1f}x" if mode in paper
+                        else ""))
+
+
+def main():
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Tables I (enclave memory) and II (power-event recovery) for VGG-16."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.trust import EnclaveSim
+
+PAPER_T1 = {"enclave": 86, "split6": 29, "split8": 33, "split10": 35,
+            "slalom": 39, "origami": 39}
+PAPER_T2 = {"enclave": 201, "split6": 51, "split8": 54, "split10": 59}
+
+
+def run(emit):
+    cfg = get_config("vgg16")
+    sim = EnclaveSim(cfg, device="gpu")
+    for mode in ("enclave", "slalom", "origami"):
+        c = sim.runtime(mode, 6)
+        emit(f"table1/{mode}", c.enclave_resident_mb * 1000,
+             f"MB={c.enclave_resident_mb:.1f} paper={PAPER_T1[mode]}")
+        if mode == "enclave":
+            emit(f"table2/{mode}", c.recovery_s * 1e6,
+                 f"ms={c.recovery_s*1e3:.0f} paper={PAPER_T2[mode]}")
+    for p in (6, 8, 10):
+        c = sim.runtime("split", p)
+        emit(f"table1/split{p}", c.enclave_resident_mb * 1000,
+             f"MB={c.enclave_resident_mb:.1f} paper={PAPER_T1[f'split{p}']}")
+        emit(f"table2/split{p}", c.recovery_s * 1e6,
+             f"ms={c.recovery_s*1e3:.0f} paper={PAPER_T2[f'split{p}']}")
+
+
+def main():
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Three-term roofline per (arch × shape × mesh) from the dry-run artifacts.
+
+    compute    = HLO_dot_FLOPs(device) / peak_FLOPs(chip)
+    memory     = HLO_traffic(device)   / HBM_bw(chip)
+    collective = collective_bytes(device) / ICI_link_bw
+
+All three use the loop-aware HLO analysis (parallel/hlo_analysis.py): XLA's
+cost_analysis counts while-loop bodies once, so raw cost_analysis numbers
+are also recorded for reference but the roofline terms come from the
+trip-multiplied parse. MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference)
+with N = active params; the useful-compute ratio flags remat/redundancy
+waste. Hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclass
+class RooflineRow:
+    cell: str
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    hlo_flops_global: float
+    bound: str
+    useful_ratio: float
+    temp_gb: float
+    arg_gb: float
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization implied by the roofline-limiting term."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops_global
+                / (self.chips * PEAK_FLOPS * self.step_s))
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import SHAPES, get_config
+    from repro.models.model import active_params_analytic
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_params_analytic(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def load_rows(art_dir: str | Path = "artifacts/dryrun") -> List[RooflineRow]:
+    rows = []
+    for path in sorted(Path(art_dir).glob("*.json")):
+        d = json.loads(path.read_text())
+        if d.get("status") != "ok":
+            continue
+        chips = math.prod(d["mesh"])
+        h = d.get("hlo_analysis", {})
+        flops_dev = h.get("dot_flops_per_device", 0.0)
+        hbm_dev = h.get("hbm_bytes_per_device", 0.0)
+        coll_dev = sum(h.get("collective_bytes_per_device", {}).values())
+        mf = model_flops(d["arch"], d["shape"])
+        compute_s = flops_dev / PEAK_FLOPS
+        memory_s = hbm_dev / HBM_BW
+        coll_s = coll_dev / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        bound = max(terms, key=terms.get)
+        hlo_global = flops_dev * chips
+        ma = d.get("memory_analysis", {})
+        rows.append(RooflineRow(
+            cell=d["cell"], arch=d["arch"], shape=d["shape"],
+            mesh="x".join(map(str, d["mesh"])), chips=chips,
+            compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+            model_flops_global=mf, hlo_flops_global=hlo_global,
+            bound=bound,
+            useful_ratio=mf / hlo_global if hlo_global else 0.0,
+            temp_gb=ma.get("temp_size_in_bytes", 0) / 1e9,
+            arg_gb=ma.get("argument_size_in_bytes", 0) / 1e9))
+    return rows
+
+
+def format_table(rows: List[RooflineRow], single_pod_only=True) -> str:
+    out = ["| cell | chips | compute s | memory s | collective s | bound | "
+           "MODEL/HLO | MFU@bound | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if single_pod_only and r.chips != 256:
+            continue
+        out.append(
+            f"| {r.arch}·{r.shape} | {r.chips} | {r.compute_s:.2e} | "
+            f"{r.memory_s:.2e} | {r.collective_s:.2e} | {r.bound} | "
+            f"{r.useful_ratio:.2f} | {r.mfu*100:.1f}% | {r.temp_gb:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load_rows()
+    print(format_table(rows, single_pod_only=True))
+    print()
+    worst = sorted((r for r in rows if r.chips == 256),
+                   key=lambda r: r.mfu)[:5]
+    print("lowest-MFU cells:",
+          [(r.cell, f"{r.mfu*100:.1f}%") for r in worst])
+    coll = sorted((r for r in rows if r.chips == 256),
+                  key=lambda r: -r.collective_s)[:5]
+    print("most collective-bound:",
+          [(r.cell, f"{r.collective_s:.2e}s") for r in coll])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Fast by default; pass --full for
+the c-GAN SSIM sweep (paper Fig 8, minutes of CPU) and --roofline to print
+the dry-run roofline table (requires artifacts from launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the c-GAN SSIM layer sweep (slow)")
+    ap.add_argument("--roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (blinding_micro, exec_micro, paper_fig2_4_11,
+                            paper_fig9_10, paper_table1_2)
+    suites = [paper_fig9_10.run, paper_table1_2.run, paper_fig2_4_11.run,
+              blinding_micro.run, exec_micro.run]
+    if args.full:
+        from benchmarks import paper_fig8
+        suites.append(lambda e: paper_fig8.run(e, steps=150))
+    for suite in suites:
+        try:
+            suite(emit)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{suite.__module__},0.0,ERROR", file=sys.stderr)
+
+    if args.roofline:
+        from benchmarks.roofline import format_table, load_rows
+        print(format_table(load_rows()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Private serving end-to-end: attestation -> sealed requests -> blinded
+two-tier inference -> sealed responses (paper Fig. 3a).
+
+    PYTHONPATH=src python examples/private_serving.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.privacy.data import make_batch
+from repro.runtime.serving import PrivateInferenceServer, Request
+
+
+def main():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    server = PrivateInferenceServer(cfg, params, mode="origami", max_batch=4)
+
+    # client side: verify WHAT will process the data before sending keys
+    quote = server.attest()
+    print(f"attested: measurement={quote.measurement[:20]}… "
+          f"model={quote.config_name} tier1={quote.partition} "
+          f"field=Z_{quote.field_p}")
+
+    rng = np.random.default_rng(0)
+    requests, keys = [], {}
+    for rid in range(10):
+        img = make_batch(rid, 1, cfg.image_size)[0]
+        key = rng.integers(0, 2**32 - 1, size=(2,), dtype=np.uint32)
+        keys[rid] = key
+        requests.append(Request(
+            rid=rid, box=PrivateInferenceServer.client_seal(key, img, rid),
+            shape=img.shape, session_key=key))
+
+    t0 = time.time()
+    responses = server.serve(requests)
+    dt = time.time() - t0
+    ok = [r for r in responses if r.ok]
+    print(f"served {len(ok)}/{len(responses)} in {dt:.2f}s "
+          f"({dt/len(responses)*1e3:.0f} ms/req, batch={server.max_batch})")
+
+    logits = PrivateInferenceServer.client_open(
+        keys[0], ok[0].box, (cfg.num_classes,))
+    print(f"request 0 -> class {int(np.argmax(logits))} "
+          f"(logits[:4]={np.round(logits[:4], 2)})")
+    t = server.executor.telemetry
+    print(f"enclave telemetry: {t.calls} blinded offloads, "
+          f"{t.blinded_bytes/1e6:.2f} MB blinded")
+
+
+if __name__ == "__main__":
+    main()

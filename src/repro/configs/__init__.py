@@ -1,0 +1,87 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (MLAConfig, MeshConfig, ModelConfig, MoEConfig,
+                                OrigamiConfig, SHAPES, ShapeConfig, SSMConfig,
+                                TrainConfig)
+
+ARCHS: List[str] = [
+    "qwen2_5_14b",
+    "yi_9b",
+    "minicpm3_4b",
+    "smollm_135m",
+    "qwen3_moe_235b",
+    "arctic_480b",
+    "zamba2_1_2b",
+    "whisper_small",
+    "llama3_2_vision_11b",
+    "xlstm_1_3b",
+]
+
+PAPER_MODELS: List[str] = ["vgg16", "vgg19"]
+
+# Canonical external ids (--arch accepts both forms).
+ALIASES: Dict[str, str] = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "yi-9b": "yi_9b",
+    "minicpm3-4b": "minicpm3_4b",
+    "smollm-135m": "smollm_135m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "arctic-480b": "arctic_480b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "whisper-small": "whisper_small",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "vgg-16": "vgg16",
+    "vgg-19": "vgg19",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+# Which shape cells apply per arch (see DESIGN.md §5 for skip rationale).
+def applicable_shapes(name: str) -> List[str]:
+    name = ALIASES.get(name, name)
+    cfg = get_config(name)
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    # long_500k only for sub-quadratic (SSM / hybrid) archs.
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    return shapes
+
+
+SKIPPED_CELLS = [
+    (a, "long_500k", "pure full-attention arch; no sub-quadratic variant in "
+     "published config (DESIGN.md §5)")
+    for a in ARCHS
+    if get_config(a).family not in ("ssm", "hybrid")
+]
+
+__all__ = [
+    "ARCHS", "PAPER_MODELS", "ALIASES", "SHAPES", "SKIPPED_CELLS",
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "OrigamiConfig",
+    "ShapeConfig", "MeshConfig", "TrainConfig",
+    "get_config", "get_smoke", "list_archs", "applicable_shapes",
+]

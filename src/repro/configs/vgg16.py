@@ -1,0 +1,42 @@
+"""VGG-16 — the paper's primary evaluation model [Simonyan & Zisserman 2014].
+
+``cnn_layers`` entries: "convC" (3x3 s1 conv to C channels + ReLU),
+"pool" (2x2 maxpool), "fcN" (dense to N + ReLU), "logits" (dense to classes).
+Layer indices in the paper ("partition at layer 6") count conv/pool layers in
+this list, 1-based, matching Fig. 7/8.
+"""
+from repro.configs.base import ModelConfig, OrigamiConfig
+
+_LAYERS = (
+    "conv64", "conv64", "pool",            # 1,2,3
+    "conv128", "conv128", "pool",          # 4,5,6
+    "conv256", "conv256", "conv256", "pool",
+    "conv512", "conv512", "conv512", "pool",
+    "conv512", "conv512", "conv512", "pool",
+    "fc4096", "fc4096", "logits",
+)
+
+CONFIG = ModelConfig(
+    name="vgg16",
+    family="cnn",
+    num_layers=len(_LAYERS),
+    d_model=0, num_heads=0, num_kv_heads=0, d_ff=0,
+    vocab_size=0,
+    cnn_layers=_LAYERS,
+    image_size=224,
+    image_channels=3,
+    num_classes=1000,
+    dtype="float32",
+    # Paper: partition after layer 6 (first pool of block 2) is the minimum
+    # safe point verified by the c-GAN (Fig. 7/8).
+    origami=OrigamiConfig(enabled=True, tier1_layers=6),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        cnn_layers=("conv8", "conv8", "pool", "conv16", "conv16", "pool",
+                    "fc32", "logits"),
+        num_layers=8, image_size=32, num_classes=10,
+        origami=OrigamiConfig(enabled=True, tier1_layers=3),
+    )

@@ -1,0 +1,36 @@
+"""Whisper-small backbone — enc-dec transformer; the audio conv frontend is a
+STUB per assignment (input_specs provides precomputed frame embeddings)
+[arXiv:2212.04356].
+
+vocab 51,865 padded to a multiple of 256 (51,968) for vocab TP — DESIGN.md §5.
+"""
+from repro.configs.base import ModelConfig, OrigamiConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,                  # 12 encoder + 12 decoder
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    vocab_pad_to=256,
+    attention="gqa",
+    norm="layernorm",
+    activation="gelu",
+    encoder_decoder=True,
+    encoder_seq_len=1500,
+    tie_embeddings=True,
+    rope_theta=0.0,                 # whisper uses learned/sinusoidal positions
+    origami=OrigamiConfig(enabled=True, tier1_layers=2),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=96, num_heads=3, num_kv_heads=3, head_dim=32,
+        d_ff=192, vocab_size=512, vocab_pad_to=16, encoder_seq_len=64,
+        origami=OrigamiConfig(enabled=True, tier1_layers=1),
+    )

@@ -1,0 +1,9 @@
+"""Origami core: blinding, Slalom protocol, two-tier executor, trust model."""
+from repro.core.blinding import BlindingSpec
+from repro.core.origami import MODES, OrigamiExecutor, OrigamiResult
+from repro.core.slalom import SlalomContext, Telemetry, blinded_dense
+from repro.core.trust import EnclaveParams, EnclaveSim
+
+__all__ = ["BlindingSpec", "MODES", "OrigamiExecutor", "OrigamiResult",
+           "SlalomContext", "Telemetry", "blinded_dense", "EnclaveParams",
+           "EnclaveSim"]

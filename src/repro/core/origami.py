@@ -1,0 +1,146 @@
+"""Origami executor: two-tier trust-partitioned inference (the paper).
+
+Execution modes (paper §VI baselines):
+
+    "open"         everything on the untrusted device, no privacy
+    "enclave"      everything inside the enclave (paper baseline 2)
+    "split"        tier-1 in the enclave, tier-2 open (Split/x)
+    "slalom"       blinded offload for EVERY layer (Slalom/Privacy)
+    "origami"      blinded offload for tier-1 only, tier-2 open (the paper)
+
+All modes compute the *same function* (up to tier-1 quantization error in
+blinded modes) — tests assert allclose against the open reference. Modes
+differ in where work lands, which the trace-time telemetry records and
+core/trust.py prices with the paper-calibrated cost model.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import slalom as SL
+from repro.core.blinding import BlindingSpec
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import vgg as V
+
+MODES = ("open", "enclave", "split", "slalom", "origami")
+
+
+@dataclass
+class OrigamiResult:
+    logits: jax.Array
+    boundary: Optional[jax.Array]       # what the adversary observes
+    telemetry: SL.Telemetry
+
+
+class OrigamiExecutor:
+    """Partitioned private inference over any repro model."""
+
+    def __init__(self, cfg: ModelConfig, params, mode: str = "origami",
+                 partition: Optional[int] = None,
+                 spec: Optional[BlindingSpec] = None):
+        assert mode in MODES, mode
+        self.cfg = cfg
+        self.params = params
+        self.mode = mode
+        self.partition = (partition if partition is not None
+                          else cfg.origami.tier1_layers)
+        self.spec = spec or BlindingSpec()
+        self.telemetry = SL.Telemetry()
+        self._jitted = jax.jit(self._traced)
+
+    # -- layer count helpers -------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return (len(self.cfg.cnn_layers) if self.cfg.family == "cnn"
+                else self.cfg.num_layers)
+
+    def _tier_bounds(self) -> Tuple[int, int]:
+        p = self.partition
+        if self.mode == "slalom":
+            return self.num_blocks, self.num_blocks   # blind everything
+        if self.mode == "open":
+            return 0, 0
+        if self.mode == "enclave":
+            return self.num_blocks, 0                 # all enclave, no blind
+        return p, p                                   # split / origami
+
+    # -- traced computation --------------------------------------------------
+    def _traced(self, batch, session_key):
+        cfg = self.cfg
+        ctx = SL.SlalomContext(session_key, self.spec,
+                               telemetry=self.telemetry)
+        blinded = self.mode in ("slalom", "origami")
+        tier1_end, _ = self._tier_bounds()
+
+        if cfg.family == "cnn":
+            return self._traced_cnn(batch, ctx, blinded, tier1_end)
+        return self._traced_lm(batch, ctx, blinded, tier1_end)
+
+    def _traced_cnn(self, batch, ctx, blinded, tier1_end):
+        cfg, params = self.cfg, self.params
+        x = batch["images"]
+        if blinded and tier1_end > 0:
+            with L.dense_impl(functools.partial(SL.blinded_dense, ctx)), \
+                 L.conv_impl(functools.partial(SL.blinded_conv2d, ctx)):
+                x = V.apply_layer_range(params, x, cfg, 0, tier1_end)
+        elif tier1_end > 0:
+            x = V.apply_layer_range(params, x, cfg, 0, tier1_end)
+        boundary = x
+        x = V.apply_layer_range(params, x, cfg, tier1_end,
+                                len(cfg.cnn_layers))
+        return x, boundary
+
+    def _traced_lm(self, batch, ctx, blinded, tier1_end):
+        cfg, params = self.cfg, self.params
+        memory = batch.get("patches") if cfg.family == "vlm" else None
+        if cfg.family == "audio":
+            # tier-1 ⊆ encoder (the private input is the audio); see DESIGN §5
+            frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+            x = frames + L.sinusoidal_positions(
+                frames.shape[1], cfg.d_model).astype(frames.dtype)
+            if blinded and tier1_end > 0:
+                with L.dense_impl(functools.partial(SL.blinded_dense, ctx)):
+                    x, _ = M.apply_range(params, x, cfg, 0, tier1_end)
+            elif tier1_end > 0:
+                x, _ = M.apply_range(params, x, cfg, 0, tier1_end)
+            boundary = x
+            x, _ = M.apply_range(params, x, cfg, tier1_end, cfg.num_layers)
+            mem = L.apply_norm(params["enc_norm"], x, cfg.norm)
+            out = M.forward_audio_decoder(params, batch, mem, cfg)
+            return out, boundary
+
+        x = M.embed_tokens(params, batch["tokens"], cfg)   # enclave
+        if blinded and tier1_end > 0:
+            with L.dense_impl(functools.partial(SL.blinded_dense, ctx)):
+                x, _ = M.apply_range(params, x, cfg, 0, tier1_end,
+                                     memory=memory)
+        elif tier1_end > 0:
+            x, _ = M.apply_range(params, x, cfg, 0, tier1_end, memory=memory)
+        boundary = x
+        x, _ = M.apply_range(params, x, cfg, tier1_end, cfg.num_layers,
+                             memory=memory)
+        return M.head(params, x, cfg), boundary
+
+    # -- public API ----------------------------------------------------------
+    def infer(self, batch: Dict[str, jax.Array],
+              session_key: Optional[jax.Array] = None,
+              jit: bool = True) -> OrigamiResult:
+        key = (session_key if session_key is not None
+               else jax.random.PRNGKey(0))
+        fn = self._jitted if jit else self._traced
+        logits, boundary = fn(batch, key)
+        return OrigamiResult(logits=logits, boundary=boundary,
+                             telemetry=self.telemetry)
+
+    def reference(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Plain fp forward — the correctness oracle for all modes."""
+        if self.cfg.family == "cnn":
+            return V.vgg_forward(self.params, batch["images"], self.cfg)
+        return M.forward(self.params, batch, self.cfg).logits

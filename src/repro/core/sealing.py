@@ -1,0 +1,62 @@
+"""Encrypted request channel: counter-mode stream cipher + keyed MAC.
+
+Models the user->enclave path (paper Fig. 3a: the user encrypts the input;
+only the enclave can decrypt). We use a threefry-based CTR stream cipher
+over float bit-patterns plus a polynomial MAC — *not* production AES-GCM,
+but a faithful functional stand-in with the same interface and the same
+cost shape (one pass to decrypt, one to authenticate), suitable for the
+serving pipeline and its tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SealedBox(NamedTuple):
+    ciphertext: jax.Array      # uint32 bit-patterns
+    nonce: jax.Array           # (2,) uint32
+    mac: jax.Array             # () uint32
+
+
+def _keystream(key: jax.Array, nonce: jax.Array, n: int) -> jax.Array:
+    k = jax.random.fold_in(jax.random.wrap_key_data(
+        jnp.asarray(key, jnp.uint32)), nonce[0])
+    k = jax.random.fold_in(k, nonce[1])
+    return jax.random.bits(k, (n,), jnp.uint32)
+
+
+def _mac(key: jax.Array, data_u32: jax.Array) -> jax.Array:
+    """Carter-Wegman-style polynomial MAC over u32 words (mod 2^32)."""
+    k = jax.random.fold_in(jax.random.wrap_key_data(
+        jnp.asarray(key, jnp.uint32)), jnp.uint32(0xA11CE))
+    coeff = jax.random.bits(k, (2,), jnp.uint32)
+    c0 = coeff[0] | jnp.uint32(1)      # odd => unit mod 2^32 (invertible)
+
+    def step(acc, w):
+        return acc * c0 + w + coeff[1], None
+
+    acc, _ = jax.lax.scan(step, jnp.uint32(0x9E3779B9), data_u32)
+    return acc
+
+
+def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
+    """Encrypt + authenticate a float tensor under the session key."""
+    bits = jax.lax.bitcast_convert_type(
+        x.astype(jnp.float32), jnp.uint32).reshape(-1)
+    ks = _keystream(key, nonce, bits.size)
+    ct = bits ^ ks
+    return SealedBox(ciphertext=ct.reshape(x.shape), nonce=nonce,
+                     mac=_mac(key, ct))
+
+
+def unseal(key: jax.Array, box: SealedBox,
+           shape: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+    """Returns (plaintext, mac_ok). Enclave-side."""
+    ct = box.ciphertext.reshape(-1)
+    ok = _mac(key, ct) == box.mac
+    ks = _keystream(key, box.nonce, ct.size)
+    pt = jax.lax.bitcast_convert_type(ct ^ ks, jnp.float32)
+    return pt.reshape(shape), ok

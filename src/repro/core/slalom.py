@@ -1,0 +1,115 @@
+"""Slalom protocol: per-linear-op blinded offload (the tier-1 inner loop).
+
+``blinded_dense(p, x, ...)`` is a drop-in for models.layers.dense:
+
+    enclave:   x_q = Quant(x);  x_b = (x_q + r) mod p
+    device:    y_b = (x_b @ W_q) mod p            <- limb_matmul kernel
+    enclave:   y   = Dequant((y_b - r@W_q) mod p) (+ bias, fp)
+
+The protocol only applies to *static-weight* linear maps (unblinding needs
+the precomputable r·W) — exactly Slalom's constraint; attention cores,
+recurrences and non-linearities stay in the enclave during tier-1
+(DESIGN.md §3, §5).
+
+A trace-time ``Telemetry`` recorder accumulates blinded bytes / offloaded
+FLOPs / enclave FLOPs per protocol call — shapes are static under jit, so
+this is exact and free; core/trust.py turns it into the paper's cost model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blinding as B
+from repro.kernels.limb_matmul.ops import field_matmul
+
+
+@dataclass
+class Telemetry:
+    """Static-shape accounting gathered while tracing (bytes, FLOPs)."""
+    blinded_bytes: int = 0          # enclave->device blinded traffic
+    returned_bytes: int = 0         # device->enclave results
+    offloaded_flops: int = 0        # linear-op FLOPs run untrusted
+    enclave_flops: int = 0          # blinding/unblinding elementwise work
+    enclave_peak_feature_bytes: int = 0
+    calls: int = 0
+
+    def record_offload(self, t: int, d_in: int, d_out: int):
+        self.blinded_bytes += t * d_in * 4
+        self.returned_bytes += t * d_out * 4
+        self.offloaded_flops += 2 * t * d_in * d_out
+        # blind + unblind touch every element once each
+        self.enclave_flops += 2 * t * (d_in + d_out)
+        self.enclave_peak_feature_bytes = max(
+            self.enclave_peak_feature_bytes, t * max(d_in, d_out) * 4)
+        self.calls += 1
+
+
+@dataclass
+class SlalomContext:
+    """Session state for one private-inference request."""
+    session_key: jax.Array
+    spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
+    telemetry: Telemetry = dfield(default_factory=Telemetry)
+    step: int = 0
+    _layer_counter: int = 0
+
+    def next_layer_key(self) -> jax.Array:
+        k = B.stream_key(self.session_key, self._layer_counter, self.step)
+        self._layer_counter += 1
+        return k
+
+
+def blinded_dense(ctx: SlalomContext, p, x):
+    """Drop-in for layers.dense running the Slalom protocol.
+
+    p: {"w": (d_in, d_out) float [, "b": (d_out,)]}; x: (..., d_in).
+    """
+    w = p["w"]
+    d_in, d_out = w.shape
+    lead = x.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    xt = x.reshape(t, d_in)
+
+    spec = ctx.spec
+    # --- enclave: quantize weights (offline in deployment), draw the pad ---
+    w_q, w_scale = B.quantize_weight(w, spec)
+    r = B.blinding_stream(ctx.next_layer_key(), (t, d_in))
+    u = B.unblinding_factor(r, w_q)          # precomputed (Slalom §4)
+    # --- enclave: per-request absmax activation scale + blind ---
+    x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
+    x_b = B.blind_activations(xt.astype(jnp.float32) / x_scale, r, spec)
+    # --- untrusted device: modular matmul on blinded data ---
+    y_b = field_matmul(x_b, w_q)
+    # --- enclave: unblind + dequantize (+ fp bias) ---
+    y = B.unblind_result(y_b, u, spec, out_dtype=jnp.float32)
+    y = y * (x_scale * w_scale)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    ctx.telemetry.record_offload(t, d_in, d_out)
+    return y.reshape(lead + (d_out,)).astype(x.dtype)
+
+
+def blinded_conv2d(ctx: SlalomContext, p, x, stride: int = 1):
+    """Blinded 3x3 SAME conv via im2col -> blinded matmul (VGG tier-1).
+
+    On TPU convolutions lower to MXU matmuls anyway; im2col + limb matmul is
+    the faithful field-arithmetic equivalent.
+    """
+    w = p["w"]                                # (kh, kw, cin, cout)
+    kh, kw, cin, cout = w.shape
+    B_, H, W_, _ = x.shape
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i:i + H:stride, j:j + W_:stride, :])
+    xcol = jnp.concatenate(cols, axis=-1).reshape(B_ * H * W_, kh * kw * cin)
+    wcol = w.reshape(kh * kw * cin, cout)
+    y = blinded_dense(ctx, {"w": wcol, "b": p["b"]}, xcol)
+    return y.reshape(B_, H, W_, cout)

@@ -1,0 +1,181 @@
+"""Trust domains and the enclave cost/residency model.
+
+This container has no SGX part (and the TPU target has no enclave at all),
+so absolute enclave timings are *modeled*, calibrated to the paper's own
+measurements (§VI), while all byte/FLOP quantities are computed from our
+actual model implementations. The reproduction target is the paper's
+relative results (Figs 9/10/12/13, Tables I/II) — see DESIGN.md §7.
+
+Calibration constants (from the paper):
+  - blinding/unblinding throughput: 6 MB per 4 ms          (§VI-C)
+  - GPU ≈ 49× CPU on VGG inference (321× / 6.5×)           (§III-A)
+  - enclave(JIT-loading) ≈ CPU / 6.4..6.5                  (Fig. 2)
+  - enclave pre-loaded ≈ CPU / 16.7..18.3 (paging-bound)   (Fig. 2)
+  - power-event recovery ≈ re-init + EPC re-encryption      (Table II)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class EnclaveParams:
+    """Calibrated so the VGG-16 strategy costs land on the paper's numbers
+    (see benchmarks/paper_fig9_10.py for the target-vs-model table)."""
+    epc_limit_mb: float = 128.0
+    epc_usable_mb: float = 93.0
+    cpu_flops: float = 1.0e11          # effective CPU conv/matmul throughput
+    gpu_speedup: float = 49.0          # paper: 321x / 6.5x
+    sgx_slowdown: float = 5.2          # compute-only slowdown (solved from
+                                       # Split/6 ≈ 4x, Fig. 4)
+    blind_bytes_per_s: float = 6e6 / 4e-3   # 1.5 GB/s (§VI-C, 4ms/6MB)
+    # enclave elementwise/copy bandwidth (EPC-bound ReLU, quantize, ECALL
+    # copies) — solved from Slalom = enclave/10 (Fig. 9)
+    enclave_mem_bytes_per_s: float = 0.9e9
+    # lazy-load paging of >8MB dense layers — solved from enclave = 6.4x CPU
+    paging_bytes_per_s: float = 1.47e9
+    epc_init_bytes_per_s: float = 86e6 / 0.190     # Table II: ~201ms/86MB
+    recovery_base_s: float = 0.012
+    runtime_overhead_mb: float = 4.0
+
+    @property
+    def gpu_flops(self) -> float:
+        return self.cpu_flops * self.gpu_speedup
+
+    @property
+    def sgx_flops(self) -> float:
+        return self.cpu_flops / self.sgx_slowdown
+
+
+@dataclass
+class LayerProfile:
+    name: str
+    flops: int                 # linear-op FLOPs
+    param_bytes: int
+    out_bytes: int             # output feature-map bytes (batch 1, fp32)
+    linear: bool               # offloadable under blinding?
+
+
+def vgg_layer_profiles(cfg: ModelConfig) -> List[LayerProfile]:
+    from repro.models.vgg import _parse
+    h = w = cfg.image_size
+    c = cfg.image_channels
+    out: List[LayerProfile] = []
+    flat = None
+    for spec in cfg.cnn_layers:
+        kind, n = _parse(spec)
+        if kind == "conv":
+            flops = 2 * h * w * 9 * c * n
+            pbytes = (9 * c * n + n) * 4
+            c = n
+            obytes = h * w * c * 4
+            out.append(LayerProfile(spec, flops, pbytes, obytes, True))
+        elif kind == "pool":
+            h, w = h // 2, w // 2
+            obytes = h * w * c * 4
+            out.append(LayerProfile(spec, h * w * c * 4 // 4, 0, obytes,
+                                    False))
+        else:
+            d_in = flat if flat is not None else h * w * c
+            d_out = n if kind == "fc" else cfg.num_classes
+            flops = 2 * d_in * d_out
+            out.append(LayerProfile(spec, flops, (d_in * d_out + d_out) * 4,
+                                    d_out * 4, True))
+            flat = d_out
+    return out
+
+
+@dataclass
+class StrategyCost:
+    name: str
+    runtime_s: float
+    enclave_resident_mb: float
+    recovery_s: float
+    breakdown: Dict[str, float]
+
+
+class EnclaveSim:
+    """Prices an execution strategy for a CNN model on (SGX + device)."""
+
+    def __init__(self, cfg: ModelConfig, params: EnclaveParams = None,
+                 device: str = "gpu"):
+        self.cfg = cfg
+        self.p = params or EnclaveParams()
+        self.device_flops = (self.p.gpu_flops if device == "gpu"
+                             else self.p.cpu_flops)
+        self.layers = vgg_layer_profiles(cfg)
+
+    # -- residency (Table I) ------------------------------------------------
+    def residency_bytes(self, mode: str, partition: int) -> float:
+        L = self.layers
+        p = self.p
+        act = max(l.out_bytes for l in L)                  # working buffer
+        overhead = p.runtime_overhead_mb * 2 ** 20
+        if mode == "enclave":
+            # baseline 2: convs resident; >8MB FC layers lazy-load in slices
+            conv_params = sum(l.param_bytes for l in L
+                              if not l.name.startswith(("fc", "logits")))
+            return conv_params + 8 * 2 ** 20 + act + overhead
+        if mode == "split":
+            return (sum(l.param_bytes for l in L[:partition]) + 2 * act
+                    + overhead)
+        if mode in ("slalom", "origami"):
+            blind_layers = L[:partition] if mode == "origami" else L
+            feat = max((l.out_bytes for l in blind_layers), default=act)
+            # blinding-factor buffer (paper: ~12MB) + quantized feature + act
+            return feat + 12 * 2 ** 20 + act + overhead
+        return 0.0
+
+    # -- runtime (Figs 9/10/12/13) -------------------------------------------
+    def runtime(self, mode: str, partition: int) -> StrategyCost:
+        p = self.p
+        L = self.layers
+        t_enclave = t_device = t_blind = t_page = 0.0
+        resident = self.residency_bytes(mode, partition)
+
+        for i, l in enumerate(L):
+            in_tier1 = i < partition
+            if mode == "open":
+                t_device += l.flops / self.device_flops
+            elif mode == "enclave":
+                t_enclave += l.flops / p.sgx_flops
+                if (l.name.startswith(("fc", "logits"))
+                        and l.param_bytes > 8 * 2 ** 20):   # lazy-loaded FC
+                    t_page += l.param_bytes / p.paging_bytes_per_s
+            elif mode == "split":
+                if in_tier1:
+                    t_enclave += l.flops / p.sgx_flops
+                else:
+                    t_device += l.flops / self.device_flops
+            elif mode in ("slalom", "origami"):
+                blinded = (mode == "slalom") or in_tier1
+                if blinded and l.linear:
+                    t_device += l.flops / self.device_flops
+                    # blind+unblind passes and the EPC-bound elementwise /
+                    # copy work (quantize, ReLU, ECALL buffers)
+                    t_blind += 2 * l.out_bytes / p.blind_bytes_per_s
+                    t_enclave += 2 * l.out_bytes / p.enclave_mem_bytes_per_s
+                elif blinded:                       # pool etc. in enclave
+                    t_enclave += l.out_bytes / p.enclave_mem_bytes_per_s
+                else:
+                    t_device += l.flops / self.device_flops
+        total = t_enclave + t_device + t_blind + t_page
+        return StrategyCost(
+            name=mode,
+            runtime_s=total,
+            enclave_resident_mb=resident / 2 ** 20,
+            recovery_s=self.recovery_s(resident),
+            breakdown={"enclave": t_enclave, "device": t_device,
+                       "blind": t_blind, "paging": t_page})
+
+    def recovery_s(self, resident_bytes: float) -> float:
+        return (self.p.recovery_base_s
+                + resident_bytes / self.p.epc_init_bytes_per_s)
+
+    def all_strategies(self, partition: int) -> Dict[str, StrategyCost]:
+        return {m: self.runtime(m, partition)
+                for m in ("open", "enclave", "split", "slalom", "origami")}

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused blind/unblind elementwise ops.
+
+blind:    y = (round(x · 2^k) mod p + r) mod p          (enclave -> device)
+unblind:  x = signed((y − u) mod p) / 2^(k_x + k_w)     (device -> enclave)
+
+``r`` is the one-time-pad stream (uniform over Z_p, enclave-private) and
+``u = (r @ W_q) mod p`` the precomputed unblinding factor. These two ops are
+the per-layer overhead Slalom pays everywhere and Origami pays only in
+tier-1 — the 4 ms / 6 MB constant of paper §VI-C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.limb_matmul.ref import HALF, P, from_signed, to_signed
+
+
+def quantize(x, k_bits: int):
+    """float -> signed-canonical field int32 with scale 2^k (clipped)."""
+    scaled = jnp.round(x.astype(jnp.float32) * (2.0 ** k_bits))
+    clipped = jnp.clip(scaled, -HALF, HALF)
+    return clipped.astype(jnp.int32)
+
+
+def dequantize(s, k_bits: int, dtype=jnp.float32):
+    return (s.astype(jnp.float32) / (2.0 ** k_bits)).astype(dtype)
+
+
+def blind_ref(x, r, k_bits: int):
+    """x float, r field [0,p) -> blinded field [0,p)."""
+    return jnp.mod(from_signed(quantize(x, k_bits)) + r, P)
+
+
+def unblind_ref(y, u, k_out_bits: int, dtype=jnp.float32):
+    """y field, u field -> dequantized float (scale 2^k_out)."""
+    return dequantize(to_signed(jnp.mod(y - u + P, P)), k_out_bits, dtype)

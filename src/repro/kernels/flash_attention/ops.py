@@ -1,0 +1,24 @@
+"""Jitted wrapper for the Pallas flash-attention forward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, impl: str = "auto"):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KH,D) -> (B,Sq,H,D)."""
+    if impl == "ref":
+        return mha_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, bq=bq, bk=bk,
+        interpret=(impl == "interpret") or (impl == "auto" and not _on_tpu()))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Pallas flash-attention forward kernel.
+
+Plain materialized causal attention over GQA-shaped inputs — the allclose
+target for the tiled kernel (and numerically identical to
+models/attention.py's naive core).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KH,D) -> (B,Sq,H,Dv)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, Sq, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)

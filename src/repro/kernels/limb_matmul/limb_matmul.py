@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: blinded modular matmul over Z_p via int8 limb planes.
+
+Grid: (M/bm, N/bn, K/bk), k innermost. Each step performs the nine
+int8×int8→int32 MXU matmuls between limb planes, groups partials by limb
+power s = i+j, reduces mod p, recombines with the overflow-free
+shift-and-reduce (2^24 ≡ 3 mod p) and accumulates into the output block.
+
+VMEM per step (bm=bn=256, bk=1024): 2 × 3×256×1024 int8 (1.5 MiB) limb
+blocks + 256×256 int32 out block (256 KiB) — comfortably inside 16 MiB VMEM
+with double buffering. MXU dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.limb_matmul.ref import P
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 1024
+
+
+def _mod_mul_pow256(y, k: int):
+    for _ in range(k):
+        y = jnp.mod(y * 256, P)      # p < 2^23 so y*256 < 2^31
+    return y
+
+
+def _kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """x_ref: (3, bm, bk) int8; w_ref: (3, bk, bn) int8; o_ref: (bm, bn)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # group the nine partial products by limb power s = i + j
+    sums = [None] * 5
+    for i in range(3):
+        xi = x_ref[i]
+        for j in range(3):
+            pij = jax.lax.dot_general(
+                xi, w_ref[j],
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            s = i + j
+            sums[s] = pij if sums[s] is None else sums[s] + pij
+    acc = jnp.zeros_like(o_ref)
+    for s in range(5):
+        acc = acc + _mod_mul_pow256(jnp.mod(sums[s], P), s)
+    o_ref[...] = jnp.mod(o_ref[...] + acc, P)
+
+
+def limb_matmul_planes(x_limbs, w_limbs, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                       bk=DEFAULT_BK, interpret=False):
+    """x_limbs: (3, M, K) int8; w_limbs: (3, K, N) int8 -> (M, N) int32 mod p.
+
+    M, N, K must be multiples of the block sizes (ops.py pads).
+    """
+    _, M, K = x_limbs.shape
+    _, _, N = w_limbs.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    # int32 accumulation exactness: per-step partials are ≤ 3·bk·128² and the
+    # running block is < p, so bk is bounded by (2^31 − p)/(3·128²).
+    assert bk <= 43000, bk
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, bm, bk), lambda m, n, k: (0, m, k)),
+            pl.BlockSpec((3, bk, bn), lambda m, n, k: (0, k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(x_limbs, w_limbs)

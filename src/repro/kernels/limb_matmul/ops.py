@@ -1,0 +1,56 @@
+"""Jitted public wrapper for the blinded modular matmul.
+
+``field_matmul(x, w)`` takes field matrices in [0, p) (int32), handles limb
+decomposition, padding to kernel block multiples, and backend selection:
+Pallas-compiled on TPU, Pallas ``interpret=True`` elsewhere (bit-exact, used
+by CPU tests), or the pure-jnp reference for very small shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.limb_matmul import ref
+from repro.kernels.limb_matmul.limb_matmul import limb_matmul_planes
+
+_LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bn", "bk"))
+def field_matmul(x_field, w_field, *, impl: str = "auto",
+                 bm=256, bn=256, bk=1024):
+    """(X @ W) mod p. x: (M, K) int32 in [0, p); w: (K, N) int32 in [0, p)."""
+    M, K = x_field.shape
+    K2, N = w_field.shape
+    assert K == K2
+    if impl == "ref" or (impl == "auto" and M * N * K <= 64 ** 3):
+        return ref.field_matmul_ref(x_field, w_field)
+    xl = jnp.moveaxis(ref.to_limbs(ref.to_signed(x_field)), -1, 0)  # (3,M,K)
+    wl = jnp.moveaxis(ref.to_limbs(ref.to_signed(w_field)), -1, 0)  # (3,K,N)
+    bm_, bn_, bk_ = min(bm, _LANE * ((M + 127) // 128)), bn, bk
+    xl = _pad_to(_pad_to(xl, bm, 1), bk, 2)
+    wl = _pad_to(_pad_to(wl, bk, 1), bn, 2)
+    out = limb_matmul_planes(
+        xl, wl, bm=bm, bn=bn, bk=bk,
+        interpret=(impl == "interpret") or (impl == "auto" and not _on_tpu()))
+    return out[:M, :N]
+
+
+def blinded_matmul(x_blinded, w_field, **kw):
+    """Alias with protocol-level naming: the untrusted-device operation."""
+    return field_matmul(x_blinded, w_field, **kw)

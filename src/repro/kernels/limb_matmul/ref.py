@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the blinded modular matmul (Z_p, p = 2^23 - 15).
+
+This is the TPU-native adaptation of Slalom's field arithmetic (DESIGN.md
+§3): Slalom relies on fp64-exact float tricks on GPU; TPUs have neither fp64
+nor wide integer MXU paths, but they *do* have an exact int8×int8→int32
+matmul. We therefore represent signed-canonical field elements
+(s ∈ [-(p−1)/2, (p−1)/2]) in **balanced base-256**: three int8 digits
+l0 + 256·l1 + 256²·l2 with l_i ∈ [−128, 127] (covers ±8,355,711 ⊃
+±HALF = ±4,194,296). A field matmul is then nine int8 MXU matmuls
+P_ij = X_i · W_j plus a recombination y = Σ_{i,j} P_ij · 256^{i+j} (mod p),
+all in int32:
+
+- exactness: |P_ij| ≤ K·128² ⇒ exact for K ≤ 2^17 (asserted);
+- since p < 2^23, y·256 < 2^31 for y ∈ [0, p), so the power-of-256
+  multiplies reduce byte-by-byte without overflow.
+
+(Slalom's field was 2^24-scale; we give up one bit of quantization headroom
+for an int8-exact limb representation — recorded in DESIGN.md §3.)
+
+Everything here is plain jnp — it runs on CPU exactly and serves as the
+allclose oracle for the Pallas kernel in limb_matmul.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+P = (1 << 23) - 15           # 8388593, prime
+HALF = (P - 1) // 2          # signed-canonical bound
+MAX_K = 1 << 17              # int32 accumulation exactness bound
+
+
+def to_signed(v):
+    """Field element [0, p) -> signed canonical [-(p-1)/2, (p-1)/2]."""
+    v = jnp.asarray(v, jnp.int32)
+    return jnp.where(v > HALF, v - P, v)
+
+
+def from_signed(s):
+    """Signed canonical -> [0, p)."""
+    s = jnp.asarray(s, jnp.int32)
+    return jnp.mod(s, P)
+
+
+def to_limbs(s):
+    """Signed canonical int32 -> three balanced base-256 int8 digits.
+
+    Returns (..., 3) int8. digit_i ∈ [-128, 127].
+    """
+    s = jnp.asarray(s, jnp.int32)
+    l0 = jnp.mod(s + 128, 256) - 128
+    s1 = (s - l0) // 256
+    l1 = jnp.mod(s1 + 128, 256) - 128
+    s2 = (s1 - l1) // 256
+    return jnp.stack([l0, l1, s2], axis=-1).astype(jnp.int8)
+
+
+def from_limbs(l):
+    """(..., 3) int8 -> signed canonical int32 (for testing round-trips)."""
+    l = l.astype(jnp.int32)
+    return l[..., 0] + 256 * l[..., 1] + 65536 * l[..., 2]
+
+
+def mod_mul_pow256(y, k: int):
+    """(y * 256**k) mod p without int32 overflow. y ∈ [0, p) < 2^23."""
+    y = jnp.asarray(y, jnp.int32)
+    for _ in range(k):
+        y = jnp.mod(y * 256, P)      # y*256 < 2^31: no overflow
+    return y
+
+
+def field_matmul_ref(x_field, w_field):
+    """Exact (X @ W) mod p for field-element matrices in [0, p).
+
+    x_field: (M, K) int32; w_field: (K, N) int32. K must be ≤ 2^17.
+    """
+    K = x_field.shape[-1]
+    assert K <= MAX_K, f"K={K} exceeds int32 exactness bound {MAX_K}"
+    xl = to_limbs(to_signed(x_field))            # (M, K, 3)
+    wl = to_limbs(to_signed(w_field))            # (K, N, 3)
+    acc = jnp.zeros(x_field.shape[:-1] + (w_field.shape[-1],), jnp.int32)
+    for i in range(3):
+        for j in range(3):
+            pij = jax.lax.dot_general(
+                xl[..., i], wl[..., j],
+                dimension_numbers=(((xl.ndim - 2,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc = jnp.mod(acc + mod_mul_pow256(jnp.mod(pij, P), i + j), P)
+    return acc
+
+
+def field_add(a, b):
+    return jnp.mod(jnp.asarray(a, jnp.int32) + jnp.asarray(b, jnp.int32), P)
+
+
+def field_sub(a, b):
+    return jnp.mod(jnp.asarray(a, jnp.int32) - jnp.asarray(b, jnp.int32), P)

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_5_14b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Each cell writes a JSON artifact with memory_analysis / cost_analysis /
+loop-aware HLO collective bytes + dot FLOPs (parallel/hlo_analysis.py) —
+the §Roofline inputs. The XLA_FLAGS line above MUST precede any jax import
+(jax locks the device count at first init); smoke tests and benches never
+import this module, so they see 1 device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (ARCHS, SHAPES, SKIPPED_CELLS, applicable_shapes,
+                           get_config)
+from repro.configs.base import MeshConfig, TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import (default_microbatches, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.parallel.hlo_analysis import analyze_hlo
+from repro.parallel.sharding import make_plan, sanitize_shardings
+
+
+def cell_name(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, overrides: dict = None,
+             microbatches: int = 0) -> dict:
+    t_start = time.time()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh_cfg = MeshConfig(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = "train" if shape.kind == "train" else "serve"
+    plan = make_plan(cfg, shape, mesh, mesh_cfg, mode)
+    tcfg = TrainConfig(microbatches=microbatches
+                       or default_microbatches(cfg, shape))
+
+    kind, args = input_specs(cfg, shape, tcfg)
+    if kind == "train":
+        step = make_train_step(cfg, tcfg)
+        in_shardings = (plan.param_shardings(cfg), plan.opt_shardings(cfg),
+                        plan.batch_shardings(cfg, kind))
+        donate = (0, 1)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, shape)
+        in_shardings = (plan.param_shardings(cfg),
+                        plan.batch_shardings(cfg, kind))
+        donate = ()
+    else:
+        step = make_decode_step(cfg, shape)
+        in_shardings = (plan.param_shardings(cfg), plan.token_sharding(),
+                        plan.cache_shardings(cfg), plan.named())
+        donate = (2,)
+    in_shardings = sanitize_shardings(in_shardings, args, plan.axis_sizes)
+
+    record = {
+        "cell": cell_name(arch, shape_name, multi_pod),
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh_cfg.shape), "axes": list(mesh_cfg.axes),
+        "kind": kind, "microbatches": tcfg.microbatches,
+        "status": "running",
+    }
+    from repro.parallel.act_sharding import activation_rules
+    try:
+        with mesh, activation_rules(plan.act_rules, plan.axis_sizes):
+            t0 = time.time()
+            lowered = jax.jit(step, in_shardings=in_shardings,
+                              donate_argnums=donate).lower(*args)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: getattr(ma, k) for k in dir(ma)
+            if k.endswith("bytes") and not k.startswith("_")}
+        ca = compiled.cost_analysis() or {}
+        record["cost_analysis"] = {
+            k: v for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals")}
+        t0 = time.time()
+        hlo = compiled.as_text()
+        st = analyze_hlo(hlo)
+        record["hlo_analysis"] = {
+            "dot_flops_per_device": st.dot_flops,
+            "hbm_bytes_per_device": st.hbm_bytes,
+            "flash_bytes_per_device": st.flash_bytes,
+            "collective_bytes_per_device": st.bytes_by_kind,
+            "collective_counts": st.count_by_kind,
+            "trip_counts": st.trip_counts,
+            "analyze_s": round(time.time() - t0, 2),
+        }
+        record["status"] = "ok"
+        print(f"[dryrun] {record['cell']}: OK "
+              f"(lower {record['lower_s']}s, compile {record['compile_s']}s)")
+        print(f"  memory_analysis: {record['memory_analysis']}")
+        print(f"  cost_analysis: {record['cost_analysis']}")
+    except Exception as e:  # noqa: BLE001 — record failures as artifacts
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {record['cell']}: FAILED {record['error'][:200]}")
+    record["total_s"] = round(time.time() - t_start, 2)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{record['cell']}.json"
+    path.write_text(json.dumps(record, indent=1, default=str))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in applicable_shapes(arch):
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    ok = failed = skipped = 0
+    for arch, shape, mp in cells:
+        path = out / f"{cell_name(arch, shape, mp)}.json"
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") == "ok":
+                skipped += 1
+                continue
+        rec = run_cell(arch, shape, mp, out,
+                       microbatches=args.microbatches)
+        ok += rec["status"] == "ok"
+        failed += rec["status"] != "ok"
+    print(f"[dryrun] done: {ok} ok, {failed} failed, {skipped} skipped; "
+          f"{len(SKIPPED_CELLS)} cells skipped by design (DESIGN.md §5)")
+
+
+if __name__ == "__main__":
+    main()

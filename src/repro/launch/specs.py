@@ -1,0 +1,53 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch × shape) cell.
+
+Nothing here allocates: params/opt/caches come from jax.eval_shape, inputs
+are ShapeDtypeStructs. The dry-run lowers against these; the frontend
+stubs for [audio]/[vlm] archs provide precomputed frame/patch embeddings
+per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig,
+                   seq_len: int = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    B = shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                tcfg: TrainConfig = None) -> Tuple[str, Tuple[Any, ...]]:
+    """Returns (step_kind, abstract argument tuple) for the cell."""
+    params = M.abstract_params(cfg)
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        opt = jax.eval_shape(lambda p: adamw.init(p, tcfg), params)
+        return "train", (params, opt, abstract_batch(cfg, shape))
+    if shape.kind == "prefill":
+        return "prefill", (params, abstract_batch(cfg, shape))
+    # decode: one new token against a seq_len-sized cache
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    caches = abstract_caches(cfg, shape)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return "decode", (params, token, caches, pos)

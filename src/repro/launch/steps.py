@@ -1,0 +1,98 @@
+"""jit-able train / prefill / decode steps (the units the dry-run lowers).
+
+train_step supports microbatched gradient accumulation (scan): cuts stored
+activation boundaries by the microbatch factor and lets each microbatch's
+reduce-scatter overlap the next microbatch's backward — the compute/comm
+overlap lever recorded in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns ``step(params, opt, batch)``; with
+    ``tcfg.grad_compression`` the signature becomes
+    ``step(params, opt, batch, residual) -> (..., residual)`` — int8
+    error-feedback compression of the gradient before the (cross-pod)
+    reduction (parallel/compression.py)."""
+    m = tcfg.microbatches
+
+    def loss(params, batch):
+        total, ce = M.loss_fn(params, batch, cfg)
+        return total, ce
+
+    def _grads_and_ce(params, batch):
+        if m > 1:
+            B = batch["tokens"].shape[0]
+            assert B % m == 0, (B, m)
+            micro = {k: v.reshape((m, B // m) + v.shape[1:])
+                     for k, v in batch.items()}
+
+            def body(acc, mb):
+                (_, ce), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / m, acc, g)
+                return acc, ce
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            grads, ces = jax.lax.scan(body, g0, micro)
+            return grads, jnp.mean(ces)
+        (_, ce), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        return grads, ce
+
+    def train_step(params, opt_state, batch):
+        lr = adamw.lr_schedule(tcfg, opt_state.step)
+        grads, ce = _grads_and_ce(params, batch)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                               tcfg, lr)
+        return new_params, new_opt, {"loss": ce, "lr": lr, **om}
+
+    def train_step_compressed(params, opt_state, batch, residual):
+        from repro.parallel import compression as GC
+        lr = adamw.lr_schedule(tcfg, opt_state.step)
+        grads, ce = _grads_and_ce(params, batch)
+        grads, residual = GC.apply_error_feedback(grads, residual)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                               tcfg, lr)
+        return new_params, new_opt, {"loss": ce, "lr": lr, **om}, residual
+
+    return train_step_compressed if tcfg.grad_compression else train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig):
+    def prefill_step(params, batch):
+        if cfg.family == "vlm":
+            return M.prefill_vlm(params, batch, cfg)
+        if cfg.family in ("hybrid", "ssm"):
+            # recurrent families: prefill == full forward (state capture is
+            # the decode path's job; compute profile identical)
+            return M.forward(params, batch, cfg).logits
+        return M.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig):
+    def decode_step(params, token, caches, pos):
+        return M.decode_step(params, token, caches, pos, cfg)
+
+    return decode_step
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    big = M.count_params_analytic(cfg) > 1e9
+    return 8 if big else 2

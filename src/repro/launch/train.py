@@ -1,0 +1,120 @@
+"""End-to-end training driver: data pipeline -> pjit train loop with
+checkpoint/resume, async saves, straggler watchdog, and optional gradient
+compression. CPU-runnable on smoke configs (examples/train_smollm.py);
+the same code path lowers on the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm_135m --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import MeshConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.act_sharding import activation_rules
+from repro.parallel.sharding import make_plan
+from repro.runtime.checkpoint import AsyncCheckpointer, latest_step, load
+from repro.runtime.straggler import StepWatchdog
+
+
+def train(cfg, tcfg: TrainConfig, *, batch: int, seq: int, steps: int,
+          ckpt_dir: str = None, ckpt_every: int = 50, mesh=None,
+          log_every: int = 10, resume: bool = True):
+    mesh = mesh or make_host_mesh(data=1, model=1)
+    mesh_cfg = MeshConfig()
+    shape = ShapeConfig("custom", "train", seq, batch)
+    plan = make_plan(cfg, shape, mesh, mesh_cfg, "train")
+
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = M.init_params(cfg, key)
+    opt_state = adamw.init(params, tcfg)
+    start_step = 0
+
+    ckpt = None
+    if ckpt_dir:
+        ckpt = AsyncCheckpointer(ckpt_dir)
+        last = latest_step(ckpt_dir)
+        if resume and last is not None:
+            (params, opt_state), manifest = load(
+                ckpt_dir, (params, opt_state))
+            start_step = manifest["step"]
+            print(f"[train] resumed from step {start_step}")
+
+    n_data = mesh.shape.get("data", 1)
+    pipe = TokenPipeline(DataConfig(cfg.vocab_size, seq, batch,
+                                    seed=tcfg.seed),
+                         shard=0, num_shards=1)
+    step_fn = make_train_step(cfg, tcfg)
+    with mesh, activation_rules(plan.act_rules):
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        watchdog = StepWatchdog()
+        losses = []
+        for step in range(start_step, steps):
+            batch_np = pipe.batch(step)
+            watchdog.start_step()
+            params, opt_state, metrics = jitted(
+                params, opt_state, {k: jnp.asarray(v)
+                                    for k, v in batch_np.items()})
+            slow = watchdog.end_step()
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if log_every and (step + 1) % log_every == 0:
+                print(f"[train] step {step+1}: loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"p50={watchdog.p50 and round(watchdog.p50, 3)}s"
+                      + (" SLOW" if slow else ""))
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          meta={"loss": loss})
+            if watchdog.should_escalate:
+                print("[train] straggler escalation -> checkpoint + exit "
+                      "for re-mesh (runtime/elastic.py)")
+                break
+        if ckpt:
+            ckpt.save(steps, (params, opt_state),
+                      meta={"loss": losses[-1] if losses else None})
+            ckpt.wait()
+    return params, opt_state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       total_steps=args.steps,
+                       microbatches=args.microbatches)
+    t0 = time.time()
+    _, _, losses = train(cfg, tcfg, batch=args.batch, seq=args.seq,
+                         steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+    if losses:
+        print(f"[train] done in {time.time()-t0:.1f}s  "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,499 @@
+"""Attention: GQA (+RoPE), MLA (latent KV), cross-attention, decode paths.
+
+Projections operate on a flat ``(…, n_heads*head_dim)`` layout so the model
+axis shards them evenly even when ``n_heads`` is not divisible by the TP
+degree (DESIGN.md §5). The quadratic core runs as chunked online-softmax
+("flash" in pure jnp) so 32k prefill fits per-device HBM; a ``cost_mode``
+switch swaps in the naive full-score path (identical FLOPs, loop-free) for
+roofline cost probes (EXPERIMENTS.md §Roofline methodology).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel import act_sharding as ash
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, max_seq, KH, D)  [MLA: (B, max_seq, latent+rope)]
+    v: Optional[jax.Array]
+
+
+# ----------------------------------------------------------------------------
+# Parameter definitions
+# ----------------------------------------------------------------------------
+
+def gqa_defs(cfg: ModelConfig) -> Dict[str, object]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": L.dense_def(d, cfg.num_heads * hd, ("embed", "heads_flat"),
+                          bias=cfg.qkv_bias),
+        "wk": L.dense_def(d, cfg.num_kv_heads * hd, ("embed", "kv_flat"),
+                          bias=cfg.qkv_bias),
+        "wv": L.dense_def(d, cfg.num_kv_heads * hd, ("embed", "kv_flat"),
+                          bias=cfg.qkv_bias),
+        "wo": L.dense_def(cfg.num_heads * hd, d, ("heads_flat", "embed")),
+    }
+
+
+def mla_defs(cfg: ModelConfig) -> Dict[str, object]:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": L.dense_def(d, m.q_lora_rank, ("embed", "lora")),
+        "q_norm": L.norm_def(m.q_lora_rank, "rmsnorm"),
+        "wq_b": L.dense_def(m.q_lora_rank, h * qk, ("lora", "heads_flat")),
+        "wkv_a": L.dense_def(d, m.kv_lora_rank + m.qk_rope_head_dim,
+                             ("embed", "lora")),
+        "kv_norm": L.norm_def(m.kv_lora_rank, "rmsnorm"),
+        "wkv_b": L.dense_def(m.kv_lora_rank,
+                             h * (m.qk_nope_head_dim + m.v_head_dim),
+                             ("lora", "heads_flat")),
+        "wo": L.dense_def(h * m.v_head_dim, d, ("heads_flat", "embed")),
+    }
+
+
+def cross_attn_defs(cfg: ModelConfig) -> Dict[str, object]:
+    return gqa_defs(cfg)
+
+
+# ----------------------------------------------------------------------------
+# Flash (chunked online-softmax) attention core — pure jnp, custom VJP
+# ----------------------------------------------------------------------------
+#
+# The VJP recomputes attention probabilities per (q-chunk × kv-chunk) block
+# (FlashAttention-2 backward) instead of letting scan save every block's
+# probabilities as residuals — without this, ONE smollm layer's backward
+# residuals were 4.8 GB/device (EXPERIMENTS.md §Perf iteration 0).
+
+def _flash_fwd_core(q, k, v, *, causal: bool, scale: float,
+                    kv_chunk: int, q_chunk: int, window: int = 0,
+                    kv_len: int = 0):
+    """q: (B,Sq,KH,G,D); k,v: (B,Skv,KH,D).
+
+    Returns (out (B,Sq,KH,G,Dv), lse (B,Sq,KH,G))."""
+    B, Sq, KH, G, D = q.shape
+    Skv, Dv = k.shape[1], v.shape[-1]
+    kv_chunk = min(kv_chunk, Skv)
+    q_chunk = min(q_chunk, Sq)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+
+    qc = q.reshape(B, nq, q_chunk, KH, G, D)
+    kc = k.reshape(B, nk, kv_chunk, KH, D)
+    vc = v.reshape(B, nk, kv_chunk, KH, Dv)
+    kpos = jnp.arange(Skv).reshape(nk, kv_chunk)
+
+    def q_block(carry, qi):
+        qb, qpos = qi                              # (B,qc,KH,G,D), (qc,)
+        m0 = jnp.full((B, q_chunk, KH, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KH, G), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KH, G, Dv), jnp.float32)
+
+        def kv_block(st, ki):
+            m, l, acc = st
+            kb, vb, kp = ki
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            if causal or kv_len:
+                mask = qpos[:, None] >= kp[None, :] if causal else \
+                    jnp.ones((qpos.shape[0], kp.shape[0]), bool)
+                if window > 0 and causal:
+                    mask &= (qpos[:, None] - kp[None, :]) < window
+                if kv_len:
+                    mask &= (kp < kv_len)[None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kpos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return carry, (out, lse)
+
+    qpos = jnp.arange(Sq).reshape(nq, q_chunk)
+    _, (out, lse) = jax.lax.scan(q_block, None, (qc.swapaxes(0, 1), qpos))
+    out = out.swapaxes(0, 1).reshape(B, Sq, KH, G, Dv)
+    lse = lse.swapaxes(0, 1).reshape(B, Sq, KH, G)
+    return out, lse
+
+
+def _make_flash(causal: bool, scale: float, kv_chunk: int, q_chunk: int,
+                window: int, kv_len: int = 0):
+    """Builds a custom-VJP flash attention for fixed static settings."""
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = _flash_fwd_core(q, k, v, causal=causal, scale=scale,
+                                 kv_chunk=kv_chunk, q_chunk=q_chunk,
+                                 window=window, kv_len=kv_len)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_core(q, k, v, causal=causal, scale=scale,
+                                   kv_chunk=kv_chunk, q_chunk=q_chunk,
+                                   window=window, kv_len=kv_len)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Sq, KH, G, D = q.shape
+        Skv, Dv = k.shape[1], v.shape[-1]
+        kvc = min(kv_chunk, Skv)
+        qc_ = min(q_chunk, Sq)
+        nq, nk = Sq // qc_, Skv // kvc
+
+        f32 = jnp.float32
+        qq = q.astype(f32).reshape(B, nq, qc_, KH, G, D)
+        oo = out.astype(f32).reshape(B, nq, qc_, KH, G, Dv)
+        do = dout.astype(f32).reshape(B, nq, qc_, KH, G, Dv)
+        ll = lse.reshape(B, nq, qc_, KH, G)
+        kk = k.astype(f32).reshape(B, nk, kvc, KH, D)
+        vv = v.astype(f32).reshape(B, nk, kvc, KH, Dv)
+        qpos = jnp.arange(Sq).reshape(nq, qc_)
+        kpos = jnp.arange(Skv).reshape(nk, kvc)
+        # D_i = rowsum(dO * O)
+        Drow = jnp.sum(do * oo, axis=-1)              # (B,nq,qc,KH,G)
+
+        def kv_block(dq_acc, ki):
+            kb, vb, kp = ki                           # (B,kvc,KH,*)
+
+            def q_block(dkv, qi):
+                dk_c, dv_c = dkv
+                qb, dob, lb, Db, qp = qi
+                s = jnp.einsum("bqhgd,bkhd->bqhgk", qb, kb) * scale
+                if causal or kv_len:
+                    mask = qp[:, None] >= kp[None, :] if causal else \
+                        jnp.ones((qp.shape[0], kp.shape[0]), bool)
+                    if window > 0 and causal:
+                        mask &= (qp[:, None] - kp[None, :]) < window
+                    if kv_len:
+                        mask &= (kp < kv_len)[None, :]
+                    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+                p = jnp.exp(s - lb[..., None])        # (B,qc,KH,G,kvc)
+                dv_c = dv_c + jnp.einsum("bqhgk,bqhgd->bkhd", p, dob)
+                dp = jnp.einsum("bqhgd,bkhd->bqhgk", dob, vb)
+                ds = p * (dp - Db[..., None]) * scale
+                dq_b = jnp.einsum("bqhgk,bkhd->bqhgd", ds, kb)
+                dk_c = dk_c + jnp.einsum("bqhgk,bqhgd->bkhd", ds, qb)
+                return (dk_c, dv_c), dq_b
+
+            (dk_c, dv_c), dq_blocks = jax.lax.scan(
+                q_block,
+                (jnp.zeros((B, kvc, KH, D), f32),
+                 jnp.zeros((B, kvc, KH, Dv), f32)),
+                (qq.swapaxes(0, 1), do.swapaxes(0, 1), ll.swapaxes(0, 1),
+                 Drow.swapaxes(0, 1), qpos))
+            dq_acc = dq_acc + dq_blocks.swapaxes(0, 1)
+            return dq_acc, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, nq, qc_, KH, G, D), f32)
+        dq, (dk, dv) = jax.lax.scan(
+            kv_block, dq0, (kk.swapaxes(0, 1), vv.swapaxes(0, 1), kpos))
+        dq = dq.reshape(B, Sq, KH, G, D).astype(q.dtype)
+        dk = dk.swapaxes(0, 1).reshape(B, Skv, KH, D).astype(k.dtype)
+        dv = dv.swapaxes(0, 1).reshape(B, Skv, KH, Dv).astype(v.dtype)
+        return dq, dk, dv
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def _flash_core(q, k, v, *, causal: bool, q_offset, scale: float,
+                kv_chunk: int, q_chunk: int, window: int = 0,
+                kv_len: int = 0):
+    """q: (B,Sq,KH,G,D); k,v: (B,Skv,KH,D). q_offset must be 0 (decode uses
+    decode_sdpa)."""
+    return _make_flash(causal, scale, kv_chunk, q_chunk, window,
+                       kv_len)(q, k, v)
+
+
+def _naive_core(q, k, v, *, causal: bool, q_offset, scale: float,
+                window: int = 0, kv_len: int = 0):
+    """Full materialized scores — identical math, loop-free (cost probes)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or kv_len:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Skv)
+        mask = qpos[:, None] >= kpos[None, :] if causal else \
+            jnp.ones((Sq, Skv), bool)
+        if window > 0 and causal:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        if kv_len:
+            mask &= (kpos < kv_len)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+
+
+def _best_chunk(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (flash tiles must divide)."""
+    c = min(want, n)
+    while n % c != 0:
+        c -= 1
+    return c
+
+
+def sdpa(q, k, v, *, causal=True, q_offset=0, window=0,
+         kv_chunk=1024, q_chunk=512, cost_mode=False):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KH,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, Sq, KH, G, D)
+    scale = 1.0 / math.sqrt(D)
+    # context-parallel flash: queries shard over the model axis (seq dim),
+    # K/V replicate (one small all-gather per layer). Without this, GSPMD
+    # pads 40/8 heads onto the 16-way axis and all-reduces every f32 score
+    # tile — +1.03 TB/device collective traffic on qwen2.5 train_4k
+    # (EXPERIMENTS.md §Perf iteration 1).
+    qr = ash.constrain(qr, "batch", "flash_seq", None, None, None)
+    k = ash.constrain(k, "batch", None, None, None)
+    v = ash.constrain(v, "batch", None, None, None)
+    qc = _best_chunk(Sq, q_chunk)
+    kc = _best_chunk(Skv, kv_chunk)
+    kv_len = 0
+    if kc < 64 and Skv > 256:
+        # irregular KV lengths (vision's 1601 patches): pad to a tile
+        # multiple and mask the padded keys inside the flash core
+        pad = (-Skv) % 128
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = Skv
+        Skv += pad
+        kc = _best_chunk(Skv, kv_chunk)
+    flashable = qc >= 64 and kc >= 64
+    if cost_mode or not flashable or (Sq <= qc and Skv <= kc):
+        out = _naive_core(qr, k, v, causal=causal, q_offset=q_offset,
+                          scale=scale, window=window, kv_len=kv_len)
+    else:
+        out = _flash_core(qr, k, v, causal=causal, q_offset=q_offset,
+                          scale=scale, kv_chunk=kc, q_chunk=qc,
+                          window=window, kv_len=kv_len)
+    return out.reshape(B, Sq, H, out.shape[-1]).astype(q.dtype)
+
+
+def decode_sdpa(q, cache_k, cache_v, pos, *, window=0):
+    """One-step decode. q: (B,1,H,D); cache: (B,S,KH,D); pos: scalar."""
+    B, _, H, D = q.shape
+    S, KH = cache_k.shape[1], cache_k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) / math.sqrt(D)
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= (pos - kpos) < window
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, cache_v.astype(jnp.float32))
+    return out.reshape(B, 1, H, out.shape[-1]).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA block-level ops
+# ----------------------------------------------------------------------------
+
+def gqa_project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = L.dense(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = L.dense(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ModelConfig, *, positions=None, causal=True,
+                cost_mode=False):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    window = cfg.window_size if cfg.attention == "windowed" else 0
+    out = sdpa(q, k, v, causal=causal, window=window, cost_mode=cost_mode)
+    return L.dense(p["wo"], out.reshape(B, S, -1))
+
+
+def gqa_prefill(p, x, cfg: ModelConfig, *, cost_mode=False):
+    """Forward + return the KV cache content for this segment."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    window = cfg.window_size if cfg.attention == "windowed" else 0
+    out = sdpa(q, k, v, causal=True, window=window, cost_mode=cost_mode)
+    return L.dense(p["wo"], out.reshape(B, S, -1)), KVCache(k, v)
+
+
+def gqa_decode(p, x, cache: KVCache, pos, cfg: ModelConfig):
+    """x: (B,1,d). Updates cache in place (functionally) at ``pos``."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((B, 1), pos)
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                             pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                             pos, axis=1)
+    window = cfg.window_size if cfg.attention == "windowed" else 0
+    out = decode_sdpa(q, ck, cv, pos, window=window)
+    return L.dense(p["wo"], out.reshape(B, 1, -1)), KVCache(ck, cv)
+
+
+# ----------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-style latent attention)
+# ----------------------------------------------------------------------------
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = L.dense(p["wq_b"], L.apply_norm(p["q_norm"], L.dense(p["wq_a"], x),
+                                        "rmsnorm"))
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.dense(p["wkv_a"], x)
+    latent, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    latent = L.apply_norm(p["kv_norm"], latent, "rmsnorm")
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)                     # shared head
+    return q_nope, q_rope, latent, k_rope[:, :, 0, :]
+
+
+def _mla_expand_kv(p, latent, k_rope, cfg: ModelConfig):
+    m = cfg.mla
+    B, S = latent.shape[:2]
+    H = cfg.num_heads
+    kv = L.dense(p["wkv_b"], latent).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_forward(p, x, cfg: ModelConfig, *, positions=None, cost_mode=False):
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, x, cfg, positions)
+    k, v = _mla_expand_kv(p, latent, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = sdpa(q, k, v, causal=True, cost_mode=cost_mode)
+    return L.dense(p["wo"], out.reshape(B, S, -1))
+
+
+def mla_prefill(p, x, cfg: ModelConfig, *, cost_mode=False):
+    """Cache stores the *latent* (kv_lora_rank + rope) — the MLA win."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, x, cfg, positions)
+    k, v = _mla_expand_kv(p, latent, k_rope, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = sdpa(q, k, v, causal=True, cost_mode=cost_mode)
+    y = L.dense(p["wo"], out.reshape(B, S, -1))
+    cache = jnp.concatenate([latent, k_rope], axis=-1)   # (B,S,rank+rope)
+    return y, KVCache(cache, None)
+
+
+def mla_decode(p, x, cache: KVCache, pos, cfg: ModelConfig,
+               absorbed: bool = True):
+    """Decode against the latent cache.
+
+    ``absorbed=True`` uses the weight-absorption identity (scores computed in
+    latent space; ``wkv_b`` folded into q and the output projection) so the
+    per-step cost is O(S·rank) instead of O(S·H·head_dim) — this is the
+    beyond-paper optimized path recorded in EXPERIMENTS §Perf.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope, latent_new, k_rope_new = _mla_qkv(p, x, cfg, positions)
+    new_entry = jnp.concatenate([latent_new, k_rope_new], axis=-1)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, new_entry.astype(cache.k.dtype), pos, axis=1)
+    latents, k_ropes = ck[..., :m.kv_lora_rank], ck[..., m.kv_lora_rank:]
+    S = ck.shape[1]
+    kpos = jnp.arange(S)
+    mask = (kpos <= pos)[None, None, :]
+
+    if absorbed:
+        wkv_b = p["wkv_b"]["w"].reshape(
+            m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+        w_uk = wkv_b[..., :m.qk_nope_head_dim]       # (rank, H, nope)
+        w_uv = wkv_b[..., m.qk_nope_head_dim:]       # (rank, H, v)
+        # fold q_nope through w_uk -> latent-space queries
+        q_lat = jnp.einsum("bqhn,rhn->bhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))          # (B,H,rank)
+        s = jnp.einsum("bhr,bsr->bhs", q_lat,
+                       latents.astype(jnp.float32))
+        s = s + jnp.einsum("bqhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           k_ropes.astype(jnp.float32))
+        s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        s = jnp.where(mask, s, -jnp.inf)
+        pattn = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", pattn,
+                         latents.astype(jnp.float32))         # (B,H,rank)
+        out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+        y = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    else:
+        k, v = _mla_expand_kv(p, latents, k_ropes, cfg)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = decode_sdpa(q, k, v, pos)
+        y = out.reshape(B, 1, -1)
+    return L.dense(p["wo"], y), KVCache(ck, None)
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (whisper decoder / llama-vision image layers)
+# ----------------------------------------------------------------------------
+
+def cross_kv(p, memory, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder/vision memory."""
+    B = memory.shape[0]
+    hd = cfg.resolved_head_dim
+    k = L.dense(p["wk"], memory).reshape(B, -1, cfg.num_kv_heads, hd)
+    v = L.dense(p["wv"], memory).reshape(B, -1, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def cross_attn_forward(p, x, memory, cfg: ModelConfig, *, cost_mode=False):
+    """x: (B,S,d) queries; memory: (B,M,d) encoder/vision states."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k, v = cross_kv(p, memory, cfg)
+    out = sdpa(q, k, v, causal=False, cost_mode=cost_mode)
+    return L.dense(p["wo"], out.reshape(B, S, -1))
+
+
+def cross_attn_cached(p, x, ck, cv, cfg: ModelConfig):
+    """Cross-attention against precomputed K/V (decode fast path)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    out = sdpa(q, ck, cv, causal=False)
+    return L.dense(p["wo"], out.reshape(B, S, -1))

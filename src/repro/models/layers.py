@@ -1,0 +1,276 @@
+"""Base layers: pure-functional modules over param pytrees.
+
+Every parameter is declared as a ``ParamDef`` carrying its shape, initializer
+and *logical axis names*. ``init_params`` materializes arrays (or abstract
+ShapeDtypeStructs under ``jax.eval_shape``) and ``param_specs`` turns the same
+declaration tree into a ``PartitionSpec`` tree via logical-to-mesh rules —
+this keeps init and sharding permanently in sync.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    init: str                      # normal | zeros | ones | embed | scaled
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim
+    dtype: Any = None              # overrides model dtype (e.g. fp32 norms)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(key: jax.Array, defs, dtype) -> Any:
+    """Materialize a ParamDef tree into arrays. eval_shape-safe."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            # fan-in = product of all non-output dims, excluding stacking
+            # axes ("layers" from stacked_defs, "experts" from MoE banks).
+            fan_in = 1
+            for dim, ax in zip(d.shape[:-1], d.axes[:-1]):
+                if ax not in ("layers", "experts"):
+                    fan_in *= dim
+            fan_in = max(fan_in, 1) if len(d.shape) > 1 else max(
+                d.shape[-1], 1)
+            scale = {"normal": 0.02,
+                     "embed": 0.02,
+                     "scaled": 1.0 / math.sqrt(max(fan_in, 1))}[d.init]
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_specs(defs, rules: Dict[str, Optional[str]],
+                axis_sizes: Optional[Dict[str, int]] = None) -> Any:
+    """ParamDef tree -> PartitionSpec tree under logical->mesh ``rules``.
+
+    Conflict resolution:
+    - a mesh axis may appear at most once per spec: when two logical axes of
+      one tensor map to the same mesh axis (e.g. MoE ("experts","embed",
+      "ffn") with experts->model and ffn->model), the FIRST keeps it;
+    - with ``axis_sizes`` given, a dim whose size is not divisible by its
+      mapped axes falls back to replicated (jit in_shardings require even
+      division — e.g. xlstm's 4/3-projection dims).
+    """
+    def spec(d: ParamDef) -> P:
+        used = set()
+        out = []
+        for dim, a in zip(d.shape, d.axes):
+            m = rules.get(a) if a else None
+            ms = tuple(m) if isinstance(m, (tuple, list)) \
+                else (m,) if m else ()
+            if any(x in used for x in ms):
+                out.append(None)
+                continue
+            if axis_sizes is not None and ms:
+                total = 1
+                for x in ms:
+                    total *= axis_sizes.get(x, 1)
+                if total == 0 or dim % total != 0:
+                    out.append(None)
+                    continue
+            used.update(ms)
+            out.append(m)
+        return P(*out)
+    return jax.tree.map(spec, defs, is_leaf=is_def)
+
+
+def param_bytes(defs, dtype_bytes: int = 2) -> int:
+    tot = 0
+    for d in jax.tree.leaves(defs, is_leaf=is_def):
+        n = math.prod(d.shape)
+        b = dtype_bytes
+        if d.dtype is not None:
+            b = jnp.dtype(d.dtype).itemsize
+        tot += n * b
+    return tot
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape)
+               for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# ----------------------------------------------------------------------------
+# Dense / norm / embedding
+# ----------------------------------------------------------------------------
+
+def dense_def(d_in: int, d_out: int, axes=("embed", "ffn"),
+              bias: bool = False) -> Dict[str, ParamDef]:
+    d = {"w": ParamDef((d_in, d_out), "scaled", axes)}
+    if bias:
+        d["b"] = ParamDef((d_out,), "zeros", (axes[1],))
+    return d
+
+
+# Trace-time override point: the Origami executor installs the Slalom
+# blinded-offload protocol here while tracing tier-1 (core/origami.py).
+_DENSE_IMPL = None
+
+
+@contextlib.contextmanager
+def dense_impl(fn):
+    global _DENSE_IMPL
+    prev = _DENSE_IMPL
+    _DENSE_IMPL = fn
+    try:
+        yield
+    finally:
+        _DENSE_IMPL = prev
+
+
+def dense(p, x):
+    if _DENSE_IMPL is not None:
+        return _DENSE_IMPL(p, x)
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_def(dim: int, kind: str) -> Dict[str, ParamDef]:
+    d = {"scale": ParamDef((dim,), "ones", ("embed",), jnp.float32)}
+    if kind == "layernorm":
+        d["bias"] = ParamDef((dim,), "zeros", ("embed",), jnp.float32)
+    return d
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(x.dtype)
+
+
+def embed_def(vocab: int, dim: int) -> Dict[str, ParamDef]:
+    return {"table": ParamDef((vocab, dim), "embed", ("vocab", "embed"))}
+
+
+def embed_lookup(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]        # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------------------
+# Conv / pooling (VGG family, NHWC)
+# ----------------------------------------------------------------------------
+
+def conv_def(c_in: int, c_out: int, k: int = 3) -> Dict[str, ParamDef]:
+    return {"w": ParamDef((k, k, c_in, c_out), "scaled",
+                          (None, None, None, "ffn")),
+            "b": ParamDef((c_out,), "zeros", ("ffn",))}
+
+
+# Same trace-time override mechanism as _DENSE_IMPL, for VGG tier-1 convs.
+_CONV_IMPL = None
+
+
+@contextlib.contextmanager
+def conv_impl(fn):
+    global _CONV_IMPL
+    prev = _CONV_IMPL
+    _CONV_IMPL = fn
+    try:
+        yield
+    finally:
+        _CONV_IMPL = prev
+
+
+def conv2d(p, x, stride: int = 1, padding: str = "SAME"):
+    if _CONV_IMPL is not None:
+        return _CONV_IMPL(p, x, stride)
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def maxpool2d(x, k: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ----------------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean CE; logits may be over a padded vocab (pad columns masked).
+
+    The label pick uses a fused iota==label masked-reduce instead of
+    take_along_axis: gathers along a vocab-sharded axis force GSPMD to
+    replicate the logits (observed +13 GB/device); the masked reduce stays
+    local + one psum.
+    """
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab_size:
+        pad = logits.shape[-1] - vocab_size
+        mask = jnp.concatenate(
+            [jnp.zeros((vocab_size,), jnp.float32),
+             jnp.full((pad,), -1e9, jnp.float32)])
+        logits = logits + mask
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(lse - ll)

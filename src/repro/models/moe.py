@@ -1,0 +1,165 @@
+"""Mixture-of-Experts: top-k router + two dispatch implementations.
+
+- ``gshard``: dense one-hot dispatch/combine einsums (GShard/Mesh-TF style).
+  Simple and exactly differentiable; memory scales with S·E·C so it is the
+  *baseline* path (used in smoke tests and as the §Perf baseline).
+- ``sorted``: argsort-by-expert with static expert-capacity buffers.
+  Memory scales with S·k·d; under EP the (E, C, d) buffer is sharded over
+  the "model" axis and GSPMD materializes the token exchange as all-to-all.
+  This is the at-scale path (beyond-paper §Perf iteration for qwen3-moe).
+
+Both drop overflow tokens (capacity factor) identically to the GShard
+formulation; the router uses softmax-then-top-k with normalized weights.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, object]:
+    m = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": {"w": L.ParamDef((d, m.num_experts), "scaled",
+                                   ("embed", None), jnp.float32)},
+        "w_gate": L.ParamDef((m.num_experts, d, m.d_ff_expert), "scaled",
+                             ("experts", "embed", "ffn")),
+        "w_up": L.ParamDef((m.num_experts, d, m.d_ff_expert), "scaled",
+                           ("experts", "embed", "ffn")),
+        "w_down": L.ParamDef((m.num_experts, m.d_ff_expert, d), "scaled",
+                             ("experts", "ffn", "embed")),
+    }
+    if m.dense_residual_d_ff:
+        defs["dense_residual"] = {
+            "w_gate": L.dense_def(d, m.dense_residual_d_ff, ("embed", "ffn")),
+            "w_up": L.dense_def(d, m.dense_residual_d_ff, ("embed", "ffn")),
+            "w_down": L.dense_def(m.dense_residual_d_ff, d, ("ffn", "embed")),
+        }
+    return defs
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k * m.capacity_factor / m.num_experts)
+    return max(c, m.top_k)
+
+
+def _route(p, x, cfg: ModelConfig):
+    """x: (T, d) -> (weights (T,k), experts (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, m.top_k)            # (T, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(experts, m.num_experts), axis=1), axis=0)
+    aux = m.num_experts * jnp.sum(me * ce)
+    return weights, experts, aux
+
+
+def _expert_ffn(p, xe, cfg: ModelConfig):
+    """xe: (E, C, d) -> (E, C, d), per-expert gated MLP."""
+    act = L.activation(cfg.activation)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(xe.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(xe.dtype))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(xe.dtype))
+
+
+def _dispatch_gshard(p, x, cfg: ModelConfig):
+    """Dense one-hot dispatch. x: (T, d)."""
+    m = cfg.moe
+    T, d = x.shape
+    C = _capacity(T, cfg)
+    weights, experts, aux = _route(p, x, cfg)
+    onehot = jax.nn.one_hot(experts, m.num_experts, dtype=jnp.float32)  # (T,k,E)
+    # position of each (token, slot) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(T * m.top_k, m.num_experts), axis=0) - 1.0
+    pos = pos.reshape(T, m.top_k, m.num_experts)
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (T, k)
+    keep = pos < C
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos, C).astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot,
+                          pos_oh * keep[..., None])             # (T,E,C)
+    combine = jnp.einsum("tk,tke,tkc->tec", weights, onehot,
+                         pos_oh * keep[..., None])
+    xe = jnp.einsum("tec,td->ecd", dispatch, x.astype(jnp.float32))
+    ye = _expert_ffn(p, xe.astype(x.dtype), cfg)
+    y = jnp.einsum("tec,ecd->td", combine, ye.astype(jnp.float32))
+    return y.astype(x.dtype), aux
+
+
+def _dispatch_sorted(p, x, cfg: ModelConfig):
+    """Argsort dispatch with static (E, C) capacity buffers. x: (T, d)."""
+    m = cfg.moe
+    T, d = x.shape
+    C = _capacity(T, cfg)
+    E = m.num_experts
+    weights, experts, aux = _route(p, x, cfg)
+
+    flat_e = experts.reshape(-1)                                # (T*k,)
+    flat_w = weights.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), m.top_k)
+    order = jnp.argsort(flat_e)                                 # stable
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    # rank within expert: index minus the expert's first index
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    rank = jnp.arange(T * m.top_k) - starts[se]
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                # drop -> OOB
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(x[stok])
+    ye = _expert_ffn(p, buf[:-1].reshape(E, C, d), cfg)
+    back = ye.reshape(E * C, d)
+    rows = jnp.where(keep[:, None], back[jnp.minimum(dest, E * C - 1)], 0.0)
+    y = jnp.zeros((T, d), x.dtype).at[stok].add(
+        rows * sw[:, None].astype(x.dtype))
+    return y, aux
+
+
+def _dispatch_sorted_grouped(p, x, cfg: ModelConfig, groups: int = 32):
+    """Sorted dispatch within token groups (one per data shard): the
+    argsort/scatter stay group-local under GSPMD instead of sorting the
+    global token stream (which forced all-gathers of every activation —
+    EXPERIMENTS.md §Perf qwen3-moe iteration 3). The inter-group traffic
+    that remains is the unavoidable token->expert all-to-all."""
+    from repro.parallel import act_sharding as ash
+    T, d = x.shape
+    while T % groups != 0 and groups > 1:
+        groups //= 2
+    xg = ash.constrain(x.reshape(groups, T // groups, d),
+                       "batch", None, None)
+
+    def one(xi):
+        y, aux = _dispatch_sorted(p, xi, cfg)
+        return y, aux
+
+    y, aux = jax.vmap(one)(xg)
+    return (ash.constrain(y, "batch", None, None).reshape(T, d),
+            jnp.mean(aux))
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d); returns (y, aux_loss)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    if cfg.moe.dispatch == "sorted_grouped":
+        y, aux = _dispatch_sorted_grouped(p, xt, cfg)
+    elif cfg.moe.dispatch == "sorted":
+        y, aux = _dispatch_sorted(p, xt, cfg)
+    else:
+        y, aux = _dispatch_gshard(p, xt, cfg)
+    if cfg.moe.dense_residual_d_ff:
+        act = L.activation(cfg.activation)
+        pr = p["dense_residual"]
+        h = act(L.dense(pr["w_gate"], xt)) * L.dense(pr["w_up"], xt)
+        y = y + L.dense(pr["w_down"], h)
+    return y.reshape(B, S, d), aux

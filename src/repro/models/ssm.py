@@ -1,0 +1,408 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Both Mamba2's SSD and the mLSTM matrix memory are instances of the same
+*gated linear recurrence*::
+
+    C_t = a_t · C_{t-1} + b_t · k_t v_tᵀ          (state  (dk, dv))
+    y_t = q_t · C_t      [ / max(|q_t · n_t|, floor) for mLSTM ]
+
+so we implement one chunked (intra-chunk parallel, inter-chunk scanned)
+routine ``chunked_linear_recurrence`` in log-decay space and instantiate it
+for both. Decode is the O(1)-state single-step update — this is what makes
+the ``long_500k`` cell tractable for these families (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ----------------------------------------------------------------------------
+# Generic chunked gated linear recurrence
+# ----------------------------------------------------------------------------
+
+def chunked_linear_recurrence(q, k, v, log_a, b, *, chunk: int,
+                              init_state=None, normalize=False,
+                              den_floor=None):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_a,b: (B,S,H).
+
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv), final_norm (B,H,dk)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(B, nc, Lc, H, dk)
+    kc = k.astype(f32).reshape(B, nc, Lc, H, dk)
+    vc = v.astype(f32).reshape(B, nc, Lc, H, dv)
+    lac = log_a.astype(f32).reshape(B, nc, Lc, H)
+    bc = b.astype(f32).reshape(B, nc, Lc, H)
+    La = jnp.cumsum(lac, axis=2)                       # inclusive cumsum
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, dk, dv), f32)
+        n0 = jnp.zeros((B, H, dk), f32)
+    else:
+        C0, n0 = init_state
+
+    tri = jnp.tril(jnp.ones((Lc, Lc), f32))            # s <= t
+
+    def chunk_step(carry, inp):
+        C, n = carry
+        qb, kb, vb, Lab, bb = inp                      # (B,Lc,H,*)
+        # intra-chunk: S[t,s] = exp(La_t - La_s) * b_s * (q_t . k_s)
+        qk = jnp.einsum("bthd,bshd->bhts", qb, kb)
+        # mask BEFORE exp: for t < s the exponent is positive and overflows
+        ldiff = Lab[:, :, None, :] - Lab[:, None, :, :]           # (B,t,s,H)
+        ldiff = jnp.where(tri[None, :, :, None] > 0, ldiff, -jnp.inf)
+        decay = jnp.exp(ldiff).transpose(0, 3, 1, 2)
+        scores = qk * decay * bb.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhts,bshd->bthd", scores, vb)
+        den_intra = jnp.sum(scores, axis=-1)           # (B,H,t)
+        # inter-chunk: state contribution
+        Aq = jnp.exp(Lab)                              # (B,Lc,H)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * Aq[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qb, n) * Aq    # (B,Lc,H)
+        # carry update
+        tail = jnp.exp(Lab[:, -1:, :] - Lab) * bb      # (B,Lc,H)
+        kw = kb * tail[..., None]
+        chunk_decay = jnp.exp(Lab[:, -1])              # (B,H)
+        C_new = C * chunk_decay[..., None, None] \
+            + jnp.einsum("bshd,bshe->bhde", kw, vb)
+        n_new = n * jnp.exp(Lab[:, -1]).reshape(B, H, 1) + jnp.sum(kw, axis=1)
+        y = y_intra + y_inter
+        den = den_intra.transpose(0, 2, 1) + den_inter  # (B,Lc,H)
+        return (C_new, n_new), (y, den)
+
+    (Cf, nf), (ys, dens) = jax.lax.scan(
+        chunk_step, (C0, n0),
+        (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+         La.swapaxes(0, 1), bc.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, dv)
+    den = dens.swapaxes(0, 1).reshape(B, S, H)
+    if normalize:
+        floor = den_floor if den_floor is not None else 1e-6
+        y = y / jnp.maximum(jnp.abs(den), floor)[..., None]
+    return y, (Cf, nf)
+
+
+def linear_recurrence_step(q, k, v, a, b, state, *, normalize=False,
+                           den_floor=None):
+    """Single decode step. q,k: (B,H,dk); v: (B,H,dv); a,b: (B,H)."""
+    C, n = state
+    C = C * a[..., None, None] + b[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = n * a[..., None] + b[..., None] * k
+    y = jnp.einsum("bhd,bhde->bhe", q, C)
+    if normalize:
+        den = jnp.einsum("bhd,bhd->bh", q, n)
+        floor = den_floor if den_floor is not None else 1e-6
+        y = y / jnp.maximum(jnp.abs(den), floor)[..., None]
+    return y, (C, n)
+
+
+# ----------------------------------------------------------------------------
+# Causal depthwise conv1d (mamba2 / mLSTM front conv)
+# ----------------------------------------------------------------------------
+
+def causal_conv1d(w, x, *, cache=None):
+    """w: (K, C) depthwise; x: (B,S,C). cache: (B,K-1,C) trailing context."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(K))
+    new_cache = xp[:, -(K - 1):, :] if K > 1 else pad
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    ssm: Tuple[jax.Array, jax.Array]   # C (B,H,N,P), n (unused placeholder)
+    conv: jax.Array                    # (B, K-1, conv_channels)
+
+
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = s.num_ssm_heads
+    P = d_inner // H
+    N = s.state_dim
+    conv_ch = d_inner + 2 * N          # conv over [x, B, C], one group
+    return d_inner, H, P, N, conv_ch
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict[str, object]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, P, N, conv_ch = mamba2_dims(cfg)
+    return {
+        "in_proj": L.dense_def(d, 2 * d_inner + 2 * N + H, ("embed", "ffn")),
+        "conv_w": L.ParamDef((s.conv_dim, conv_ch), "scaled", (None, "ffn")),
+        "A_log": L.ParamDef((H,), "zeros", (None,), jnp.float32),
+        "D": L.ParamDef((H,), "ones", (None,), jnp.float32),
+        "dt_bias": L.ParamDef((H,), "zeros", (None,), jnp.float32),
+        "out_norm": L.norm_def(d_inner, "rmsnorm"),
+        "out_proj": L.dense_def(d_inner, d, ("ffn", "embed")),
+    }
+
+
+def _mamba2_inner(p, x, cfg: ModelConfig, conv_cache=None):
+    d_inner, H, P, N, conv_ch = mamba2_dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = L.dense(p["in_proj"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+    xbc, new_conv = causal_conv1d(p["conv_w"], jax.nn.silu(xbc),
+                                  cache=conv_cache)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])        # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,) < 0
+    log_a = dt * A[None, None, :]
+    xh = xs.reshape(B, S, H, P)
+    kq_k = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, N))
+    kq_q = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, N))
+    return z, xh, kq_q, kq_k, log_a, dt, new_conv
+
+
+def mamba2_forward(p, x, cfg: ModelConfig):
+    z, xh, q, k, log_a, dt, _ = _mamba2_inner(p, x, cfg)
+    y, _ = chunked_linear_recurrence(
+        q, k, xh, log_a, dt, chunk=cfg.ssm.chunk_size, normalize=False)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    B, S = x.shape[:2]
+    y = y.reshape(B, S, -1).astype(x.dtype)
+    y = L.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return L.dense(p["out_proj"], y)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, H, P, N, conv_ch = mamba2_dims(cfg)
+    return Mamba2State(
+        ssm=(jnp.zeros((batch, H, N, P), dtype),
+             jnp.zeros((batch, H, N), dtype)),
+        conv=jnp.zeros((batch, cfg.ssm.conv_dim - 1, conv_ch), dtype))
+
+
+def mamba2_decode(p, x, state: Mamba2State, cfg: ModelConfig):
+    """x: (B,1,d) -> (y (B,1,d), new state). O(1) per step."""
+    z, xh, q, k, log_a, dt, new_conv = _mamba2_inner(
+        p, x, cfg, conv_cache=state.conv)
+    a = jnp.exp(log_a[:, 0])                                   # (B,H)
+    y, ssm = linear_recurrence_step(
+        q[:, 0], k[:, 0], xh[:, 0].astype(jnp.float32),
+        a, dt[:, 0], state.ssm, normalize=False)
+    y = y + xh[:, 0].astype(jnp.float32) * p["D"][None, :, None]
+    B = x.shape[0]
+    y = y.reshape(B, 1, -1).astype(x.dtype)
+    y = L.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return L.dense(p["out_proj"], y), Mamba2State(ssm=ssm, conv=new_conv)
+
+
+# ----------------------------------------------------------------------------
+# xLSTM: mLSTM block (matrix memory) and sLSTM block (scalar memory)
+# ----------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B,H,dk,dv)
+    n: jax.Array      # (B,H,dk)
+    m: jax.Array      # (B,H)
+    conv: jax.Array   # (B,K-1,di)
+
+
+def mlstm_dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    H = cfg.ssm.num_ssm_heads
+    dh = di // H
+    return di, H, dh
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, object]:
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "w_up": L.dense_def(d, 2 * di, ("embed", "ffn")),
+        "conv_w": L.ParamDef((4, di), "scaled", (None, "ffn")),
+        # block-diagonal per-head q/k/v (official xLSTM structure)
+        "wq": L.ParamDef((H, dh, dh), "scaled", (None, None, None)),
+        "wk": L.ParamDef((H, dh, dh), "scaled", (None, None, None)),
+        "wv": L.ParamDef((H, dh, dh), "scaled", (None, None, None)),
+        "w_igate": L.dense_def(di, H, ("ffn", None), bias=True),
+        "w_fgate": L.dense_def(di, H, ("ffn", None), bias=True),
+        "out_norm": L.norm_def(di, "rmsnorm"),
+        "w_down": L.dense_def(di, d, ("ffn", "embed")),
+    }
+
+
+def _blockdiag(w, x, H, dh):
+    """x: (..., H*dh) -> per-head (..., H, dh) @ w (H, dh, dh)."""
+    xh = x.reshape(x.shape[:-1] + (H, dh))
+    return jnp.einsum("...hd,hde->...he", xh, w.astype(x.dtype))
+
+
+def _stabilizer_scan(f_log, i_log, m0):
+    """m_t = max(m_{t-1} + f_log_t, i_log_t) via associative scan.
+
+    Represent each element as affine max-plus pair (A, Bv):
+    m_t = max(m_{t-1} + A, Bv); composition is associative.
+    """
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax + ay, jnp.maximum(bx + ay, by)
+    A, Bv = jax.lax.associative_scan(combine, (f_log, i_log), axis=1)
+    return jnp.maximum(m0[:, None] + A, Bv)           # (B,S,H)
+
+
+def _mlstm_gates(p, xi, m0):
+    """xi: (B,S,di). Returns (log_a, b, m, den_floor)."""
+    f_log = jax.nn.log_sigmoid(
+        L.dense(p["w_fgate"], xi).astype(jnp.float32))         # (B,S,H)
+    i_log = L.dense(p["w_igate"], xi).astype(jnp.float32)
+    m = _stabilizer_scan(f_log, i_log, m0)
+    m_prev = jnp.concatenate([m0[:, None], m[:, :-1]], axis=1)
+    log_a = f_log + m_prev - m
+    b = jnp.exp(i_log - m)
+    den_floor = jnp.exp(-m)
+    return log_a, b, m, den_floor
+
+
+def mlstm_forward(p, x, cfg: ModelConfig):
+    di, H, dh = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    up = L.dense(p["w_up"], x)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, _ = causal_conv1d(p["conv_w"], xi)
+    xc = jax.nn.silu(xc)
+    q = _blockdiag(p["wq"], xc, H, dh) / math.sqrt(dh)
+    k = _blockdiag(p["wk"], xc, H, dh)
+    v = _blockdiag(p["wv"], xi, H, dh)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    log_a, b, m, den_floor = _mlstm_gates(p, xi, m0)
+    y, _ = chunked_linear_recurrence(
+        q, k, v, log_a, b, chunk=cfg.ssm.chunk_size,
+        normalize=True, den_floor=den_floor)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = L.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return L.dense(p["w_down"], y)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    di, H, dh = mlstm_dims(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+        conv=jnp.zeros((batch, 3, di), jnp.float32))
+
+
+def mlstm_decode(p, x, state: MLSTMState, cfg: ModelConfig):
+    di, H, dh = mlstm_dims(cfg)
+    B = x.shape[0]
+    up = L.dense(p["w_up"], x)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = causal_conv1d(p["conv_w"], xi, cache=state.conv)
+    xc = jax.nn.silu(xc)
+    q = _blockdiag(p["wq"], xc, H, dh)[:, 0] / math.sqrt(dh)
+    k = _blockdiag(p["wk"], xc, H, dh)[:, 0]
+    v = _blockdiag(p["wv"], xi, H, dh)[:, 0]
+    f_log = jax.nn.log_sigmoid(
+        L.dense(p["w_fgate"], xi)[:, 0].astype(jnp.float32))   # (B,H)
+    i_log = L.dense(p["w_igate"], xi)[:, 0].astype(jnp.float32)
+    m = jnp.maximum(state.m + f_log, i_log)
+    a = jnp.exp(f_log + state.m - m)
+    b = jnp.exp(i_log - m)
+    y, (C, n) = linear_recurrence_step(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        a, b, (state.C, state.n), normalize=True, den_floor=jnp.exp(-m))
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = L.apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    return L.dense(p["w_down"], y), MLSTMState(C=C, n=n, m=m, conv=new_conv)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B,H,dh)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array      # (B,H)
+
+
+def slstm_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.ssm.num_ssm_heads
+    dh = d // H
+    d_up = int(d * cfg.ssm.slstm_proj_factor)
+    d_up = (d_up // 8) * 8 or 8
+    return d, H, dh, d_up
+
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, object]:
+    d, H, dh, d_up = slstm_dims(cfg)
+    return {
+        "w_gates": L.dense_def(d, 4 * d, ("embed", "ffn"), bias=True),
+        "r_gates": L.ParamDef((4, H, dh, dh), "scaled",
+                              (None, None, None, None)),
+        "out_norm": L.norm_def(d, "rmsnorm"),
+        "w_up": L.dense_def(d, d_up, ("embed", "ffn")),
+        "w_down": L.dense_def(d_up, d, ("ffn", "embed")),
+    }
+
+
+def _slstm_step(p_r, gates_x, state: SLSTMState):
+    """gates_x: (B, 4, H, dh) precomputed input contributions."""
+    rec = jnp.einsum("bhd,ghde->bghe", state.h, p_r.astype(jnp.float32))
+    g = gates_x.astype(jnp.float32) + rec                     # (B,4,H,dh)
+    zt = jnp.tanh(g[:, 0])
+    it = jnp.mean(g[:, 1], axis=-1)                           # scalar/head
+    ft = jnp.mean(g[:, 2], axis=-1)
+    ot = jax.nn.sigmoid(g[:, 3])
+    f_log = jax.nn.log_sigmoid(ft)
+    m = jnp.maximum(f_log + state.m, it)
+    ip = jnp.exp(it - m)
+    fp = jnp.exp(f_log + state.m - m)
+    c = fp[..., None] * state.c + ip[..., None] * zt
+    n = fp[..., None] * state.n + ip[..., None]
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m)
+
+
+def slstm_forward(p, x, cfg: ModelConfig, state: Optional[SLSTMState] = None):
+    d, H, dh, d_up = slstm_dims(cfg)
+    B, S, _ = x.shape
+    gates = L.dense(p["w_gates"], x).reshape(B, S, 4, H, dh)
+    if state is None:
+        state = SLSTMState(*(jnp.zeros((B, H, dh), jnp.float32)
+                             for _ in range(3)),
+                           m=jnp.zeros((B, H), jnp.float32))
+
+    def step(st, gx):
+        st = _slstm_step(p["r_gates"], gx, st)
+        return st, st.h
+
+    state, hs = jax.lax.scan(step, state, gates.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    y = L.apply_norm(p["out_norm"], y, "rmsnorm")
+    y = L.dense(p["w_down"], jax.nn.gelu(L.dense(p["w_up"], y)))
+    return y, state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d, H, dh, _ = slstm_dims(cfg)
+    return SLSTMState(*(jnp.zeros((batch, H, dh), jnp.float32)
+                        for _ in range(3)),
+                      m=jnp.zeros((batch, H), jnp.float32))

@@ -1,0 +1,312 @@
+"""Transformer stacks for every assigned family.
+
+All uniform stacks scan over stacked layer params (small HLO, fast 1-core
+compiles); heterogeneous families (hybrid, vlm, xlstm) scan over
+*super-blocks*. Every stack exposes three entry points:
+
+    forward(params, x, ...)   teacher-forced full-sequence (train loss path)
+    prefill(params, x, ...)   forward + per-layer caches/states
+    decode(params, x, caches, pos, ...) one-token step against caches
+
+``layer_range`` slices the stacked params so the Origami executor can run
+tier-1 ([0, p)) under the blinded-dense context and tier-2 ([p, L)) open —
+see core/origami.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.parallel import act_sharding as ash
+
+
+# ----------------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------------
+
+def _gated(cfg: ModelConfig) -> bool:
+    return cfg.activation == "silu"
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if _gated(cfg):
+        return {"w_gate": L.dense_def(d, d_ff, ("embed", "ffn")),
+                "w_up": L.dense_def(d, d_ff, ("embed", "ffn")),
+                "w_down": L.dense_def(d_ff, d, ("ffn", "embed"))}
+    return {"w_up": L.dense_def(d, d_ff, ("embed", "ffn")),
+            "w_down": L.dense_def(d_ff, d, ("ffn", "embed"))}
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    act = L.activation(cfg.activation)
+    if "w_gate" in p:
+        h = act(L.dense(p["w_gate"], x)) * L.dense(p["w_up"], x)
+    else:
+        h = act(L.dense(p["w_up"], x))
+    h = ash.constrain(h, "batch", "seq", "ffn_act")
+    return L.dense(p["w_down"], h)
+
+
+# ----------------------------------------------------------------------------
+# Decoder blocks (dense / moe)
+# ----------------------------------------------------------------------------
+
+def decoder_block_defs(cfg: ModelConfig):
+    attn = A.mla_defs(cfg) if cfg.attention == "mla" else A.gqa_defs(cfg)
+    d = {"ln1": L.norm_def(cfg.d_model, cfg.norm), "attn": attn,
+         "ln2": L.norm_def(cfg.d_model, cfg.norm)}
+    if cfg.moe is not None:
+        d["moe"] = M.moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_defs(cfg)
+    return d
+
+
+def _attn_fwd(p, x, cfg, *, cost_mode):
+    if cfg.attention == "mla":
+        return A.mla_forward(p, x, cfg, cost_mode=cost_mode)
+    return A.gqa_forward(p, x, cfg, cost_mode=cost_mode)
+
+
+def _attn_prefill(p, x, cfg, *, cost_mode):
+    if cfg.attention == "mla":
+        return A.mla_prefill(p, x, cfg, cost_mode=cost_mode)
+    return A.gqa_prefill(p, x, cfg, cost_mode=cost_mode)
+
+
+def _attn_decode(p, x, cache, pos, cfg):
+    if cfg.attention == "mla":
+        return A.mla_decode(p, x, cache, pos, cfg)
+    return A.gqa_decode(p, x, cache, pos, cfg)
+
+
+def _ffn(p, x, cfg):
+    if cfg.moe is not None:
+        return M.moe_forward(p["moe"], x, cfg)
+    return mlp_forward(p["mlp"], x, cfg), 0.0
+
+
+def decoder_block_fwd(p, x, cfg: ModelConfig, *, cost_mode=False):
+    h = x + _attn_fwd(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg,
+                      cost_mode=cost_mode)
+    y, aux = _ffn(p, L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+    # NOTE: a Megatron-SP variant ("boundary_seq"->model here) was measured
+    # and REFUTED on qwen2.5 train_4k: collective 24.0->20.8 s but memory
+    # 25.7->52.2 s and compute 3.12->5.17 s — GSPMD materializes the
+    # boundary reshards (EXPERIMENTS.md §Perf Cell A iteration 3).
+    return ash.constrain(h + y, "batch", "seq", "embed_act"), aux
+
+
+def decoder_block_prefill(p, x, cfg: ModelConfig, *, cost_mode=False):
+    a, cache = _attn_prefill(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                             cfg, cost_mode=cost_mode)
+    h = x + a
+    y, aux = _ffn(p, L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+    return h + y, cache, aux
+
+
+def decoder_block_decode(p, x, cache, pos, cfg: ModelConfig):
+    a, cache = _attn_decode(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                            cache, pos, cfg)
+    h = x + a
+    y, _ = _ffn(p, L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+    return h + y, cache
+
+
+# ----------------------------------------------------------------------------
+# Stack helpers: stacked-param init + scan
+# ----------------------------------------------------------------------------
+
+def stacked_defs(defs, n: int):
+    """Prepend a layer dimension to every ParamDef in ``defs``."""
+    def stack(d: L.ParamDef) -> L.ParamDef:
+        return L.ParamDef((n,) + d.shape, d.init, ("layers",) + d.axes,
+                          d.dtype)
+    return jax.tree.map(stack, defs, is_leaf=L.is_def)
+
+
+def slice_layers(stacked, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], stacked)
+
+
+def _maybe_remat(fn, cfg: ModelConfig, train: bool):
+    if train and cfg.remat != "none":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def scan_blocks(block_fn, params, x, cfg: ModelConfig, *, train: bool,
+                extras=None):
+    """Scan ``block_fn(p_i, x, extra_i) -> (x, aux)`` over stacked params."""
+    def body(carry, xs):
+        p_i = xs[0] if extras is not None else xs
+        e_i = xs[1] if extras is not None else None
+        y, aux = block_fn(p_i, carry, e_i)
+        return y, aux
+
+    body = _maybe_remat(body, cfg, train)
+    xs = (params, extras) if extras is not None else params
+    x, auxs = jax.lax.scan(body, x, xs)
+    return x, jnp.sum(auxs) if auxs is not None else 0.0
+
+
+# ----------------------------------------------------------------------------
+# LM top level (embed -> stack -> norm -> head), family dispatch
+# ----------------------------------------------------------------------------
+
+class LMOutputs(NamedTuple):
+    logits: jax.Array
+    aux_loss: Any
+
+
+def lm_defs(cfg: ModelConfig) -> Dict[str, object]:
+    d: Dict[str, object] = {
+        "embed": L.embed_def(cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.norm_def(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        d["lm_head"] = L.dense_def(cfg.d_model, cfg.padded_vocab,
+                                   ("embed", "vocab"))
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        d["blocks"] = stacked_defs(decoder_block_defs(cfg), cfg.num_layers)
+    elif fam == "hybrid":
+        n_main = (cfg.num_layers // cfg.hybrid_attn_every) \
+            * cfg.hybrid_attn_every
+        groups = n_main // cfg.hybrid_attn_every
+        mamba = {"norm": L.norm_def(cfg.d_model, cfg.norm),
+                 "mamba": S.mamba2_defs(cfg)}
+        d["mamba_main"] = stacked_defs(
+            stacked_defs(mamba, cfg.hybrid_attn_every), groups)
+        if cfg.num_layers - n_main:
+            d["mamba_tail"] = stacked_defs(mamba, cfg.num_layers - n_main)
+        d["shared_attn"] = {
+            "ln1": L.norm_def(cfg.d_model, cfg.norm),
+            "attn": A.gqa_defs(cfg),
+            "ln2": L.norm_def(cfg.d_model, cfg.norm),
+            "mlp": mlp_defs(cfg),
+        }
+    elif fam == "ssm":         # xlstm
+        every = cfg.ssm.slstm_every
+        assert cfg.num_layers % every == 0, "xlstm layers % slstm_every"
+        groups = cfg.num_layers // every
+        mblock = {"norm": L.norm_def(cfg.d_model, cfg.norm),
+                  "mlstm": S.mlstm_defs(cfg)}
+        sblock = {"norm": L.norm_def(cfg.d_model, cfg.norm),
+                  "slstm": S.slstm_defs(cfg)}
+        d["mlstm_groups"] = stacked_defs(stacked_defs(mblock, every - 1),
+                                         groups)
+        d["slstm_groups"] = stacked_defs(sblock, groups)
+    elif fam == "audio":       # whisper enc-dec
+        d["enc_blocks"] = stacked_defs(encoder_block_defs(cfg),
+                                       cfg.num_layers)
+        d["enc_norm"] = L.norm_def(cfg.d_model, cfg.norm)
+        d["dec_blocks"] = stacked_defs(cross_decoder_block_defs(cfg),
+                                       cfg.num_layers)
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        assert cfg.num_layers % every == 0
+        groups = cfg.num_layers // every
+        d["self_groups"] = stacked_defs(
+            stacked_defs(decoder_block_defs(cfg), every - 1), groups)
+        d["cross_groups"] = stacked_defs(vlm_cross_block_defs(cfg), groups)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return d
+
+
+# ----------------------------------------------------------------------------
+# Whisper blocks
+# ----------------------------------------------------------------------------
+
+def encoder_block_defs(cfg: ModelConfig):
+    return {"ln1": L.norm_def(cfg.d_model, cfg.norm),
+            "attn": A.gqa_defs(cfg),
+            "ln2": L.norm_def(cfg.d_model, cfg.norm),
+            "mlp": mlp_defs(cfg)}
+
+
+def encoder_block_fwd(p, x, cfg, *, cost_mode=False):
+    h = x + A.gqa_forward(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                          cfg, causal=False, cost_mode=cost_mode)
+    return h + mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+
+
+def cross_decoder_block_defs(cfg: ModelConfig):
+    return {"ln1": L.norm_def(cfg.d_model, cfg.norm),
+            "attn": A.gqa_defs(cfg),
+            "ln_x": L.norm_def(cfg.d_model, cfg.norm),
+            "xattn": A.cross_attn_defs(cfg),
+            "ln2": L.norm_def(cfg.d_model, cfg.norm),
+            "mlp": mlp_defs(cfg)}
+
+
+def cross_decoder_block_fwd(p, x, memory, cfg, *, cost_mode=False):
+    h = x + A.gqa_forward(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                          cfg, cost_mode=cost_mode)
+    h = h + A.cross_attn_forward(p["xattn"],
+                                 L.apply_norm(p["ln_x"], h, cfg.norm),
+                                 memory, cfg, cost_mode=cost_mode)
+    return h + mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+
+
+def cross_decoder_block_prefill(p, x, memory, cfg, *, cost_mode=False):
+    a, cache = A.gqa_prefill(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                             cfg, cost_mode=cost_mode)
+    h = x + a
+    h = h + A.cross_attn_forward(p["xattn"],
+                                 L.apply_norm(p["ln_x"], h, cfg.norm),
+                                 memory, cfg, cost_mode=cost_mode)
+    return (h + mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm),
+                            cfg), cache)
+
+
+def cross_decoder_block_decode(p, x, cross_ck, cross_cv, cache, pos, cfg):
+    """Decode with *precomputed* cross K/V (avoids re-projecting memory)."""
+    a, cache = A.gqa_decode(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                            cache, pos, cfg)
+    h = x + a
+    h = h + A.cross_attn_cached(p["xattn"],
+                                L.apply_norm(p["ln_x"], h, cfg.norm),
+                                cross_ck, cross_cv, cfg)
+    return (h + mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm),
+                            cfg), cache)
+
+
+# ----------------------------------------------------------------------------
+# Llama-vision cross block (gated cross-attention)
+# ----------------------------------------------------------------------------
+
+def vlm_cross_block_defs(cfg: ModelConfig):
+    return {"ln1": L.norm_def(cfg.d_model, cfg.norm),
+            "xattn": A.cross_attn_defs(cfg),
+            "attn_gate": L.ParamDef((1,), "zeros", (None,), jnp.float32),
+            "ln2": L.norm_def(cfg.d_model, cfg.norm),
+            "mlp": mlp_defs(cfg),
+            "mlp_gate": L.ParamDef((1,), "zeros", (None,), jnp.float32)}
+
+
+def vlm_cross_block_fwd(p, x, patches, cfg, *, cost_mode=False):
+    a = A.cross_attn_forward(p["xattn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                             patches, cfg, cost_mode=cost_mode)
+    h = x + jnp.tanh(p["attn_gate"]).astype(x.dtype) * a
+    m = mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+    return h + jnp.tanh(p["mlp_gate"]).astype(x.dtype) * m
+
+
+def vlm_cross_block_cached(p, x, ck, cv, cfg):
+    a = A.cross_attn_cached(p["xattn"], L.apply_norm(p["ln1"], x, cfg.norm),
+                            ck, cv, cfg)
+    h = x + jnp.tanh(p["attn_gate"]).astype(x.dtype) * a
+    m = mlp_forward(p["mlp"], L.apply_norm(p["ln2"], h, cfg.norm), cfg)
+    return h + jnp.tanh(p["mlp_gate"]).astype(x.dtype) * m

@@ -1,0 +1,128 @@
+"""VGG-16/19 (the paper's evaluation models), NHWC, pure JAX.
+
+``vgg_forward(..., capture=k)`` additionally returns the feature map after
+layer ``k`` (1-based over the cnn_layers list, matching the paper's layer
+numbering in Figs. 7/8) — the tensor the c-GAN adversary observes.
+``apply_layer_range`` mirrors models/model.py:apply_range so the Origami
+executor can split tier-1/tier-2 at any layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _parse(spec: str) -> Tuple[str, int]:
+    for prefix in ("conv", "fc"):
+        if spec.startswith(prefix):
+            return prefix, int(spec[len(prefix):])
+    return spec, 0
+
+
+def _feature_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+    """Shape (H, W, C) entering each layer."""
+    h = w = cfg.image_size
+    c = cfg.image_channels
+    shapes = []
+    flat = None
+    for spec in cfg.cnn_layers:
+        kind, n = _parse(spec)
+        shapes.append((h, w, c) if flat is None else (flat,))
+        if kind == "conv":
+            c = n
+        elif kind == "pool":
+            h, w = h // 2, w // 2
+        elif kind == "fc":
+            flat = flat if flat is not None else h * w * c
+            flat = n
+        elif kind == "logits":
+            flat = flat if flat is not None else h * w * c
+            flat = cfg.num_classes
+    return shapes
+
+
+def vgg_defs(cfg: ModelConfig) -> Dict[str, object]:
+    h = w = cfg.image_size
+    c = cfg.image_channels
+    defs: Dict[str, object] = {}
+    flat = None
+    for i, spec in enumerate(cfg.cnn_layers):
+        kind, n = _parse(spec)
+        if kind == "conv":
+            defs[f"l{i}"] = L.conv_def(c, n)
+            c = n
+        elif kind == "pool":
+            h, w = h // 2, w // 2
+        elif kind == "fc":
+            flat_in = flat if flat is not None else h * w * c
+            defs[f"l{i}"] = L.dense_def(flat_in, n, ("embed", "ffn"),
+                                        bias=True)
+            flat = n
+        elif kind == "logits":
+            flat_in = flat if flat is not None else h * w * c
+            defs[f"l{i}"] = L.dense_def(flat_in, cfg.num_classes,
+                                        ("embed", "ffn"), bias=True)
+            flat = cfg.num_classes
+        else:
+            raise ValueError(spec)
+    return defs
+
+
+def apply_layer(params, x, cfg: ModelConfig, i: int):
+    kind, _ = _parse(cfg.cnn_layers[i])
+    if kind == "conv":
+        return jax.nn.relu(L.conv2d(params[f"l{i}"], x))
+    if kind == "pool":
+        return L.maxpool2d(x)
+    if kind == "fc":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return jax.nn.relu(L.dense(params[f"l{i}"], x))
+    if kind == "logits":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return L.dense(params[f"l{i}"], x)
+    raise ValueError(kind)
+
+
+def apply_layer_range(params, x, cfg: ModelConfig, lo: int, hi: int):
+    for i in range(lo, hi):
+        x = apply_layer(params, x, cfg, i)
+    return x
+
+
+def vgg_forward(params, images, cfg: ModelConfig,
+                capture: Optional[int] = None):
+    """images: (B,H,W,C). capture: 1-based layer index to also return."""
+    x = images
+    captured = None
+    for i in range(len(cfg.cnn_layers)):
+        x = apply_layer(params, x, cfg, i)
+        if capture is not None and i == capture - 1:
+            captured = x
+    return (x, captured) if capture is not None else x
+
+
+def layer_output_bytes(cfg: ModelConfig, batch: int = 1,
+                       dtype_bytes: int = 4) -> List[int]:
+    """Intermediate feature-map sizes (paper §VI: 47MB/51MB totals)."""
+    sizes = []
+    h = w = cfg.image_size
+    c = cfg.image_channels
+    flat = None
+    for spec in cfg.cnn_layers:
+        kind, n = _parse(spec)
+        if kind == "conv":
+            c = n
+        elif kind == "pool":
+            h, w = h // 2, w // 2
+        elif kind in ("fc", "logits"):
+            flat = n if kind == "fc" else cfg.num_classes
+        numel = (h * w * c) if flat is None else flat
+        sizes.append(batch * numel * dtype_bytes)
+    return sizes

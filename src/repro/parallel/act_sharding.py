@@ -1,0 +1,66 @@
+"""Logical activation-sharding constraints (MaxText-style rules).
+
+Model code calls ``constrain(x, "batch", "seq", "vocab")`` at key points;
+under an active ``activation_rules`` context (set by the launcher at trace
+time) this becomes ``with_sharding_constraint`` with the mapped mesh axes,
+and is a no-op otherwise (single-device smoke tests).
+
+This is what keeps the big tensors pinned: without the logits constraint,
+GSPMD replicates the (B, S, vocab) cross-entropy inputs per device
+(observed: 238 GB/device temp on smollm — EXPERIMENTS.md §Perf iteration 0).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Optional[Dict[str, Any]] = None
+_AXIS_SIZES: Optional[Dict[str, int]] = None
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Dict[str, Any],
+                     axis_sizes: Optional[Dict[str, int]] = None):
+    global _RULES, _AXIS_SIZES
+    prev = (_RULES, _AXIS_SIZES)
+    _RULES, _AXIS_SIZES = rules, axis_sizes
+    try:
+        yield
+    finally:
+        _RULES, _AXIS_SIZES = prev
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return _RULES
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint via the active logical rules.
+
+    Same conflict resolution as layers.param_specs: first dim wins a mesh
+    axis; dims whose size doesn't divide the mapped axes fall back to
+    replicated. No-op without an active context (1-device smoke tests).
+    """
+    if _RULES is None:
+        return x
+    used = set()
+    out = []
+    for dim, a in zip(x.shape, logical):
+        m = _RULES.get(a) if a else None
+        ms = tuple(m) if isinstance(m, (tuple, list)) else (m,) if m else ()
+        if any(ax in used for ax in ms):
+            out.append(None)
+            continue
+        if _AXIS_SIZES is not None and ms:
+            total = 1
+            for ax in ms:
+                total *= _AXIS_SIZES.get(ax, 1)
+            if total == 0 or dim % total != 0:
+                out.append(None)
+                continue
+        used.update(ms)
+        out.append(m)
+    return jax.lax.with_sharding_constraint(x, P(*out))

@@ -1,0 +1,249 @@
+"""Post-compile HLO analysis: collective bytes + matmul FLOPs, loop-aware.
+
+Two things ``cost_analysis()`` cannot give us:
+
+1. **Collective traffic** — not exposed at all. We sum the result bytes of
+   every all-gather / all-reduce / reduce-scatter / all-to-all /
+   collective-permute in the per-device SPMD module.
+2. **Loop-multiplied FLOPs** — XLA counts a while body ONCE, but
+   scan-over-layers executes it `trip` times (verified experimentally:
+   scan flops = unrolled/L). We therefore count `dot` FLOPs ourselves from
+   the HLO text, with each while body's contribution multiplied by its trip
+   count (extracted from the loop condition's comparison constant and
+   validated against known layer counts in tests).
+
+Both walks share one recursive traversal from ENTRY through calls /
+fusions / conditionals / whiles. Elementwise FLOPs are ignored (standard
+matmul-MFU convention, stated in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\))|"
+                     r"(?:[\w\[\],\{\}]+))\s+([\w\-]+)")
+_CALL_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[^\s]+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_REF_COMP_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=\s*%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_TYPE_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*((?:\([^)]*\))|[\w\[\],]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class HLOStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0       # loop-aware operand+result traffic proxy
+    # traffic attributable to the jnp flash-attention inner loops (score /
+    # context tiles). The Pallas kernel (kernels/flash_attention) keeps
+    # these tiles in VMEM, so the kernelized memory term subtracts them.
+    flash_bytes: float = 0.0
+    trip_counts: List[int] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def add_coll(self, kind: str, nbytes: float, mult: float):
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) \
+            + nbytes * mult
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + 1
+
+
+@dataclass
+class _Comp:
+    header: str
+    lines: List[str]
+    types: Dict[str, str]
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    current: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        if not raw.startswith(" ") and "->" in raw and "{" in raw:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                name = m.group(1)
+                current = _Comp(header=stripped, lines=[], types={})
+                comps[name] = current
+                if stripped.startswith("ENTRY") or raw.startswith("ENTRY"):
+                    entry = name
+                # parameter types from the header signature
+                paren = stripped[stripped.find("("):stripped.rfind("->")]
+                for pname, ptype in _PARAM_TYPE_RE.findall(paren):
+                    current.types[pname] = ptype
+                continue
+        if current is not None:
+            if stripped == "}":
+                current = None
+            else:
+                current.lines.append(stripped)
+                dm = _DEF_RE.match(stripped)
+                if dm:
+                    current.types[dm.group(1)] = dm.group(2)
+    return comps, entry
+
+
+def _trip_count(cond: Optional[_Comp]) -> int:
+    if cond is None:
+        return 1
+    consts = []
+    for line in cond.lines:
+        if "constant" in line and "compare" not in line:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops_of_line(line: str, comp: _Comp) -> float:
+    dm = _DEF_RE.match(line)
+    if dm is None or dm.group(3) != "dot":
+        return 0.0
+    out_dims = _shape_dims(dm.group(2)) or []
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contraction size from lhs operand type
+    ops = _OPERANDS_RE.search(line[line.find("dot("):])
+    k = 1
+    cdm = _DOT_DIMS_RE.search(line)
+    if ops and cdm:
+        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
+        lhs = names[0].split(" ")[-1].lstrip("%") if names else ""
+        lhs_type = comp.types.get(lhs)
+        cdims = [int(c) for c in cdm.group(1).split(",") if c]
+        if lhs_type:
+            dims = _shape_dims(lhs_type) or []
+            for c in cdims:
+                if c < len(dims):
+                    k *= dims[c]
+    return 2.0 * out_elems * k
+
+
+_FREE_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             # control flow: carried state is aliased in place, not copied
+             # per iteration — counting it would bill all params once per
+             # layer-scan trip (observed 47 TB/device phantom traffic)
+             "while", "conditional", "call", "custom-call",
+             "optimization-barrier", "copy-start", "copy-done")
+
+
+def _traffic_of_line(line: str, comp: _Comp) -> float:
+    """HBM traffic proxy of one top-level instruction: 2 × result bytes
+    (one write + one downstream read).
+
+    Results-only, NOT operands: a dynamic-slice fusion reading one layer's
+    weights from the (L, …) stacked parameter array lists the *whole stack*
+    as its operand — counting operands billed all params once per loop trip
+    (observed 47 TB/device phantom traffic). Every real read corresponds to
+    some producer's result (or a parameter, read ~once), so results×2 is
+    the defensible first-order proxy (EXPERIMENTS.md §Roofline)."""
+    dm = _DEF_RE.match(line)
+    if dm is None or dm.group(3) in _FREE_OPS:
+        return 0.0
+    return 2.0 * float(_shape_bytes(dm.group(2)))
+
+
+def analyze_hlo(hlo: str) -> HLOStats:
+    comps, entry = _split_computations(hlo)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    stats = HLOStats()
+
+    def walk(name: str, mult: float, depth: int = 0, in_fusion=False):
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return
+        for line in comp.lines:
+            cm = _CALL_COLL_RE.search(line)
+            if cm:
+                kind = cm.group(2).replace("-start", "")
+                stats.add_coll(kind, float(_shape_bytes(cm.group(1))), mult)
+            f = _dot_flops_of_line(line, comp)
+            if f:
+                stats.dot_flops += f * mult
+            if not in_fusion:
+                t = _traffic_of_line(line, comp) * mult
+                stats.hbm_bytes += t
+                # attribute flash-attention inner-loop tiles by the einsum
+                # signature / function frames in the op metadata
+                if t and ("bqhg" in line or "kv_block" in line
+                          or "q_block" in line):
+                    stats.flash_bytes += t
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)   # XLA's own annotation, if any
+                trips = (int(tm.group(1)) if tm
+                         else _trip_count(comps.get(wm.group(1))))
+                stats.trip_counts.append(trips)
+                walk(wm.group(2), mult * trips, depth + 1, in_fusion)
+                continue
+            for ref in _REF_COMP_RE.findall(line):
+                if ref in comps and ref != name and "while" not in line:
+                    # computations referenced via calls= are fusions/reducers
+                    walk(ref, mult, depth + 1, in_fusion=True)
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                for ref in bm.group(1).split(","):
+                    walk(ref.strip().lstrip("%"), mult, depth + 1,
+                         in_fusion)
+
+    walk(entry, 1.0)
+    return stats
+
+
+# backwards-compatible aliases
+def analyze_collectives(hlo: str) -> HLOStats:
+    return analyze_hlo(hlo)
+
+
+def while_trip_counts(hlo: str) -> List[int]:
+    return analyze_hlo(hlo).trip_counts

@@ -1,0 +1,235 @@
+"""Sharding plans: logical-axis rules -> PartitionSpec / NamedSharding trees.
+
+Rules map the logical axes declared on every ParamDef (models/layers.py) to
+mesh axes. Two presets:
+
+- TRAIN: 2-D param sharding — FSDP over "data" (the `embed` logical axis)
+  × TP over "model" (`ffn`/`heads_flat`/`vocab`/`experts`). Optimizer
+  moments inherit the param spec, so total state is fully sharded across
+  all 256/512 chips.
+- SERVE: TP over "model"; weights replicated over "data" for dense archs;
+  MoE banks additionally shard `ffn` over "data" so a 480B-expert bank
+  still fits (DESIGN.md §4).
+
+Batch/cache specs per shape handle the special cells: `long_500k` has
+global_batch=1, so the KV/seq dimension shards over ("data","model")
+instead of the batch (sequence-parallel decode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def train_rules(cfg: ModelConfig, mesh_cfg: MeshConfig) -> Dict[str, Any]:
+    return {
+        "embed": "data",          # FSDP axis
+        "ffn": "model",
+        "heads_flat": "model",
+        "kv_flat": "model",
+        "vocab": "model",
+        "experts": "model",
+        "lora": "model",
+        "layers": None,
+    }
+
+
+def serve_rules(cfg: ModelConfig, mesh_cfg: MeshConfig) -> Dict[str, Any]:
+    rules = {
+        "embed": None,
+        "ffn": "model",
+        "heads_flat": "model",
+        "kv_flat": "model",
+        "vocab": "model",
+        "experts": "model",
+        "lora": "model",
+        "layers": None,
+    }
+    if cfg.moe is not None:
+        # expert banks too large to replicate over "data": shard their ffn
+        # dim over data instead of model (experts already take "model")
+        rules["ffn"] = "data"
+    return rules
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: Dict[str, Any]
+    batch_axes: Tuple[str, ...]            # mesh axes sharding global batch
+    seq_axes: Tuple[str, ...] = ()         # axes sharding seq (batch==1)
+
+    @property
+    def act_rules(self) -> Dict[str, Any]:
+        """Logical activation axes -> mesh axes (parallel/act_sharding)."""
+        return {
+            "batch": self.batch_axes or None,
+            "seq": self.seq_axes or None,
+            # context-parallel attention: query seq over the model axis
+            "flash_seq": self.seq_axes or "model",
+            "vocab": "model",
+            "embed_act": None,
+            "ffn_act": "model",
+            "heads_act": "model",
+        }
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape))
+
+    def spec_tree(self, defs):
+        return L.param_specs(defs, self.rules, self.axis_sizes)
+
+    def param_shardings(self, cfg: ModelConfig):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.spec_tree(M.model_defs(cfg)))
+
+    def named(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    # -- batches -------------------------------------------------------------
+    def token_sharding(self) -> NamedSharding:
+        b = self.batch_axes if self.batch_axes else None
+        return self.named(b, None)
+
+    def batch_shardings(self, cfg: ModelConfig, kind: str):
+        b = self.batch_axes if self.batch_axes else None
+        out = {"tokens": self.named(b, None)}
+        if cfg.family == "audio":
+            out["frames"] = self.named(b, None, "model")
+        if cfg.family == "vlm":
+            out["patches"] = self.named(b, None, "model")
+        if kind == "train":
+            pass
+        return out
+
+    # -- caches (mirror model.init_caches structure) --------------------------
+    def cache_shardings(self, cfg: ModelConfig):
+        b = self.batch_axes if self.batch_axes else None
+        s = self.seq_axes if self.seq_axes else ("model",)
+        fam = cfg.family
+
+        def kv_spec():
+            from repro.models.attention import KVCache
+            return KVCache(k=self.named(None, b, s, None, None),
+                           v=self.named(None, b, s, None, None))
+
+        if fam in ("dense", "moe"):
+            if cfg.attention == "mla":
+                from repro.models.attention import KVCache
+                return KVCache(k=self.named(None, b, s, None), v=None)
+            return kv_spec()
+        if fam == "hybrid":
+            from repro.models.ssm import Mamba2State
+            state = Mamba2State(
+                ssm=(self.named(None, None, b, "model", None, None),
+                     self.named(None, None, b, "model", None)),
+                conv=self.named(None, None, b, None, "model"))
+            out = {"main": state,
+                   "shared": self._grouped_kv(b, s)}
+            tail_groups = cfg.num_layers % cfg.hybrid_attn_every
+            if tail_groups:
+                out["tail"] = Mamba2State(
+                    ssm=(self.named(None, b, "model", None, None),
+                         self.named(None, b, "model", None)),
+                    conv=self.named(None, b, None, "model"))
+            return out
+        if fam == "ssm":
+            # xlstm has only 4 heads — shard the (large) per-head feature
+            # dim over "model" instead of the head dim
+            from repro.models.ssm import MLSTMState, SLSTMState
+            return {
+                "mlstm": MLSTMState(
+                    C=self.named(None, None, b, None, "model", None),
+                    n=self.named(None, None, b, None, "model"),
+                    m=self.named(None, None, b, None),
+                    conv=self.named(None, None, b, None, "model")),
+                "slstm": SLSTMState(
+                    c=self.named(None, b, None, "model"),
+                    n=self.named(None, b, None, "model"),
+                    h=self.named(None, b, None, "model"),
+                    m=self.named(None, b, None)),
+            }
+        if fam == "audio":
+            from repro.models.attention import KVCache
+            return {"self": kv_spec(),
+                    "cross_k": self.named(None, b, None, None, None),
+                    "cross_v": self.named(None, b, None, None, None)}
+        if fam == "vlm":
+            from repro.models.attention import KVCache
+            return {"self": KVCache(
+                        k=self.named(None, None, b, s, None, None),
+                        v=self.named(None, None, b, s, None, None)),
+                    "cross_k": self.named(None, b, None, None, None),
+                    "cross_v": self.named(None, b, None, None, None)}
+        raise ValueError(fam)
+
+    def _grouped_kv(self, b, s):
+        from repro.models.attention import KVCache
+        return KVCache(k=self.named(None, b, s, None, None),
+                       v=self.named(None, b, s, None, None))
+
+    # -- optimizer -----------------------------------------------------------
+    def opt_shardings(self, cfg: ModelConfig):
+        from repro.optim.adamw import AdamWState
+        pspec = self.param_shardings(cfg)
+        return AdamWState(step=self.named(), mu=pspec, nu=pspec)
+
+
+def sanitize_shardings(shardings, abstract, axis_sizes: Dict[str, int]):
+    """Drop mesh axes whose size doesn't divide the corresponding dim (jit
+    in_shardings require even division) and de-duplicate repeated axes —
+    the catch-all guard applied to every dry-run argument tree."""
+    def fix(sh, a):
+        if sh is None or not isinstance(sh, NamedSharding):
+            return sh
+        used = set()
+        out = []
+        spec = tuple(sh.spec) + (None,) * (len(a.shape) - len(sh.spec))
+        for dim, ax in zip(a.shape, spec):
+            axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            n = 1
+            for x in axes:
+                n *= axis_sizes.get(x, 1)
+            if not axes or dim % n != 0 or any(x in used for x in axes):
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(ax)
+        return NamedSharding(sh.mesh, P(*out))
+
+    return jax.tree.map(
+        fix, shardings, abstract,
+        is_leaf=lambda x: x is None or isinstance(x, NamedSharding))
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              mesh_cfg: MeshConfig, mode: str) -> ShardingPlan:
+    """mode: 'train' | 'serve'."""
+    rules = (train_rules if mode == "train" else serve_rules)(cfg, mesh_cfg)
+    data_axes = ("pod", "data") if mesh_cfg.multi_pod else ("data",)
+    n_data = 1
+    for a, n in zip(mesh_cfg.axes, mesh_cfg.shape):
+        if a in data_axes:
+            n_data *= n
+    if shape.global_batch >= n_data and shape.global_batch % n_data == 0:
+        batch_axes: Tuple[str, ...] = data_axes
+        seq_axes: Tuple[str, ...] = ()
+    elif shape.global_batch == 1:
+        batch_axes = ()
+        seq_axes = data_axes + ("model",)
+    else:
+        # batch smaller than data axes: shard over "data" only if divisible
+        batch_axes = ("data",) if shape.global_batch % 16 == 0 else ()
+        seq_axes = ()
+    return ShardingPlan(mesh=mesh, rules=rules, batch_axes=batch_axes,
+                        seq_axes=seq_axes)

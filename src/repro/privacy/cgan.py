@@ -1,0 +1,117 @@
+"""Conditional GAN adversary (paper §IV/§V): reconstruct X from Θ(X).
+
+Generator: encoder convs -> residual blocks -> nearest-upsample decoder
+(paper Fig. 6, scaled to the synthetic 32x32 dataset). Discriminator:
+downsampling convs on the image, condition feature map concatenated at
+matching spatial resolution, convs -> dense -> logit (paper §V-A).
+
+Training uses the non-saturating GAN loss plus a λ·L1 reconstruction term
+(pix2pix-style). The L1 term only *strengthens* the adversary — any
+learnable reconstruction channel counts against privacy — so SSIM numbers
+remain a conservative privacy bound.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ----------------------------------------------------------------------------
+# param defs
+# ----------------------------------------------------------------------------
+
+def _conv(cin, cout, k=3):
+    return L.conv_def(cin, cout, k)
+
+
+def generator_defs(feat_hw: int, feat_c: int, img_size: int = 32,
+                   width: int = 32):
+    """feat_hw: spatial size of the condition feature map Θ(X)."""
+    n_down = max(0, int(math.log2(max(feat_hw // 4, 1))))
+    n_up = int(math.log2(img_size / (feat_hw / (2 ** n_down))))
+    d: Dict[str, object] = {"in": _conv(feat_c, width)}
+    c = width
+    for i in range(n_down):
+        d[f"down{i}"] = _conv(c, min(2 * c, 128))
+        c = min(2 * c, 128)
+    for i in range(2):
+        d[f"res{i}a"] = _conv(c, c)
+        d[f"res{i}b"] = _conv(c, c)
+    for i in range(n_up):
+        nc = max(c // 2, width)
+        d[f"up{i}"] = _conv(c, nc)
+        c = nc
+    d["out"] = _conv(c, 3)
+    return d, (n_down, n_up)
+
+
+def generator_apply(p, feat, shape_meta: Tuple[int, int]) -> jax.Array:
+    n_down, n_up = shape_meta
+    x = jax.nn.relu(L.conv2d(p["in"], feat.astype(jnp.float32)))
+    for i in range(n_down):
+        x = jax.nn.relu(L.conv2d(p[f"down{i}"], x, stride=2))
+    for i in range(2):
+        h = jax.nn.relu(L.conv2d(p[f"res{i}a"], x))
+        x = x + L.conv2d(p[f"res{i}b"], h)
+    for i in range(n_up):
+        B, H, W, C = x.shape
+        x = jax.image.resize(x, (B, 2 * H, 2 * W, C), "nearest")
+        x = jax.nn.relu(L.conv2d(p[f"up{i}"], x))
+    return jax.nn.sigmoid(L.conv2d(p["out"], x))
+
+
+def discriminator_defs(feat_hw: int, feat_c: int, img_size: int = 32,
+                       width: int = 32):
+    n_down = int(math.log2(img_size / feat_hw)) if feat_hw < img_size else 0
+    d: Dict[str, object] = {"in": _conv(3, width, k=4)}
+    c = width
+    for i in range(n_down):
+        d[f"down{i}"] = _conv(c, min(2 * c, 128), k=4)
+        c = min(2 * c, 128)
+    d["merge"] = _conv(c + feat_c, 128, k=4)
+    d["conv2"] = _conv(128, 128, k=4)
+    d["head"] = L.dense_def(128, 1, ("embed", None), bias=True)
+    return d, n_down
+
+
+def discriminator_apply(p, img, feat, n_down: int) -> jax.Array:
+    x = jax.nn.leaky_relu(L.conv2d(p["in"], img.astype(jnp.float32)), 0.2)
+    for i in range(n_down):
+        x = jax.nn.leaky_relu(L.conv2d(p[f"down{i}"], x, stride=2), 0.2)
+    if feat.shape[1] != x.shape[1]:     # align spatial dims if off by 2^k
+        feat = jax.image.resize(
+            feat, (feat.shape[0], x.shape[1], x.shape[2], feat.shape[-1]),
+            "nearest")
+    x = jnp.concatenate([x, feat.astype(jnp.float32)], axis=-1)
+    x = jax.nn.leaky_relu(L.conv2d(p["merge"], x), 0.2)
+    x = jax.nn.leaky_relu(L.conv2d(p["conv2"], x, stride=2), 0.2)
+    x = jnp.mean(x, axis=(1, 2))
+    return L.dense(p["head"], x)[:, 0]
+
+
+# ----------------------------------------------------------------------------
+# losses
+# ----------------------------------------------------------------------------
+
+def bce_logits(logit, target):
+    return jnp.mean(jnp.maximum(logit, 0) - logit * target
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def g_loss_fn(gp, dp, feat, real, meta_g, meta_d, l1_weight: float = 50.0):
+    fake = generator_apply(gp, feat, meta_g)
+    adv = bce_logits(discriminator_apply(dp, fake, feat, meta_d), 1.0)
+    l1 = jnp.mean(jnp.abs(fake - real))
+    return adv + l1_weight * l1, fake
+
+
+def d_loss_fn(dp, gp, feat, real, meta_g, meta_d):
+    fake = jax.lax.stop_gradient(generator_apply(gp, feat, meta_g))
+    lr_ = bce_logits(discriminator_apply(dp, real, feat, meta_d), 1.0)
+    lf = bce_logits(discriminator_apply(dp, fake, feat, meta_d), 0.0)
+    return lr_ + lf

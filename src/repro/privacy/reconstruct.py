@@ -1,0 +1,176 @@
+"""Adversary training loop + the paper's partition-search (Algorithm 1).
+
+``train_adversary`` trains the c-GAN on (Θ(X), X) pairs collected from a
+partition layer; ``partition_search`` walks the layers exactly as
+Algorithm 1: find the first layer p whose SSIM is below threshold, then
+verify p+1 and p+2 (the paper's non-monotonicity guard — max-pool outputs
+can be safe while the *next conv* is reconstructable again).
+
+``token_recovery_probe`` is the LM-family analogue (beyond-paper,
+DESIGN.md §5): a linear probe recovering input token identity from
+boundary hidden states; recovery accuracy plays the role of SSIM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import layers as L
+from repro.models import vgg as V
+from repro.optim import adamw
+from repro.privacy import cgan
+from repro.privacy.data import make_batch
+from repro.privacy.ssim import ssim
+
+
+@dataclasses.dataclass
+class AdversaryReport:
+    layer: int
+    ssim: float
+    g_loss: float
+    d_loss: float
+    steps: int
+
+
+def collect_features(params, images, cfg: ModelConfig, layer: int):
+    """Θ(X): feature maps after ``layer`` (1-based, paper numbering).
+
+    Features are standardized per-batch — a free transformation available
+    to any adversary, needed because raw feature scales vary by orders of
+    magnitude across depths.
+    """
+    _, feat = V.vgg_forward(params, images, cfg, capture=layer)
+    if feat.ndim == 2:                      # fc features -> (B,1,1,d)
+        feat = feat[:, None, None, :]
+    feat = feat.astype(jnp.float32)
+    mu = jnp.mean(feat)
+    sd = jnp.std(feat) + 1e-6
+    return (feat - mu) / sd
+
+
+def train_adversary(model_params, cfg: ModelConfig, layer: int, *,
+                    steps: int = 200, batch: int = 16, n_eval: int = 64,
+                    lr: float = 2e-4, seed: int = 0,
+                    log_every: int = 0) -> AdversaryReport:
+    img_size = cfg.image_size
+    probe = collect_features(
+        model_params, jnp.asarray(make_batch(0, 2, img_size)), cfg, layer)
+    feat_hw, feat_c = probe.shape[1], probe.shape[-1]
+
+    g_defs, meta_g = cgan.generator_defs(feat_hw, feat_c, img_size)
+    d_defs, meta_d = cgan.discriminator_defs(feat_hw, feat_c, img_size)
+    key = jax.random.PRNGKey(seed)
+    kg, kd = jax.random.split(key)
+    gp = L.init_params(kg, g_defs, jnp.float32)
+    dp = L.init_params(kd, d_defs, jnp.float32)
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=0, total_steps=steps,
+                       weight_decay=0.0, grad_clip=1.0, b1=0.5, b2=0.999)
+    g_opt = adamw.init(gp, tcfg)
+    d_opt = adamw.init(dp, tcfg)
+
+    @jax.jit
+    def step_fn(gp, dp, g_opt, d_opt, feat, real):
+        dl, dgrad = jax.value_and_grad(
+            lambda d_: cgan.d_loss_fn(d_, gp, feat, real, meta_g, meta_d)
+        )(dp)
+        dp2, d_opt2, _ = adamw.update(dgrad, d_opt, dp, tcfg,
+                                      jnp.float32(lr))
+        (gl, _), ggrad = jax.value_and_grad(
+            lambda g_: cgan.g_loss_fn(g_, dp2, feat, real, meta_g, meta_d),
+            has_aux=True)(gp)
+        gp2, g_opt2, _ = adamw.update(ggrad, g_opt, gp, tcfg,
+                                      jnp.float32(lr))
+        return gp2, dp2, g_opt2, d_opt2, gl, dl
+
+    gl = dl = jnp.float32(0)
+    for it in range(steps):
+        real = jnp.asarray(make_batch(100 + it * batch, batch, img_size))
+        feat = collect_features(model_params, real, cfg, layer)
+        gp, dp, g_opt, d_opt, gl, dl = step_fn(gp, dp, g_opt, d_opt,
+                                               feat, real)
+        if log_every and (it + 1) % log_every == 0:
+            print(f"  layer {layer} step {it+1}: g={float(gl):.3f} "
+                  f"d={float(dl):.3f}")
+
+    # eval on held-out images
+    real = jnp.asarray(make_batch(10_000_000, n_eval, img_size))
+    feat = collect_features(model_params, real, cfg, layer)
+    fake = cgan.generator_apply(gp, feat, meta_g)
+    s = float(ssim(fake, real))
+    return AdversaryReport(layer=layer, ssim=s, g_loss=float(gl),
+                           d_loss=float(dl), steps=steps)
+
+
+def partition_search(model_params, cfg: ModelConfig, *,
+                     threshold: float = 0.35, steps: int = 150,
+                     verify_depth: int = 2, max_layer: Optional[int] = None,
+                     **kw) -> Tuple[int, List[AdversaryReport]]:
+    """Algorithm 1. Returns (partition layer p, all reports)."""
+    n = max_layer or len(cfg.cnn_layers) - 1
+    reports: List[AdversaryReport] = []
+    cache: Dict[int, AdversaryReport] = {}
+
+    def eval_layer(l: int) -> AdversaryReport:
+        if l not in cache:
+            cache[l] = train_adversary(model_params, cfg, l, steps=steps,
+                                       **kw)
+            reports.append(cache[l])
+        return cache[l]
+
+    l = 1
+    while l <= n:
+        rep = eval_layer(l)
+        if rep.ssim < threshold:
+            # verify the next layers (non-monotone reconstructability)
+            deeper = [eval_layer(m) for m in range(l + 1,
+                                                   min(l + 1 + verify_depth,
+                                                       n + 1))]
+            if all(r.ssim < threshold for r in deeper):
+                return l, reports
+            # a deeper layer is reconstructable again: restart past it
+            l = max(r.layer for r in deeper if r.ssim >= threshold) + 1
+        else:
+            l += 1
+    return n, reports
+
+
+# ----------------------------------------------------------------------------
+# LM-family analogue: token-identity recovery probe
+# ----------------------------------------------------------------------------
+
+def token_recovery_probe(boundary_fn: Callable[[jax.Array], jax.Array],
+                         vocab: int, d_model: int, *, steps: int = 100,
+                         batch: int = 8, seq: int = 32, lr: float = 1e-2,
+                         seed: int = 0) -> float:
+    """Train a linear probe hidden->token-id; returns top-1 recovery acc.
+
+    boundary_fn(tokens) must return the tier-1 boundary hidden states
+    (what an adversary observes when tier-2 runs in the open).
+    """
+    key = jax.random.PRNGKey(seed)
+    w = jnp.zeros((d_model, vocab), jnp.float32)
+
+    @jax.jit
+    def step_fn(w, tokens, hidden):
+        def loss(w_):
+            logits = hidden.astype(jnp.float32) @ w_
+            return L.cross_entropy(logits, tokens, vocab)
+        l, g = jax.value_and_grad(loss)(w)
+        return w - lr * g, l
+
+    for it in range(steps):
+        key, k = jax.random.split(key)
+        tokens = jax.random.randint(k, (batch, seq), 0, vocab)
+        hidden = boundary_fn(tokens)
+        w, _ = step_fn(w, tokens, hidden)
+
+    key, k = jax.random.split(key)
+    tokens = jax.random.randint(k, (batch * 4, seq), 0, vocab)
+    hidden = boundary_fn(tokens)
+    pred = jnp.argmax(hidden.astype(jnp.float32) @ w, axis=-1)
+    return float(jnp.mean(pred == tokens))

@@ -1,0 +1,39 @@
+"""SSIM (Wang et al. 2004) in pure jnp — the paper's reconstruction metric."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _avg_pool_same(x, win: int):
+    """Uniform-window local mean, NHWC, SAME padding."""
+    k = jnp.ones((win, win, 1, 1), x.dtype) / (win * win)
+    c = x.shape[-1]
+    k = jnp.tile(k, (1, 1, 1, c))
+    return jax.lax.conv_general_dilated(
+        x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+def ssim(x, y, *, win: int = 7, data_range: float = 1.0) -> jax.Array:
+    """Mean SSIM over batch. x, y: (B, H, W, C) in [0, data_range]."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mx = _avg_pool_same(x, win)
+    my = _avg_pool_same(y, win)
+    mxx = _avg_pool_same(x * x, win)
+    myy = _avg_pool_same(y * y, win)
+    mxy = _avg_pool_same(x * y, win)
+    vx = mxx - mx * mx
+    vy = myy - my * my
+    cxy = mxy - mx * my
+    s = ((2 * mx * my + c1) * (2 * cxy + c2)
+         / ((mx * mx + my * my + c1) * (vx + vy + c2)))
+    return jnp.mean(s)
+
+
+def ssim_per_image(x, y, *, win: int = 7, data_range: float = 1.0):
+    return jax.vmap(lambda a, b: ssim(a[None], b[None], win=win,
+                                      data_range=data_range))(x, y)

@@ -1,0 +1,168 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-load.
+
+Format: one ``.npz`` per checkpoint (flattened key/value arrays) + a JSON
+manifest (step, config digest, tree structure, mesh shape). Writes go to a
+temp directory that is atomically renamed — a crash mid-write can never
+corrupt the latest checkpoint. ``AsyncCheckpointer`` overlaps serialization
+with the next training step. ``load(..., shardings=...)`` re-lays arrays
+out for a *different* mesh than they were saved from — the elastic-restart
+path (runtime/elastic.py, tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str | Path, step: int, tree, *, meta: Optional[dict] = None,
+         keep: int = 3) -> Path:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:010d}"
+    tmp = Path(tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_"))
+    try:
+        flat = _flatten(tree)
+        arrays = {k: np.asarray(v) for k, v in flat.items()}
+        # npz can't represent ml_dtypes (bfloat16 etc.): store a samesize
+        # integer view and record the true dtype in the manifest
+        dtypes = {}
+        for k, a in list(arrays.items()):
+            if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+                dtypes[k] = a.dtype.name
+                arrays[k] = a.view(np.uint8).reshape(a.shape + (-1,)) \
+                    if a.dtype.itemsize != 2 else a.view(np.uint16)
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays.keys()),
+            "dtypes": dtypes,
+            "treedef": str(jax.tree_util.tree_structure(tree)),
+            "time": time.time(),
+            "meta": meta or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(ckpt_dir.glob("step_*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def load(ckpt_dir: str | Path, tree_like, *, step: Optional[int] = None,
+         shardings=None):
+    """Restore into the structure of ``tree_like``.
+
+    ``shardings``: optional matching pytree of NamedSharding — arrays are
+    placed directly onto the (possibly different) target mesh, which is the
+    reshard-on-load path used for elastic restarts.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints in {ckpt_dir}"
+    path = ckpt_dir / f"step_{step:010d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    flat_like = _flatten(tree_like)
+    assert set(flat_like.keys()) == set(manifest["keys"]), (
+        "checkpoint/tree structure mismatch")
+    flat_sh = _flatten(shardings) if shardings is not None else None
+    dtypes = manifest.get("dtypes", {})
+
+    import ml_dtypes  # jax dependency; bfloat16 et al.
+
+    leaves_by_key = {}
+    for key, like in flat_like.items():
+        arr = data[key]
+        if key in dtypes:
+            true_dt = np.dtype(getattr(ml_dtypes, dtypes[key]))
+            if arr.dtype == np.uint8:
+                arr = arr.view(true_dt).reshape(arr.shape[:-1])
+            else:
+                arr = arr.view(true_dt)
+        if flat_sh is not None:
+            leaves_by_key[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            leaves_by_key[key] = jax.numpy.asarray(arr)
+
+    paths, treedef = zip(*jax.tree_util.tree_flatten_with_path(tree_like)[0]) \
+        if flat_like else ((), None)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    ordered = ["/".join(str(p) for p in path) for path, _ in
+               jax.tree_util.tree_flatten_with_path(tree_like)[0]]
+    return (jax.tree_util.tree_unflatten(
+        treedef, [leaves_by_key[k] for k in ordered]),
+        manifest)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (single in-flight save).
+
+    ``save`` transfers arrays to host synchronously (cheap vs. step time)
+    and serializes on the worker thread; ``wait`` joins before exit or the
+    next save. Failure in the worker is re-raised on the next call.
+    """
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, meta=meta,
+                     keep=self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,60 @@
+"""Elastic scaling: survive device loss by re-meshing + reshard-on-load.
+
+Single-controller JAX cannot hot-swap devices mid-step; the production
+pattern (used by MaxText/Pathways deployments) is checkpoint-restart:
+
+    1. a step deadline or heartbeat miss marks the job degraded
+       (runtime/straggler.py),
+    2. the launcher re-enumerates healthy hosts and picks the largest
+       feasible mesh (``plan_degraded_mesh``),
+    3. the job restarts, loading the latest checkpoint **onto the new
+       mesh** (checkpoint.load(..., shardings=new_plan)) and rescaling
+       the data pipeline.
+
+Everything here is exercised for real in tests/test_elastic.py with fake
+CPU devices: save on a (4,) mesh, "lose" two devices, resume bitwise on a
+(2,) mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCandidate:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    devices_needed: int
+
+
+def plan_degraded_mesh(healthy_devices: int,
+                       prefer_model: int = 16) -> MeshCandidate:
+    """Largest (data, model) mesh that fits the surviving devices.
+
+    Keeps the model axis at the largest power-of-two divisor ≤ prefer_model
+    (TP degree must divide weight dims), spends the rest on data. Batch is
+    rescaled by the launcher to keep per-device batch constant.
+    """
+    assert healthy_devices >= 1
+    model = 1
+    while model * 2 <= min(prefer_model, healthy_devices):
+        model *= 2
+    data = healthy_devices // model
+    return MeshCandidate(shape=(data, model), axes=("data", "model"),
+                         devices_needed=data * model)
+
+
+def remesh(candidate: MeshCandidate, devices: Optional[Sequence] = None):
+    devs = list(devices or jax.devices())[: candidate.devices_needed]
+    import numpy as np
+    arr = np.array(devs).reshape(candidate.shape)
+    return jax.sharding.Mesh(arr, candidate.axes)
+
+
+def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-device batch constant across the re-mesh."""
+    per_dev = max(global_batch // old_data, 1)
+    return per_dev * new_data

@@ -1,0 +1,121 @@
+"""Autoregressive generation: prefill + decode loop, optionally under the
+Origami two-tier protocol (tier-1 blocks run the Slalom blinded-dense
+context *per decode step*; tier-2 and the LM head run open).
+
+This is the LM-serving realization of the paper's partitioned inference:
+the per-token hidden prefix stays blinded/in-enclave while the bulk of the
+network runs on the untrusted accelerator — the KV cache for tier-1 layers
+conceptually lives in the trusted domain (cache rows for layers < p),
+which `tier1_cache_bytes` accounts for against the EPC budget.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import slalom as SL
+from repro.core.blinding import BlindingSpec
+from repro.models import layers as L
+from repro.models import model as M
+
+
+@dataclass
+class GenerationResult:
+    tokens: jax.Array              # (B, prompt+new)
+    telemetry: Optional[SL.Telemetry]
+
+
+def _sample(logits, key, temperature: float, vocab_size: int):
+    logits = logits[..., :vocab_size].astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def generate(params, prompt, cfg: ModelConfig, *, max_new_tokens: int,
+             temperature: float = 0.0, key=None) -> GenerationResult:
+    """Open (non-private) generation for any family with a decode path."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S0 = prompt.shape
+    total = S0 + max_new_tokens
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        batch = {"tokens": prompt}
+        logits, caches = (M.prefill_vlm if cfg.family == "vlm" else M.prefill)(
+            params, batch, cfg, max_seq=total)
+    else:
+        # recurrent families: build state by stepping through the prompt
+        caches = M.init_caches(cfg, B, total)
+        logits = None
+        for t in range(S0):
+            logits, caches = M.decode_step(params, prompt[:, t:t + 1],
+                                           caches, jnp.int32(t), cfg)
+
+    decode = jax.jit(functools.partial(M.decode_step, cfg=cfg))
+    tokens = prompt
+    key, k = jax.random.split(key)
+    nxt = _sample(logits[:, -1], k, temperature, cfg.vocab_size)[:, None]
+    tokens = jnp.concatenate([tokens, nxt], axis=1)
+    for t in range(S0, total - 1):
+        logits, caches = decode(params, tokens[:, -1:], caches,
+                                jnp.int32(t))
+        key, k = jax.random.split(key)
+        nxt = _sample(logits[:, 0], k, temperature, cfg.vocab_size)[:, None]
+        tokens = jnp.concatenate([tokens, nxt], axis=1)
+    return GenerationResult(tokens=tokens, telemetry=None)
+
+
+def generate_origami(params, prompt, cfg: ModelConfig, *,
+                     max_new_tokens: int, partition: Optional[int] = None,
+                     temperature: float = 0.0, session_key=None,
+                     key=None) -> GenerationResult:
+    """Two-tier private generation (dense/moe families).
+
+    Every decode step runs blocks [0, p) under the blinded-dense context
+    and [p, L) open — the per-step analogue of the paper's Fig. 3a flow.
+    """
+    assert cfg.family in ("dense", "moe"), cfg.family
+    p = partition if partition is not None else cfg.origami.tier1_layers
+    key = key if key is not None else jax.random.PRNGKey(0)
+    session_key = (session_key if session_key is not None
+                   else jax.random.PRNGKey(7))
+    ctx = SL.SlalomContext(session_key, BlindingSpec())
+    B, S0 = prompt.shape
+    total = S0 + max_new_tokens
+    caches = M.init_caches(cfg, B, total)
+
+    def tiered_step(params, token, caches, pos, step_key):
+        x = M.embed_tokens_at(params, token, pos, cfg)        # enclave
+        with L.dense_impl(functools.partial(SL.blinded_dense, ctx)):
+            x, caches = M.decode_range(params, x, caches, pos, cfg, 0, p)
+        x, caches = M.decode_range(params, x, caches, pos, cfg, p,
+                                   cfg.num_layers)             # open
+        logits = M.head(params, x, cfg)
+        nxt = _sample(logits[:, 0], step_key, temperature, cfg.vocab_size)
+        return nxt[:, None], caches
+
+    tokens = prompt
+    for t in range(total - 1):
+        feed = tokens[:, t:t + 1] if t < S0 else tokens[:, -1:]
+        key, k = jax.random.split(key)
+        nxt, caches = tiered_step(params, feed, caches, jnp.int32(t), k)
+        if t >= S0 - 1:
+            tokens = jnp.concatenate([tokens, nxt], axis=1)
+    return GenerationResult(tokens=tokens, telemetry=ctx.telemetry)
+
+
+def tier1_cache_bytes(cfg: ModelConfig, batch: int, max_seq: int,
+                      partition: Optional[int] = None) -> int:
+    """KV-cache bytes that must stay in the trusted domain (layers < p)."""
+    p = partition if partition is not None else cfg.origami.tier1_layers
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return p * batch * max_seq * width * 2
+    return p * batch * max_seq * cfg.num_kv_heads * hd * 2 * 2

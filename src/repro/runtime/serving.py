@@ -1,0 +1,109 @@
+"""Private-inference serving loop (the paper's deployment shape).
+
+Flow per Fig. 3a: client attests the enclave (core/attestation), seals its
+input under the session key (core/sealing), the enclave unseals inside the
+trust boundary, the OrigamiExecutor runs tier-1 blinded + tier-2 open, and
+the result is sealed back to the client. Requests are micro-batched with
+padding; the watchdog (runtime/straggler) monitors per-batch latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.attestation import Quote, measure_enclave, verify_quote
+from repro.core.origami import OrigamiExecutor
+from repro.core.sealing import SealedBox, seal, unseal
+from repro.runtime.straggler import StepWatchdog
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    box: SealedBox
+    shape: Tuple[int, ...]
+    session_key: np.ndarray          # client's symmetric key material
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    box: Optional[SealedBox]
+    ok: bool
+    latency_s: float
+
+
+class PrivateInferenceServer:
+    """Batched Origami serving over a model (CNN or LM single-shot)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, mode: str = "origami",
+                 max_batch: int = 8, input_key: str = "images"):
+        self.cfg = cfg
+        self.executor = OrigamiExecutor(cfg, params, mode=mode)
+        self.quote = measure_enclave(cfg, params,
+                                     self.executor.partition)
+        self.max_batch = max_batch
+        self.input_key = input_key
+        self.watchdog = StepWatchdog()
+        self.processed = 0
+
+    # -- client side helpers ---------------------------------------------
+    def attest(self) -> Quote:
+        return self.quote
+
+    @staticmethod
+    def client_seal(key: np.ndarray, x: np.ndarray, rid: int) -> SealedBox:
+        nonce = jnp.asarray([rid & 0xFFFFFFFF, (rid >> 32) & 0xFFFFFFFF],
+                            jnp.uint32)
+        return seal(jnp.asarray(key, jnp.uint32), jnp.asarray(x), nonce)
+
+    @staticmethod
+    def client_open(key: np.ndarray, box: SealedBox,
+                    shape: Tuple[int, ...]) -> np.ndarray:
+        pt, ok = unseal(jnp.asarray(key, jnp.uint32), box, shape)
+        assert bool(ok), "response MAC failed"
+        return np.asarray(pt)
+
+    # -- server side -------------------------------------------------------
+    def serve_batch(self, requests: List[Request]) -> List[Response]:
+        self.watchdog.start_step()
+        t0 = time.monotonic()
+        inputs, valid = [], []
+        for r in requests[: self.max_batch]:
+            pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
+                            r.shape)
+            valid.append(bool(ok))
+            inputs.append(np.asarray(pt))
+        n = len(inputs)
+        if n == 0:
+            return []
+        # pad to max_batch so one compiled executable serves all sizes
+        pad = self.max_batch - n
+        x = np.stack(inputs + [np.zeros_like(inputs[0])] * pad)
+        result = self.executor.infer({self.input_key: jnp.asarray(x)})
+        logits = np.asarray(result.logits, np.float32)[:n]
+        self.watchdog.end_step()
+        out = []
+        dt = time.monotonic() - t0
+        for i, r in enumerate(requests[: self.max_batch]):
+            if not valid[i]:
+                out.append(Response(r.rid, None, False, dt))
+                continue
+            box = seal(jnp.asarray(r.session_key, jnp.uint32),
+                       jnp.asarray(logits[i]),
+                       jnp.asarray([r.rid & 0xFFFFFFFF, 0xEE], jnp.uint32))
+            out.append(Response(r.rid, box, True, dt))
+        self.processed += n
+        return out
+
+    def serve(self, requests: List[Request]) -> List[Response]:
+        responses = []
+        for i in range(0, len(requests), self.max_batch):
+            responses += self.serve_batch(requests[i:i + self.max_batch])
+        return responses

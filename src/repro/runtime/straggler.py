@@ -1,0 +1,64 @@
+"""Straggler mitigation: step deadlines, heartbeats, backup-step policy.
+
+At pod scale the dominant failure modes are (a) a host that dies (handled
+by elastic restart) and (b) a host that *slows down* (thermal, ECC,
+network) and drags every synchronous step with it. The watchdog tracks a
+robust moving estimate of step time and flags steps exceeding
+``deadline_factor``× the P50; after ``tolerance`` consecutive flags the
+policy escalates to the launcher (checkpoint + re-mesh without the slow
+host — the same path as a failure, but proactive).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Optional
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    deadline_factor: float = 3.0
+    warmup_steps: int = 10
+    window: int = 50
+    tolerance: int = 3
+
+
+class StepWatchdog:
+    def __init__(self, cfg: Optional[WatchdogConfig] = None):
+        self.cfg = cfg or WatchdogConfig()
+        self.history: Deque[float] = deque(maxlen=self.cfg.window)
+        self.consecutive_slow = 0
+        self.flagged_steps = 0
+        self._t0: Optional[float] = None
+
+    def start_step(self, now: Optional[float] = None):
+        self._t0 = now if now is not None else time.monotonic()
+
+    def end_step(self, now: Optional[float] = None) -> bool:
+        """Returns True if the step breached its deadline."""
+        assert self._t0 is not None, "end_step without start_step"
+        dt = (now if now is not None else time.monotonic()) - self._t0
+        self._t0 = None
+        slow = False
+        if len(self.history) >= self.cfg.warmup_steps:
+            p50 = sorted(self.history)[len(self.history) // 2]
+            slow = dt > self.cfg.deadline_factor * p50
+        self.history.append(dt)
+        if slow:
+            self.flagged_steps += 1
+            self.consecutive_slow += 1
+        else:
+            self.consecutive_slow = 0
+        return slow
+
+    @property
+    def should_escalate(self) -> bool:
+        """Launcher should checkpoint + re-mesh without the slow host."""
+        return self.consecutive_slow >= self.cfg.tolerance
+
+    @property
+    def p50(self) -> Optional[float]:
+        if not self.history:
+            return None
+        return sorted(self.history)[len(self.history) // 2]

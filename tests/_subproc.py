@@ -1,0 +1,36 @@
+"""Helper: run a python snippet in a subprocess with N fake XLA devices.
+
+Used by tests that need a multi-device mesh without polluting the main
+test process (which must keep exactly 1 device for smoke tests).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 300) -> subprocess.CompletedProcess:
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        "import sys\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+    )
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def check(code: str, n_devices: int = 8, timeout: int = 300) -> str:
+    r = run_with_devices(code, n_devices, timeout)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

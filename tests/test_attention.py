@@ -1,0 +1,121 @@
+"""Attention: flash vs naive (fwd+grad), decode vs forward, MLA absorption."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import attention as A
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("S,H,KH,D", [(128, 4, 2, 16), (256, 9, 3, 8)])
+def test_flash_matches_naive_forward(S, H, KH, D, rng):
+    B = 2
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    flash = A.sdpa(q, k, v, causal=True, q_chunk=32, kv_chunk=64)
+    naive = A.sdpa(q, k, v, causal=True, cost_mode=True)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_grads_match_naive(rng):
+    B, S, H, KH, D = 1, 128, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+
+    def loss(fn):
+        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+
+    g1 = jax.grad(loss(lambda q, k, v: A.sdpa(
+        q, k, v, causal=True, q_chunk=32, kv_chunk=32)), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(lambda q, k, v: A.sdpa(
+        q, k, v, causal=True, cost_mode=True)), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_windowed_attention_masks(rng):
+    B, S, H, D = 1, 64, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    w16 = A.sdpa(q, k, v, causal=True, window=16, cost_mode=True)
+    full = A.sdpa(q, k, v, causal=True, cost_mode=True)
+    # early positions identical (window not binding), late differ
+    np.testing.assert_allclose(np.asarray(w16[:, :16]),
+                               np.asarray(full[:, :16]), rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(w16[:, -1]), np.asarray(full[:, -1]))
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "smollm_135m"])
+def test_gqa_decode_matches_forward(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                cfg.vocab_size)
+    full = np.asarray(M.forward(params, {"tokens": tokens}, cfg).logits,
+                      np.float32)
+    caches = M.init_caches(cfg, B, T)
+    for t in range(T):
+        logits, caches = M.decode_step(params, tokens[:, t:t + 1], caches,
+                                       jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0], jnp.float32),
+                                   full[:, t], rtol=0.05, atol=0.05)
+
+
+def test_prefill_then_decode_continues_forward():
+    cfg = get_smoke("yi_9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 1, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                                cfg.vocab_size)
+    full = np.asarray(
+        M.forward(params, {"tokens": tokens}, cfg).logits, np.float32)
+    logits_p, caches = M.prefill(params, {"tokens": tokens[:, :8]}, cfg,
+                                 max_seq=T)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0], jnp.float32),
+                               full[:, 7], rtol=0.05, atol=0.05)
+    for t in range(8, T):
+        logits, caches = M.decode_step(params, tokens[:, t:t + 1], caches,
+                                       jnp.int32(t), cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0], jnp.float32),
+                                   full[:, t], rtol=0.05, atol=0.05)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    cfg = get_smoke("minicpm3_4b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 1, 6
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model),
+                          jnp.float32)
+    blk = jax.tree.map(lambda t: t[0], params["blocks"])
+    m = cfg.mla
+    width = m.kv_lora_rank + m.qk_rope_head_dim
+    cache = A.KVCache(k=jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, T, width)) * 0.1, v=None)
+    y_abs, _ = A.mla_decode(blk["attn"], x, cache, jnp.int32(T - 1), cfg,
+                            absorbed=True)
+    y_nav, _ = A.mla_decode(blk["attn"], x, cache, jnp.int32(T - 1), cfg,
+                            absorbed=False)
+    np.testing.assert_allclose(np.asarray(y_abs, jnp.float32),
+                               np.asarray(y_nav, jnp.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_mla_forward_matches_prefill():
+    cfg = get_smoke("minicpm3_4b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    full = M.forward(params, {"tokens": tokens}, cfg).logits
+    last, _ = M.prefill(params, {"tokens": tokens}, cfg)
+    np.testing.assert_allclose(np.asarray(last[:, 0], jnp.float32),
+                               np.asarray(full[:, -1], jnp.float32),
+                               rtol=0.05, atol=0.05)

@@ -1,0 +1,104 @@
+"""Checkpointing: atomicity, bitwise resume, async, reshard-on-load."""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import checkpoint as C
+from tests._subproc import check
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32),
+                       "scale": jnp.float32(2.5)}}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    C.save(tmp_path, 3, t)
+    loaded, manifest = C.load(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        C.save(tmp_path, s, t, keep=2)
+    assert C.latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert len(kept) == 2
+
+
+def test_no_partial_checkpoint_on_failure(tmp_path, monkeypatch):
+    t = _tree()
+    C.save(tmp_path, 1, t)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        C.save(tmp_path, 2, t)
+    # step 1 intact, no tmp dirs or step 2 remnants
+    assert C.latest_step(tmp_path) == 1
+    assert not list(Path(tmp_path).glob(".tmp_*"))
+    C.load(tmp_path, jax.tree.map(jnp.zeros_like, t))
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    C.save(tmp_path, 1, _tree())
+    wrong = {"w": jnp.zeros((8, 16))}
+    with pytest.raises(AssertionError):
+        C.load(tmp_path, wrong)
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    ac = C.AsyncCheckpointer(tmp_path)
+    ac.save(7, t, meta={"loss": 1.0})
+    ac.wait()
+    loaded, m = C.load(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    assert m["meta"]["loss"] == 1.0
+    np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                  np.asarray(t["w"]))
+
+
+def test_async_error_propagates(tmp_path):
+    blocker = tmp_path / "file"
+    blocker.write_text("not a dir")          # mkdir under a file must fail
+    ac = C.AsyncCheckpointer(blocker / "ckpt")
+    ac.save(1, _tree())
+    with pytest.raises(BaseException):
+        ac.wait()
+
+
+@pytest.mark.slow
+def test_reshard_on_load_across_meshes(tmp_path):
+    """Save sharded over 4 devices, load sharded over 2 — elastic restart."""
+    out = check(f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.runtime import checkpoint as C
+
+devs = jax.devices()
+mesh4 = jax.sharding.Mesh(np.array(devs[:4]), ("data",))
+mesh2 = jax.sharding.Mesh(np.array(devs[:2]), ("data",))
+x = jnp.arange(32.0).reshape(8, 4)
+xs = jax.device_put(x, NamedSharding(mesh4, P("data", None)))
+C.save({str(tmp_path)!r}, 5, {{"x": xs}})
+target = {{"x": jnp.zeros((8, 4))}}
+sh = {{"x": NamedSharding(mesh2, P("data", None))}}
+loaded, m = C.load({str(tmp_path)!r}, target, shardings=sh)
+assert loaded["x"].sharding.mesh.shape["data"] == 2
+np.testing.assert_array_equal(np.asarray(loaded["x"]), np.asarray(x))
+print("RESHARD_OK")
+""", n_devices=8)
+    assert "RESHARD_OK" in out

@@ -1,0 +1,66 @@
+"""Blind/unblind kernels: Pallas(interpret) vs oracle + roundtrip bounds."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.blind import ref
+from repro.kernels.blind.ops import blind, unblind
+from repro.kernels.limb_matmul.ref import HALF, P
+
+
+@pytest.mark.parametrize("shape", [(7, 40), (37, 300), (4, 17, 23),
+                                   (256, 512)])
+@pytest.mark.parametrize("k_bits", [6, 8, 12])
+def test_blind_pallas_matches_ref(shape, k_bits, rng):
+    x = rng.normal(size=shape).astype(np.float32)
+    r = rng.integers(0, P, size=shape, dtype=np.int32)
+    b_ref = np.asarray(ref.blind_ref(jnp.asarray(x), jnp.asarray(r), k_bits))
+    b_pl = np.asarray(blind(jnp.asarray(x), jnp.asarray(r), k_bits,
+                            impl="interpret"))
+    np.testing.assert_array_equal(b_ref, b_pl)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_unblind_pallas_matches_ref(dtype, rng):
+    y = rng.integers(0, P, size=(33, 130), dtype=np.int32)
+    u = rng.integers(0, P, size=(33, 130), dtype=np.int32)
+    got = np.asarray(unblind(jnp.asarray(y), jnp.asarray(u), 10,
+                             out_dtype=dtype, impl="interpret"),
+                     np.float32)
+    want = np.asarray(ref.unblind_ref(jnp.asarray(y), jnp.asarray(u), 10,
+                                      dtype), np.float32)
+    np.testing.assert_allclose(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 14), st.integers(0, 2 ** 31 - 1))
+def test_blind_unblind_roundtrip_bound(k_bits, seed):
+    """unblind(blind(x, r), r) recovers x to quantization precision."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(16, 32)) * 0.5).astype(np.float32)
+    r = rng.integers(0, P, size=x.shape, dtype=np.int32)
+    b = ref.blind_ref(jnp.asarray(x), jnp.asarray(r), k_bits)
+    back = np.asarray(ref.unblind_ref(b, jnp.asarray(r), k_bits))
+    assert np.abs(back - x).max() <= 2.0 ** (-k_bits - 1) + 1e-7
+
+
+def test_blinded_values_uniform(rng):
+    """One-time-pad property: blinded output is ~uniform over Z_p whatever
+    the input (KS-style coarse bin test)."""
+    r = rng.integers(0, P, size=(200_000,), dtype=np.int32)
+    for x in (np.zeros(200_000, np.float32),
+              np.full(200_000, 0.123, np.float32),
+              rng.normal(size=200_000).astype(np.float32)):
+        b = np.asarray(ref.blind_ref(jnp.asarray(x), jnp.asarray(r), 8),
+                       np.int64)
+        hist, _ = np.histogram(b, bins=16, range=(0, P))
+        expected = len(b) / 16
+        chi2 = np.sum((hist - expected) ** 2 / expected)
+        assert chi2 < 80, chi2          # 15 dof, generous bound
+
+
+def test_quantize_clips_to_field():
+    x = jnp.asarray([1e9, -1e9, 0.0], jnp.float32)
+    q = np.asarray(ref.quantize(x, 8))
+    assert q.max() <= HALF and q.min() >= -HALF

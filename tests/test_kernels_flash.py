@@ -1,0 +1,60 @@
+"""Pallas flash-attention kernel vs oracle: shape/dtype/block sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+@pytest.mark.parametrize("B,S,H,KH,D", [
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 512, 4, 4, 128),     # MHA, MXU-aligned D
+    (2, 128, 6, 3, 32),      # odd head count
+])
+def test_flash_matches_ref(B, S, H, KH, D, rng):
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                                     impl="interpret"))
+    want = np.asarray(mha_ref(q, k, v, causal=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128),
+                                   (256, 256)])
+def test_flash_block_sweep(bq, bk, rng):
+    B, S, H, KH, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                                     impl="interpret"))
+    want = np.asarray(mha_ref(q, k, v, causal=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_dtypes(dtype, tol, rng):
+    B, S, H, KH, D = 1, 128, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), dtype)
+    got = np.asarray(flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                                     impl="interpret"), np.float32)
+    want = np.asarray(mha_ref(q, k, v, causal=True), np.float32)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_flash_non_causal(rng):
+    B, S, H, KH, D = 1, 128, 2, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                                     impl="interpret"))
+    want = np.asarray(mha_ref(q, k, v, causal=False))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,97 @@
+"""Limb-matmul kernel: Pallas(interpret) vs pure-jnp oracle vs int64 truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.limb_matmul import ref
+from repro.kernels.limb_matmul.ops import field_matmul
+
+
+def _int64_oracle(x, w):
+    return ((x.astype(np.int64) @ w.astype(np.int64)) % ref.P).astype(
+        np.int32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-ref.HALF, ref.HALF))
+def test_limb_roundtrip_property(v):
+    s = jnp.asarray([v], jnp.int32)
+    back = ref.from_limbs(ref.to_limbs(s))
+    assert int(back[0]) == v
+
+
+def test_limb_roundtrip_bulk(rng):
+    s = rng.integers(-ref.HALF, ref.HALF + 1, size=(200_000,),
+                     dtype=np.int32)
+    back = np.asarray(ref.from_limbs(ref.to_limbs(jnp.asarray(s))))
+    np.testing.assert_array_equal(back, s)
+
+
+def test_limb_digits_in_int8_range(rng):
+    s = rng.integers(-ref.HALF, ref.HALF + 1, size=(100_000,),
+                     dtype=np.int32)
+    l = np.asarray(ref.to_limbs(jnp.asarray(s)))
+    assert l.dtype == np.int8
+
+
+def test_signed_canonical_roundtrip(rng):
+    v = rng.integers(0, ref.P, size=(10_000,), dtype=np.int32)
+    back = np.asarray(ref.from_signed(ref.to_signed(jnp.asarray(v))))
+    np.testing.assert_array_equal(back, v)
+
+
+def test_mod_mul_pow256():
+    y = jnp.asarray([0, 1, ref.P - 1, 12345], jnp.int32)
+    for k in range(5):
+        got = np.asarray(ref.mod_mul_pow256(y, k))
+        want = (np.asarray(y, np.int64) * (256 ** k)) % ref.P
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 300), st.integers(1, 60),
+       st.integers(0, 2 ** 31 - 1))
+def test_ref_matmul_matches_int64(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, ref.P, size=(m, k), dtype=np.int32)
+    w = rng.integers(0, ref.P, size=(k, n), dtype=np.int32)
+    got = np.asarray(ref.field_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, _int64_oracle(x, w))
+
+
+@pytest.mark.parametrize("shape", [
+    (8, 16, 8),              # tiny (ref path)
+    (128, 256, 128),         # single block
+    (256, 1024, 256),        # exactly one kernel tile
+    (300, 1500, 260),        # padding on all dims
+    (512, 2048, 384),        # multi-tile grid
+])
+def test_pallas_interpret_matches_oracle(shape, rng):
+    m, k, n = shape
+    x = rng.integers(0, ref.P, size=(m, k), dtype=np.int32)
+    w = rng.integers(0, ref.P, size=(k, n), dtype=np.int32)
+    got = np.asarray(field_matmul(jnp.asarray(x), jnp.asarray(w),
+                                  impl="interpret"))
+    np.testing.assert_array_equal(got, _int64_oracle(x, w))
+
+
+def test_pallas_block_shape_sweep(rng):
+    m, k, n = 256, 2048, 256
+    x = rng.integers(0, ref.P, size=(m, k), dtype=np.int32)
+    w = rng.integers(0, ref.P, size=(k, n), dtype=np.int32)
+    want = _int64_oracle(x, w)
+    for bm, bn, bk in [(128, 128, 512), (256, 256, 1024), (128, 256, 2048)]:
+        got = np.asarray(field_matmul(jnp.asarray(x), jnp.asarray(w),
+                                      impl="interpret", bm=bm, bn=bn, bk=bk))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_extreme_field_values():
+    x = jnp.asarray([[0, 1, ref.P - 1, ref.HALF, ref.HALF + 1]], jnp.int32)
+    w = jnp.asarray([[ref.P - 1], [1], [ref.P - 1], [ref.HALF], [2]],
+                    jnp.int32)
+    got = np.asarray(field_matmul(x, w, impl="ref"))
+    want = _int64_oracle(np.asarray(x), np.asarray(w))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,117 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+configs, one forward + one train step on CPU, shape and finiteness checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.configs.base import TrainConfig
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            k, (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            k, (B, cfg.vision_seq_len, cfg.d_model), jnp.float32) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    out = jax.jit(lambda p, b: M.forward(p, b, cfg))(params, _batch(cfg, B, S))
+    lg = np.asarray(out.logits, np.float32)
+    assert lg.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(lg).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_smoke(arch)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    p2, o2, metrics = step(params, opt, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(p2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_all_archs(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    caches = M.init_caches(cfg, B, S)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                             cfg.vocab_size)
+    logits, c2 = jax.jit(
+        lambda p, t, c: M.decode_step(p, t, c, jnp.int32(0), cfg))(
+        params, tok, caches)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert jax.tree.structure(c2) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch", ARCHS + ["vgg16", "vgg19"])
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact published dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "qwen2_5_14b": (48, 5120, 40, 8, 13824, 152064),
+        "yi_9b": (48, 4096, 32, 4, 11008, 64000),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+        "smollm_135m": (30, 576, 9, 3, 1536, 49152),
+        "qwen3_moe_235b": (94, 4096, 64, 4, 1536, 151936),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2_1_2b": (38, 2048, 32, 32, 8192, 32000),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "llama3_2_vision_11b": (40, 4096, 32, 8, 14336, 128256),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    if arch in expect:
+        L, d, h, kv, ff, v = expect[arch]
+        assert cfg.num_layers == L and cfg.d_model == d
+        assert cfg.num_heads == h and cfg.num_kv_heads == kv
+        assert cfg.d_ff == ff and cfg.vocab_size == v
+    else:
+        assert cfg.family == "cnn" and cfg.image_size == 224
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3_moe_235b")
+    total = M.count_params_analytic(cfg)
+    active = M.active_params_analytic(cfg)
+    assert 230e9 < total < 240e9            # "235B"
+    assert 20e9 < active < 24e9             # "A22B"
+
+
+def test_loss_decreases_quickly_on_tiny_model():
+    cfg = get_smoke("smollm_135m")
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=30)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg, B=4, S=32, seed=3)  # overfit one batch
+    losses = []
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses

@@ -1,0 +1,137 @@
+"""Origami executor: mode equivalence, partitioning semantics, trust model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.core.origami import MODES, OrigamiExecutor
+from repro.core.trust import EnclaveSim
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(
+        jax.random.PRNGKey(1), (2, cfg.image_size, cfg.image_size, 3)) * 0.5}
+    return cfg, params, batch
+
+
+def test_non_blinded_modes_exact(vgg):
+    cfg, params, batch = vgg
+    ref = np.asarray(OrigamiExecutor(cfg, params, mode="open")
+                     .infer(batch).logits, np.float32)
+    for mode in ("enclave", "split"):
+        got = np.asarray(OrigamiExecutor(cfg, params, mode=mode)
+                         .infer(batch).logits, np.float32)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_blinded_modes_close(vgg):
+    cfg, params, batch = vgg
+    ref = np.asarray(OrigamiExecutor(cfg, params, mode="open")
+                     .infer(batch).logits, np.float32)
+    for mode in ("origami", "slalom"):
+        got = np.asarray(OrigamiExecutor(cfg, params, mode=mode)
+                         .infer(batch).logits, np.float32)
+        rel = np.abs(got - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert rel < 0.05, (mode, rel)    # quantization-level error only
+
+
+def test_origami_blinds_fewer_layers_than_slalom(vgg):
+    cfg, params, batch = vgg
+    o = OrigamiExecutor(cfg, params, mode="origami")
+    s = OrigamiExecutor(cfg, params, mode="slalom")
+    o.infer(batch)
+    s.infer(batch)
+    assert 0 < o.telemetry.calls < s.telemetry.calls
+    assert o.telemetry.blinded_bytes < s.telemetry.blinded_bytes
+
+
+def test_boundary_is_tier1_output(vgg):
+    cfg, params, batch = vgg
+    from repro.models import vgg as V
+    p = cfg.origami.tier1_layers
+    r = OrigamiExecutor(cfg, params, mode="split").infer(batch)
+    want = V.apply_layer_range(params, batch["images"], cfg, 0, p)
+    np.testing.assert_allclose(np.asarray(r.boundary, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lm_origami_matches_quantization_error():
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab_size)}
+    # "split" runs the same tier-1 prefix in plain fp — its boundary is the
+    # oracle for origami's blinded tier-1 boundary.
+    ref = OrigamiExecutor(cfg, params, mode="split").infer(batch)
+    got = OrigamiExecutor(cfg, params, mode="origami").infer(batch)
+    b_ref = np.asarray(ref.boundary, np.float32)
+    b_got = np.asarray(got.boundary, np.float32)
+    rel = np.abs(b_got - b_ref).max() / (np.abs(b_ref).max() + 1e-9)
+    assert rel < 0.25, rel
+
+
+def test_partition_bounds():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ex = OrigamiExecutor(cfg, params, mode="origami", partition=2)
+    assert ex.partition == 2
+    batch = {"images": jnp.zeros((1, cfg.image_size, cfg.image_size, 3))}
+    ex.infer(batch)
+    assert ex.telemetry.calls == 2        # conv8, conv8 before pool
+
+
+# ---------------------------------------------------------------------------
+# cost/residency model vs the paper's published numbers
+# ---------------------------------------------------------------------------
+
+PAPER = {
+    "vgg16": {"slalom_x": 10.0, "origami_x": 12.7, "resident_baseline": 86,
+              "resident_split6": 29, "resident_privacy": 39,
+              "recovery_baseline_ms": 201},
+    "vgg19": {"slalom_x": 11.0, "origami_x": 15.1},
+}
+
+
+@pytest.mark.parametrize("arch", ["vgg16", "vgg19"])
+def test_cost_model_reproduces_paper_speedups(arch):
+    cfg = get_config(arch)
+    sim = EnclaveSim(cfg, device="gpu")
+    cs = sim.all_strategies(6)
+    base = cs["enclave"].runtime_s
+    slalom_x = base / cs["slalom"].runtime_s
+    origami_x = base / cs["origami"].runtime_s
+    want = PAPER[arch]
+    assert abs(slalom_x - want["slalom_x"]) / want["slalom_x"] < 0.15
+    assert abs(origami_x - want["origami_x"]) / want["origami_x"] < 0.15
+    assert origami_x > slalom_x > base / cs["split"].runtime_s
+
+
+def test_cost_model_reproduces_paper_memory():
+    cfg = get_config("vgg16")
+    sim = EnclaveSim(cfg, device="gpu")
+    cs = sim.all_strategies(6)
+    want = PAPER["vgg16"]
+    assert abs(cs["enclave"].enclave_resident_mb
+               - want["resident_baseline"]) < 12
+    assert abs(cs["split"].enclave_resident_mb
+               - want["resident_split6"]) < 6
+    assert abs(cs["origami"].enclave_resident_mb
+               - want["resident_privacy"]) < 6
+    assert (cs["origami"].enclave_resident_mb
+            == cs["slalom"].enclave_resident_mb)   # paper Table I
+
+
+def test_recovery_time_ordering():
+    cfg = get_config("vgg16")
+    sim = EnclaveSim(cfg, device="gpu")
+    cs = sim.all_strategies(6)
+    assert cs["split"].recovery_s < cs["origami"].recovery_s \
+        < cs["enclave"].recovery_s
+    assert abs(cs["enclave"].recovery_s * 1e3
+               - PAPER["vgg16"]["recovery_baseline_ms"]) < 30

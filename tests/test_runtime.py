@@ -1,0 +1,119 @@
+"""Elastic planning, straggler watchdog, gradient compression, pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.parallel import compression as GC
+from repro.runtime.elastic import plan_degraded_mesh, rescale_batch
+from repro.runtime.straggler import StepWatchdog, WatchdogConfig
+
+
+# -- elastic -----------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 600))
+def test_degraded_mesh_fits_and_is_maximal_pow2_model(n):
+    c = plan_degraded_mesh(n)
+    assert c.devices_needed <= n
+    data, model = c.shape
+    assert data * model == c.devices_needed
+    assert model & (model - 1) == 0            # power of two
+    assert model <= 16
+
+
+def test_degraded_mesh_full_pod():
+    c = plan_degraded_mesh(256)
+    assert c.shape == (16, 16)
+
+
+def test_rescale_batch_keeps_per_device():
+    assert rescale_batch(256, old_data=16, new_data=12) == 192
+    assert rescale_batch(8, old_data=8, new_data=4) == 4
+
+
+# -- straggler ---------------------------------------------------------------
+
+def test_watchdog_flags_slow_steps():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=2.0, warmup_steps=5,
+                                     tolerance=3))
+    t = 0.0
+    for i in range(20):
+        wd.start_step(now=t)
+        t += 0.1
+        assert wd.end_step(now=t) is False
+    for i in range(3):
+        wd.start_step(now=t)
+        t += 0.5                                # 5x p50
+        assert wd.end_step(now=t) is True
+    assert wd.should_escalate
+
+
+def test_watchdog_resets_on_recovery():
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=2.0, warmup_steps=3,
+                                     tolerance=3))
+    t = 0.0
+    for dt in [0.1] * 10 + [0.5, 0.5, 0.1, 0.5, 0.5]:
+        wd.start_step(now=t)
+        t += dt
+        wd.end_step(now=t)
+    assert not wd.should_escalate
+
+
+# -- gradient compression ------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_int8_bounds(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.01, 100),
+                    jnp.float32)
+    q, s = GC.quantize_int8(x)
+    back = GC.dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of EF-compressed grads tracks the sum of raw grads."""
+    rng = np.random.default_rng(0)
+    g_total = np.zeros(32, np.float32)
+    c_total = np.zeros(32, np.float32)
+    res = {"g": jnp.zeros(32, jnp.float32)}
+    for step in range(50):
+        g = rng.normal(size=32).astype(np.float32) * 0.1
+        comp, res2 = GC.apply_error_feedback({"g": jnp.asarray(g)}, res)
+        res = res2
+        g_total += g
+        c_total += np.asarray(comp["g"])
+    resid = np.abs(np.asarray(res["g"]))
+    np.testing.assert_allclose(c_total + np.asarray(res["g"]), g_total,
+                               rtol=1e-4, atol=1e-4)
+    assert resid.max() < 0.01               # residual stays bounded
+
+
+# -- data pipeline --------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    p1 = TokenPipeline(cfg)
+    p2 = TokenPipeline(cfg)
+    np.testing.assert_array_equal(p1.batch(5)["tokens"],
+                                  p2.batch(5)["tokens"])
+    assert not np.array_equal(p1.batch(5)["tokens"], p1.batch(6)["tokens"])
+
+
+def test_pipeline_shards_disjoint_and_cover():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    full = TokenPipeline(cfg, shard=0, num_shards=1).batch(3)["tokens"]
+    parts = [TokenPipeline(cfg, shard=s, num_shards=4).batch(3)["tokens"]
+             for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_pipeline_tokens_in_vocab():
+    cfg = DataConfig(vocab_size=50, seq_len=64, global_batch=2)
+    t = TokenPipeline(cfg).batch(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 50

@@ -1,0 +1,65 @@
+"""Sealed channel + attestation simulation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.core.attestation import measure_enclave, verify_quote
+from repro.core.sealing import seal, unseal
+from repro.models import model as M
+
+
+def _key(seed=7):
+    return jax.random.key_data(jax.random.PRNGKey(seed))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_seal_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    box = seal(_key(), x, jnp.asarray([seed & 0xFFFF, 2], jnp.uint32))
+    pt, ok = unseal(_key(), box, x.shape)
+    assert bool(ok)
+    np.testing.assert_array_equal(np.asarray(pt), np.asarray(x))
+
+
+def test_tamper_detection(rng):
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    box = seal(_key(), x, jnp.asarray([1, 2], jnp.uint32))
+    bad = box._replace(ciphertext=box.ciphertext.at[0, 0].add(1))
+    _, ok = unseal(_key(), bad, x.shape)
+    assert not bool(ok)
+
+
+def test_wrong_key_garbles(rng):
+    x = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    box = seal(_key(1), x, jnp.asarray([1, 2], jnp.uint32))
+    pt, ok = unseal(_key(2), box, x.shape)
+    assert not bool(ok)
+    assert not np.allclose(np.asarray(pt), np.asarray(x))
+
+
+def test_nonce_changes_ciphertext(rng):
+    x = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    b1 = seal(_key(), x, jnp.asarray([1, 0], jnp.uint32))
+    b2 = seal(_key(), x, jnp.asarray([2, 0], jnp.uint32))
+    assert not np.array_equal(np.asarray(b1.ciphertext),
+                              np.asarray(b2.ciphertext))
+
+
+def test_quote_stable_and_sensitive():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    q1 = measure_enclave(cfg, params, 3)
+    q2 = measure_enclave(cfg, params, 3)
+    assert verify_quote(q1, q2)
+    q3 = measure_enclave(cfg, params, 4)       # different partition
+    assert not verify_quote(q1, q3)
+    params2 = M.init_params(cfg, jax.random.PRNGKey(1))
+    q4 = measure_enclave(cfg, params2, 3)      # different weights
+    assert q4.measurement != q1.measurement

@@ -1,0 +1,84 @@
+"""Sharding plans: spec structure, conflict resolution, divisibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import MeshConfig
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def test_spec_dedup_first_wins():
+    defs = {"w": L.ParamDef((8, 16, 32), "scaled",
+                            ("experts", "embed", "ffn"))}
+    rules = {"experts": "model", "embed": "data", "ffn": "model"}
+    specs = L.param_specs(defs, rules)
+    assert specs["w"] == P("model", "data", None)
+
+
+def test_spec_divisibility_fallback():
+    defs = {"w": L.ParamDef((6, 2728, 2048), "scaled",
+                            ("layers", "ffn", "embed"))}
+    rules = {"layers": None, "ffn": "model", "embed": "data"}
+    specs = L.param_specs(defs, rules, {"model": 16, "data": 16})
+    assert specs["w"] == P(None, None, "data")      # 2728 % 16 != 0
+
+
+def test_spec_tuple_axes():
+    defs = {"w": L.ParamDef((32, 64), "scaled", ("embed", "ffn"))}
+    rules = {"embed": ("pod", "data"), "ffn": "model"}
+    specs = L.param_specs(defs, rules, {"pod": 2, "data": 16, "model": 16})
+    # 32 % (2*16) == 0 -> ("pod","data"); 64 % 16 == 0 -> "model"
+    assert specs["w"] == P(("pod", "data"), "model")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_tree_structure_matches_params(arch):
+    cfg = get_config(arch)
+    defs = M.model_defs(cfg)
+    rules = {"embed": "data", "ffn": "model", "heads_flat": "model",
+             "kv_flat": "model", "vocab": "model", "experts": "model",
+             "lora": "model", "layers": None}
+    specs = L.param_specs(defs, rules, {"model": 16, "data": 16})
+    abstract = M.abstract_params(cfg)
+    assert jax.tree.structure(specs) == jax.tree.structure(abstract)
+    # every spec's sharded dims divide the corresponding shape
+    for s, a in zip(jax.tree.leaves(specs,
+                                    is_leaf=lambda x: isinstance(x, P)),
+                    jax.tree.leaves(abstract)):
+        for dim, ax in zip(a.shape, tuple(s) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for x in axes:
+                n *= {"model": 16, "data": 16}[x]
+            assert dim % n == 0, (arch, a.shape, s)
+
+
+def test_make_plan_batch_axes():
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import make_plan
+    mesh = make_host_mesh(1, 1)
+    for mp in (False, True):
+        mcfg = MeshConfig(multi_pod=mp)
+        for name, shape in SHAPES.items():
+            plan = make_plan(get_config("yi_9b"), shape, mesh, mcfg,
+                             "train" if shape.kind == "train" else "serve")
+            if shape.global_batch == 1:
+                assert plan.batch_axes == ()
+                assert "model" in plan.seq_axes
+            else:
+                n = 32 if mp else 16
+                assert shape.global_batch % n == 0 or plan.batch_axes == (
+                    "data",)
+
+
+def test_act_rules_constrain_noop_outside_context():
+    from repro.parallel.act_sharding import constrain
+    x = jnp.ones((4, 4))
+    np.testing.assert_array_equal(np.asarray(constrain(x, "batch", "seq")),
+                                  np.asarray(x))

@@ -1,0 +1,95 @@
+"""Slalom protocol invariants: exactness of blinding, error bounds, telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blinding as B
+from repro.core import slalom as SL
+from repro.core.blinding import BlindingSpec
+from repro.kernels.limb_matmul.ops import field_matmul
+from repro.kernels.limb_matmul.ref import P, to_signed
+
+
+def _ctx(seed=0):
+    return SL.SlalomContext(jax.random.PRNGKey(seed), BlindingSpec())
+
+
+def test_blinding_is_exact(rng):
+    """Protocol invariant: blinded-offload result equals the *unblinded*
+    quantized matmul bit-for-bit (the pad cancels exactly in Z_p)."""
+    spec = BlindingSpec()
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 32)).astype(np.float32) / 8
+    w_q, w_scale = B.quantize_weight(jnp.asarray(w), spec)
+    x_scale = np.abs(x).max()
+    from repro.kernels.blind.ref import quantize
+    from repro.kernels.limb_matmul.ref import from_signed
+    x_q = from_signed(quantize(jnp.asarray(x / x_scale), spec.k_act))
+    plain = field_matmul(x_q, w_q)                          # no blinding
+    key = jax.random.PRNGKey(42)
+    r = B.blinding_stream(key, x.shape)
+    u = B.unblinding_factor(r, w_q)
+    x_b = B.blind_activations(jnp.asarray(x / x_scale), r, spec)
+    y_b = field_matmul(x_b, w_q)
+    unblinded = jnp.mod(y_b - u + P, P)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(unblinded))
+
+
+@pytest.mark.parametrize("t,din,dout", [(16, 64, 32), (32, 128, 96)])
+def test_blinded_dense_error_bound(t, din, dout, rng):
+    x = rng.normal(size=(t, din)).astype(np.float32)
+    w = (rng.normal(size=(din, dout)) / np.sqrt(din)).astype(np.float32)
+    got = np.asarray(SL.blinded_dense(_ctx(), {"w": jnp.asarray(w)},
+                                      jnp.asarray(x)), np.float32)
+    want = x @ w
+    # absmax quantization: per-output error ~ sqrt(K) * step * scales
+    spec = BlindingSpec()
+    bound = (np.sqrt(din) * (np.abs(x).max() * np.abs(w).max())
+             * (2.0 ** -spec.k_act + 2.0 ** -spec.k_w))
+    assert np.abs(got - want).max() < bound, (np.abs(got - want).max(),
+                                              bound)
+
+
+def test_blinded_dense_with_bias(rng):
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    w = (rng.normal(size=(32, 8)) / 6).astype(np.float32)
+    b = rng.normal(size=(8,)).astype(np.float32)
+    got = np.asarray(SL.blinded_dense(
+        _ctx(), {"w": jnp.asarray(w), "b": jnp.asarray(b)}, jnp.asarray(x)))
+    want = x @ w + b
+    assert np.abs(got - want).max() < 0.05
+
+
+def test_blinded_conv_matches_conv(rng):
+    from repro.models import layers as L
+    x = rng.normal(size=(2, 8, 8, 3)).astype(np.float32)
+    p = {"w": jnp.asarray(rng.normal(size=(3, 3, 3, 8)) / 5,
+                          jnp.float32),
+         "b": jnp.zeros((8,), jnp.float32)}
+    got = np.asarray(SL.blinded_conv2d(_ctx(), p, jnp.asarray(x)))
+    want = np.asarray(L.conv2d(p, jnp.asarray(x)))
+    assert np.abs(got - want).max() < 0.05 * max(1.0, np.abs(want).max())
+
+
+def test_stream_determinism_and_layer_separation():
+    ctx1, ctx2 = _ctx(7), _ctx(7)
+    k1a, k1b = ctx1.next_layer_key(), ctx1.next_layer_key()
+    k2a = ctx2.next_layer_key()
+    r1a = B.blinding_stream(k1a, (64,))
+    r1b = B.blinding_stream(k1b, (64,))
+    r2a = B.blinding_stream(k2a, (64,))
+    np.testing.assert_array_equal(np.asarray(r1a), np.asarray(r2a))
+    assert not np.array_equal(np.asarray(r1a), np.asarray(r1b))
+
+
+def test_telemetry_accounting(rng):
+    ctx = _ctx()
+    x = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 24)) / 4, jnp.float32)
+    SL.blinded_dense(ctx, {"w": w}, x)
+    t = ctx.telemetry
+    assert t.calls == 1
+    assert t.blinded_bytes == 4 * 8 * 16 * 4
+    assert t.returned_bytes == 4 * 8 * 24 * 4
+    assert t.offloaded_flops == 2 * 32 * 16 * 24

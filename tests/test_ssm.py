@@ -1,0 +1,113 @@
+"""SSM invariants: chunked recurrence == sequential oracle; decode == slice."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.models import ssm as S
+
+
+def _naive_recurrence(q, k, v, log_a, b, normalize=False, den_floor=None):
+    """Sequential oracle for chunked_linear_recurrence."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    C = np.zeros((B, H, dk, dv), np.float64)
+    n = np.zeros((B, H, dk), np.float64)
+    ys = np.zeros((B, T, H, dv), np.float64)
+    dens = np.zeros((B, T, H), np.float64)
+    a = np.exp(np.asarray(log_a, np.float64))
+    for t in range(T):
+        C = a[:, t, :, None, None] * C + b[:, t, :, None, None] * \
+            np.einsum("bhd,bhe->bhde", k[:, t], v[:, t])
+        n = a[:, t, :, None] * n + b[:, t, :, None] * k[:, t]
+        ys[:, t] = np.einsum("bhd,bhde->bhe", q[:, t], C)
+        dens[:, t] = np.einsum("bhd,bhd->bh", q[:, t], n)
+    if normalize:
+        floor = den_floor if den_floor is not None else 1e-6
+        ys = ys / np.maximum(np.abs(dens), floor)[..., None]
+    return ys
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 4), st.sampled_from([8, 16, 32]),
+       st.integers(0, 2 ** 31 - 1))
+def test_chunked_recurrence_matches_sequential(Bsz, H, T, seed):
+    rng = np.random.default_rng(seed)
+    dk, dv, chunk = 4, 6, 8
+    q = rng.normal(size=(Bsz, T, H, dk)).astype(np.float32)
+    k = rng.normal(size=(Bsz, T, H, dk)).astype(np.float32)
+    v = rng.normal(size=(Bsz, T, H, dv)).astype(np.float32)
+    log_a = -np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32)
+    b = np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32)
+    got, (Cf, nf) = S.chunked_linear_recurrence(
+        *map(jnp.asarray, (q, k, v, log_a, b)), chunk=chunk)
+    want = _naive_recurrence(q, k, v, log_a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_recurrence_normalized(rng):
+    Bsz, T, H, dk, dv = 2, 32, 2, 4, 4
+    q = rng.normal(size=(Bsz, T, H, dk)).astype(np.float32)
+    k = rng.normal(size=(Bsz, T, H, dk)).astype(np.float32)
+    v = rng.normal(size=(Bsz, T, H, dv)).astype(np.float32)
+    log_a = -np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32) * 0.1
+    b = np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32)
+    got, _ = S.chunked_linear_recurrence(
+        *map(jnp.asarray, (q, k, v, log_a, b)), chunk=8, normalize=True)
+    want = _naive_recurrence(q, k, v, log_a, b, normalize=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+def test_final_state_consistency(rng):
+    """Final carry equals running the step function T times."""
+    Bsz, T, H, dk, dv = 1, 16, 2, 4, 4
+    args = [rng.normal(size=(Bsz, T, H, d)).astype(np.float32)
+            for d in (dk, dk, dv)]
+    log_a = -np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32)
+    b = np.abs(rng.normal(size=(Bsz, T, H))).astype(np.float32)
+    _, (Cf, nf) = S.chunked_linear_recurrence(
+        *map(jnp.asarray, (*args, log_a, b)), chunk=8)
+    state = (jnp.zeros((Bsz, H, dk, dv)), jnp.zeros((Bsz, H, dk)))
+    for t in range(T):
+        _, state = S.linear_recurrence_step(
+            jnp.asarray(args[0][:, t]), jnp.asarray(args[1][:, t]),
+            jnp.asarray(args[2][:, t]), jnp.exp(jnp.asarray(log_a[:, t])),
+            jnp.asarray(b[:, t]), state)
+    np.testing.assert_allclose(np.asarray(Cf), np.asarray(state[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["zamba2_1_2b", "xlstm_1_3b"])
+def test_ssm_decode_matches_forward(arch):
+    """Teacher-forced forward logits == step-by-step decode logits."""
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    Bsz, T = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (Bsz, T), 0,
+                                cfg.vocab_size)
+    full = np.asarray(M.forward(params, {"tokens": tokens}, cfg).logits,
+                      np.float32)
+    caches = M.init_caches(cfg, Bsz, T)
+    outs = []
+    for t in range(T):
+        logits, caches = M.decode_step(params, tokens[:, t:t + 1], caches,
+                                       jnp.int32(t), cfg)
+        outs.append(np.asarray(logits, np.float32)[:, 0])
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=0.06, atol=0.06)
+
+
+def test_causal_conv_cache_consistency(rng):
+    w = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 12, 6)), jnp.float32)
+    full, _ = S.causal_conv1d(w, x)
+    cache = jnp.zeros((2, 3, 6))
+    outs = []
+    for t in range(12):
+        y, cache = S.causal_conv1d(w, x[:, t:t + 1], cache=cache)
+        outs.append(y[:, 0])
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)

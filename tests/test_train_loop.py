@@ -1,0 +1,75 @@
+"""End-to-end train loop: convergence, bitwise resume, microbatch equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import TrainConfig
+from repro.launch.steps import make_train_step
+from repro.launch.train import train
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def test_smollm_loss_decreases(tmp_path):
+    cfg = get_smoke("smollm_135m")
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=5, total_steps=30)
+    _, _, losses = train(cfg, tcfg, batch=4, seq=64, steps=30,
+                         ckpt_dir=None, log_every=0)
+    assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
+
+
+def test_resume_is_bitwise(tmp_path):
+    cfg = get_smoke("smollm_135m")
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    # run 10 straight
+    pA, oA, _ = train(cfg, tcfg, batch=2, seq=32, steps=10, ckpt_dir=None,
+                      log_every=0)
+    # run 5, checkpoint, resume to 10
+    d = tmp_path / "ck"
+    train(cfg, tcfg, batch=2, seq=32, steps=5, ckpt_dir=str(d),
+          ckpt_every=5, log_every=0)
+    pB, oB, _ = train(cfg, tcfg, batch=2, seq=32, steps=10,
+                      ckpt_dir=str(d), ckpt_every=100, log_every=0)
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg = get_smoke("yi_9b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    outs = {}
+    for m in (1, 2, 4):
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1,
+                           total_steps=10, microbatches=m)
+        opt = adamw.init(params, tcfg)
+        p2, _, metrics = jax.jit(make_train_step(cfg, tcfg))(params, opt,
+                                                             batch)
+        outs[m] = (jax.tree.leaves(p2), float(metrics["loss"]))
+    for m in (2, 4):
+        assert abs(outs[m][1] - outs[1][1]) < 5e-2
+        for a, b in zip(outs[1][0], outs[m][0]):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=0.1, atol=2e-2)
+
+
+def test_optimizer_bf16_moments_close_to_fp32():
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    results = {}
+    for dt in ("float32", "bfloat16"):
+        tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1,
+                           total_steps=10, moment_dtype=dt)
+        opt = adamw.init(params, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        p, o = params, opt
+        for _ in range(3):
+            p, o, m = step(p, o, batch)
+        results[dt] = float(m["loss"])
+    assert abs(results["bfloat16"] - results["float32"]) < 0.05
