@@ -1,6 +1,22 @@
 """§VI-C microbenchmark: measured blind/unblind throughput on this host,
 vs the paper's 4 ms / 6 MB SGX figure, plus the per-inference blinded-byte
-totals our implementation produces for VGG-16/19 (paper: 47 MB / 51 MB)."""
+totals our implementation produces for VGG-16/19 (paper: 47 MB / 51 MB).
+
+``run_suite`` additionally times the full per-layer blinded-offload call on
+the VGG-16 tier-1 shapes under the three protocol data paths:
+
+- ``unfused``    the seed path: per-request weight quantization, on-path
+                 u = r@W_q factor matmul, separate blind / limb-decompose /
+                 field-matmul / unblind passes;
+- ``fused``      one blind->limb-encode Pallas pass + field matmul with the
+                 unblind+dequantize epilogue fused in (still on-path u);
+- ``fused_pre``  fused data path with all blinding material precomputed by
+                 the BlindedLayerCache (the paper's offline enclave work) —
+                 exactly one device field-matmul on the request path.
+
+``benchmarks/run.py --suite blinding`` records these as BENCH_blinding.json
+so later PRs have a perf trajectory.
+"""
 from __future__ import annotations
 
 import time
@@ -9,10 +25,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import slalom as SL
 from repro.core.blinding import BlindingSpec, blind_activations, \
     blinding_stream, unblind_result
+from repro.core.precompute import BlindedLayerCache
 from repro.configs import get_config
 from repro.core.trust import vgg_layer_profiles
+
+# im2col dims (t, d_in, d_out) of the four blinded convs in VGG-16 tier-1
+# (partition 6, batch 1): conv64 x2 at 224², conv128 x2 at 112².
+VGG16_TIER1_SHAPES = (
+    (224 * 224, 27, 64),
+    (224 * 224, 576, 64),
+    (112 * 112, 576, 128),
+    (112 * 112, 1152, 128),
+)
 
 
 def _time(fn, *args, iters=5):
@@ -47,8 +74,49 @@ def run(emit):
              f"MB={total/2**20:.0f} paper={paper_mb}MB")
 
 
+def _layer_call(t, d_in, d_out, impl, precompute, seed=0):
+    """Build a jitted end-to-end blinded_dense call for one layer shape."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, d_in)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d_in, d_out)) / np.sqrt(d_in),
+                    jnp.float32)
+    spec = BlindingSpec()
+    key = jax.random.PRNGKey(seed)
+    factors = None
+    if precompute:
+        cache = BlindedLayerCache.from_records(
+            [{"kind": "dense", "w": w, "t": t,
+              "d_in": d_in, "d_out": d_out}], spec)
+        factors = cache.session_factors(key)   # offline work, not timed
+
+    @jax.jit
+    def call(xx):
+        ctx = SL.SlalomContext(key, spec, impl=impl, factors=factors)
+        return SL.blinded_dense(ctx, {"w": w}, xx)
+
+    return call, x
+
+
+def run_suite(emit, iters=2, shapes=VGG16_TIER1_SHAPES):
+    """Fused/precompute matrix over the VGG-16 tier-1 layer shapes."""
+    paths = (("unfused", "unfused", False),
+             ("fused", "fused", False),
+             ("fused_pre", "fused", True))
+    for li, (t, d_in, d_out) in enumerate(shapes):
+        times = {}
+        for name, impl, pre in paths:
+            call, x = _layer_call(t, d_in, d_out, impl, pre)
+            times[name] = _time(call, x, iters=iters)
+        base = times["unfused"]
+        for name, _, _ in paths:
+            emit(f"blinding/vgg16_t1l{li}_{name}", times[name] * 1e6,
+                 f"shape={t}x{d_in}x{d_out} speedup_vs_unfused="
+                 f"{base / times[name]:.2f}x")
+
+
 def main():
     run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+    run_suite(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
 
 
 if __name__ == "__main__":

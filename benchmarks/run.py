@@ -3,10 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV. Fast by default; pass --full for
 the c-GAN SSIM sweep (paper Fig 8, minutes of CPU) and --roofline to print
 the dry-run roofline table (requires artifacts from launch/dryrun.py).
+
+``--suite blinding`` runs only the blinded-path matrix (fused vs. unfused,
+with/without precompute, VGG-16 tier-1 shapes) and records it as
+``BENCH_blinding.json`` next to this file so successive PRs accumulate a
+perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
 
@@ -15,12 +22,34 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
+def run_blinding_suite(out_path: pathlib.Path) -> None:
+    from benchmarks import blinding_micro
+    results = {}
+
+    def record(name: str, us: float, derived: str = ""):
+        emit(name, us, derived)
+        results[name] = {"us": round(us, 1), "derived": derived}
+
+    blinding_micro.run_suite(record)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the c-GAN SSIM layer sweep (slow)")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--suite", choices=["all", "blinding"], default="all",
+                    help="'blinding' runs the fused/precompute matrix and "
+                         "writes BENCH_blinding.json")
     args, _ = ap.parse_known_args()
+
+    if args.suite == "blinding":
+        run_blinding_suite(
+            pathlib.Path(__file__).resolve().parent.parent
+            / "BENCH_blinding.json")
+        return
 
     from benchmarks import (blinding_micro, exec_micro, paper_fig2_4_11,
                             paper_fig9_10, paper_table1_2)

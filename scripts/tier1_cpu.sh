@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 CPU verification — the exact command ROADMAP.md names.
+# Pallas kernels run under interpret=True on CPU (bit-exact vs oracles);
+# the hypothesis shim in tests/conftest.py keeps the property tests
+# collectable without the dependency.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

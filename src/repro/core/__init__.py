@@ -1,9 +1,10 @@
-"""Origami core: blinding, Slalom protocol, two-tier executor, trust model."""
+"""Origami core: blinding, Slalom protocol, precompute, executor, trust."""
 from repro.core.blinding import BlindingSpec
 from repro.core.origami import MODES, OrigamiExecutor, OrigamiResult
+from repro.core.precompute import BlindedLayerCache
 from repro.core.slalom import SlalomContext, Telemetry, blinded_dense
 from repro.core.trust import EnclaveParams, EnclaveSim
 
-__all__ = ["BlindingSpec", "MODES", "OrigamiExecutor", "OrigamiResult",
-           "SlalomContext", "Telemetry", "blinded_dense", "EnclaveParams",
-           "EnclaveSim"]
+__all__ = ["BlindingSpec", "BlindedLayerCache", "MODES", "OrigamiExecutor",
+           "OrigamiResult", "SlalomContext", "Telemetry", "blinded_dense",
+           "EnclaveParams", "EnclaveSim"]

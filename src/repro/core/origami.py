@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import slalom as SL
 from repro.core.blinding import BlindingSpec
+from repro.core.precompute import BlindedLayerCache
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models import vgg as V
@@ -44,14 +45,21 @@ class OrigamiExecutor:
 
     def __init__(self, cfg: ModelConfig, params, mode: str = "origami",
                  partition: Optional[int] = None,
-                 spec: Optional[BlindingSpec] = None):
+                 spec: Optional[BlindingSpec] = None,
+                 impl: str = "fused", precompute: bool = False):
         assert mode in MODES, mode
+        assert impl in ("fused", "unfused"), impl
         self.cfg = cfg
         self.params = params
         self.mode = mode
         self.partition = (partition if partition is not None
                           else cfg.origami.tier1_layers)
         self.spec = spec or BlindingSpec()
+        self.impl = impl
+        self.precompute = precompute
+        self.cache: Optional[BlindedLayerCache] = None
+        self._caches: Dict[Any, BlindedLayerCache] = {}  # per batch-shape
+        self._cache_batch_shapes = None
         self.telemetry = SL.Telemetry()
         self._jitted = jax.jit(self._traced)
 
@@ -72,16 +80,70 @@ class OrigamiExecutor:
         return p, p                                   # split / origami
 
     # -- traced computation --------------------------------------------------
-    def _traced(self, batch, session_key):
-        cfg = self.cfg
+    def _traced(self, batch, session_key, factors=None):
         ctx = SL.SlalomContext(session_key, self.spec,
-                               telemetry=self.telemetry)
+                               telemetry=self.telemetry,
+                               impl=self.impl, factors=factors)
+        return self._run(batch, ctx)
+
+    def _run(self, batch, ctx):
+        cfg = self.cfg
         blinded = self.mode in ("slalom", "origami")
         tier1_end, _ = self._tier_bounds()
 
         if cfg.family == "cnn":
             return self._traced_cnn(batch, ctx, blinded, tier1_end)
         return self._traced_lm(batch, ctx, blinded, tier1_end)
+
+    # -- precompute pipeline -------------------------------------------------
+    def build_cache(self, batch) -> Optional[BlindedLayerCache]:
+        """Quantize/limb-encode every blinded layer's weights once and set up
+        the per-session factor store (DESIGN.md §4).
+
+        Discovers the blinded ops by re-tracing the executor under
+        ``jax.eval_shape`` with a recording context — no FLOPs, but the
+        exact call order, im2col weight views and activation row counts of
+        the real trace.
+        """
+        records = []
+        ctx = SL.SlalomContext(jax.random.PRNGKey(0), self.spec,
+                               telemetry=SL.Telemetry(), recorder=records)
+        shapes = {k: jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
+                  for k, v in batch.items()}
+        jax.eval_shape(lambda b: self._run(b, ctx), shapes)
+        if any(r["kind"] == "scanned" for r in records):
+            # blinded ops under lax.scan: one traced call covers many runtime
+            # layers, so per-layer factors can't be bound positionally —
+            # stay on the on-the-fly path (future: stacked factors as scan xs)
+            self.precompute = False
+            self.cache = None
+            return None
+        self.cache = BlindedLayerCache.from_records(records, self.spec)
+        self._cache_batch_shapes = tuple(sorted(
+            (k, tuple(jnp.shape(v))) for k, v in batch.items()))
+        self._caches[self._cache_batch_shapes] = self.cache
+        return self.cache
+
+    def prepare_session(self, session_key, step: int = 0) -> None:
+        """Prefetch the unblinding factors for a future session so the
+        factor matmuls overlap current device compute (serving hook)."""
+        if self.cache is not None:
+            self.cache.prefetch(session_key, step)
+
+    def _session_factors(self, batch, session_key):
+        if not (self.precompute and self.mode in ("slalom", "origami")):
+            return None
+        shapes = tuple(sorted((k, tuple(jnp.shape(v)))
+                              for k, v in batch.items()))
+        if self.cache is None or shapes != self._cache_batch_shapes:
+            if shapes in self._caches:   # recurring shape (padding buckets):
+                self.cache = self._caches[shapes]    # no rebuild thrash
+                self._cache_batch_shapes = shapes
+            else:
+                self.build_cache(batch)
+        if self.cache is None:          # precompute unsupported (scanned)
+            return None
+        return self.cache.take(session_key)
 
     def _traced_cnn(self, batch, ctx, blinded, tier1_end):
         cfg, params = self.cfg, self.params
@@ -134,8 +196,9 @@ class OrigamiExecutor:
               jit: bool = True) -> OrigamiResult:
         key = (session_key if session_key is not None
                else jax.random.PRNGKey(0))
+        factors = self._session_factors(batch, key)
         fn = self._jitted if jit else self._traced
-        logits, boundary = fn(batch, key)
+        logits, boundary = fn(batch, key, factors)
         return OrigamiResult(logits=logits, boundary=boundary,
                              telemetry=self.telemetry)
 

@@ -1,0 +1,131 @@
+"""Precomputed blinding pipeline: weight quantization + unblinding factors
+off the request path (DESIGN.md §4).
+
+The paper's enclave precomputes the unblinding factors ``u = (r @ W_q) mod
+p`` offline and pages them in during inference — that precomputation is what
+makes blinded offload cheaper than enclave-resident compute. The seed
+implementation instead re-derived both the quantized weights *and* ``u``
+inside every traced request, so each "offloaded" matmul was paid twice
+(once blinded on the device, once in the enclave).
+
+``BlindedLayerCache`` fixes both halves:
+
+- **Weights, once per model** (``from_records``): per blinded op, the field
+  weights ``w_q``, the absmax scale, and the pre-encoded int8 limb planes
+  (padded to the matmul block plan) are computed at executor construction
+  and reused by every request.
+- **Streams/factors, once per (session, layer, step)**
+  (``session_factors``): the blinding stream ``r`` and factor ``u`` are
+  generated off the request path. ``prefetch`` enqueues the next session's
+  factors while the current batch runs on device (JAX async dispatch
+  overlaps them — the double-buffering runtime/serving.py drives); ``take``
+  pops a prefetched set or falls back to computing synchronously.
+
+Factor keying is ``stream_key(session_key, layer_index, step)`` — exactly
+the stream the on-the-fly path draws, so cached and uncached traces are
+bit-identical (tests/test_precompute.py), and distinct (session, layer,
+step) triples never reuse a pad.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import blinding as B
+from repro.kernels.limb_matmul.ops import encode_weight_planes, field_matmul
+
+
+@dataclass(frozen=True)
+class CachedLayer:
+    """Per-blinded-op static material (weights are static across requests)."""
+    t: int                      # activation rows (batch-shape dependent)
+    d_in: int
+    d_out: int
+    w_q: jax.Array              # (d_in, d_out) int32 field
+    w_limbs: jax.Array          # (3, Kp, Np) int8, padded to the block plan
+    w_scale: jax.Array          # () float32 absmax scale
+
+
+class BlindedLayerCache:
+    """Quantize-once weight cache + per-session blinding-factor store."""
+
+    def __init__(self, layers: List[CachedLayer], spec: B.BlindingSpec):
+        self.layers = layers
+        self.spec = spec
+        self.factor_matmuls = 0          # r@W_q matmuls issued off-path
+        self._ready: Dict[Tuple[bytes, int], List[Dict[str, Any]]] = {}
+
+    @classmethod
+    def from_records(cls, records: List[Dict[str, Any]],
+                     spec: B.BlindingSpec) -> "BlindedLayerCache":
+        """records: the SlalomContext.recorder output of a cache-builder
+        trace — one {"kind", "w", "t", "d_in", "d_out"} per blinded op, in
+        call order. Conv records carry the raw (kh, kw, cin, cout) weight;
+        the im2col column reorder happens here, outside any trace."""
+        from repro.core.slalom import conv_weight_cols
+        layers = []
+        for rec in records:
+            w = (conv_weight_cols(rec["w"]) if rec["kind"] == "conv"
+                 else rec["w"])
+            w_q, w_scale = B.quantize_weight(w, spec)
+            layers.append(CachedLayer(
+                t=rec["t"], d_in=rec["d_in"], d_out=rec["d_out"],
+                w_q=w_q, w_limbs=encode_weight_planes(w_q),
+                w_scale=w_scale))
+        return cls(layers, spec)
+
+    # -- per-session factors -----------------------------------------------
+    @staticmethod
+    def _skey(session_key, step: int) -> Tuple[bytes, int]:
+        return np.asarray(session_key).tobytes(), step
+
+    def session_factors(self, session_key, step: int = 0) -> List[Dict]:
+        """Generate (r, u) for every cached layer — the enclave's offline
+        work. Returned as a jit-passable pytree (list of dicts of arrays)
+        consumed positionally by SlalomContext."""
+        factors = []
+        for i, lyr in enumerate(self.layers):
+            key = B.stream_key(session_key, i, step)
+            r = B.blinding_stream(key, (lyr.t, lyr.d_in))
+            u = field_matmul(r, lyr.w_q)
+            self.factor_matmuls += 1
+            factors.append({"r": r, "u": u, "w_q": lyr.w_q,
+                            "w_limbs": lyr.w_limbs, "w_scale": lyr.w_scale})
+        return factors
+
+    # prefetched sets a session's r tensors can pin ~100s of MB for large
+    # models; double-buffering needs exactly one set in flight, keep 2 for
+    # slack and evict FIFO so an abandoned session can't pin factors forever
+    MAX_PREFETCHED = 2
+
+    def prefetch(self, session_key, step: int = 0) -> None:
+        """Enqueue factor generation for a future session (async dispatch:
+        returns immediately, compute overlaps whatever runs on device)."""
+        k = self._skey(session_key, step)
+        if k not in self._ready:
+            while len(self._ready) >= self.MAX_PREFETCHED:
+                self._ready.pop(next(iter(self._ready)))
+            self._ready[k] = self.session_factors(session_key, step)
+
+    def clear_prefetch(self) -> None:
+        """Drop all buffered factor sets (e.g. when a server goes idle)."""
+        self._ready.clear()
+
+    def take(self, session_key, step: int = 0) -> List[Dict]:
+        """Pop prefetched factors for this session, or compute them now."""
+        return (self._ready.pop(self._skey(session_key, step), None)
+                or self.session_factors(session_key, step))
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    def weight_bytes(self) -> int:
+        """Cache footprint of the static half (w_q + limb planes + scale)."""
+        tot = 0
+        for lyr in self.layers:
+            tot += lyr.w_q.size * 4 + lyr.w_limbs.size + 4
+        return tot

@@ -11,6 +11,22 @@ the precomputable r·W) — exactly Slalom's constraint; attention cores,
 recurrences and non-linearities stay in the enclave during tier-1
 (DESIGN.md §3, §5).
 
+Two data-path implementations (``SlalomContext.impl``):
+
+- ``"fused"`` (default): one Pallas pass blinds + limb-encodes the
+  activations, the limb matmul's epilogue unblinds + dequantizes
+  in-register — the blinded operand makes exactly one HBM round trip
+  (DESIGN.md §6).
+- ``"unfused"``: the seed path (separate blind, limb-decompose, matmul,
+  unblind passes), kept selectable for benchmarks/blinding_micro.py.
+
+When ``SlalomContext.factors`` is set (core/precompute.py), the weight
+quantization/limb encoding and the unblinding-factor matmul ``u = r @ W_q``
+are *precomputed off the request path* — the traced request performs exactly
+one device field-matmul per blinded op, mirroring the paper's offline
+enclave precomputation. ``Telemetry.device_matmuls``/``enclave_matmuls``
+count both kinds so tests can verify the claim.
+
 A trace-time ``Telemetry`` recorder accumulates blinded bytes / offloaded
 FLOPs / enclave FLOPs per protocol call — shapes are static under jit, so
 this is exact and free; core/trust.py turns it into the paper's cost model.
@@ -18,13 +34,14 @@ this is exact and free; core/trust.py turns it into the paper's cost model.
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dfield
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import blinding as B
-from repro.kernels.limb_matmul.ops import field_matmul
+from repro.kernels.limb_matmul.ops import (encode_weight_planes, field_matmul,
+                                           fused_blinded_matmul)
 
 
 @dataclass
@@ -36,6 +53,9 @@ class Telemetry:
     enclave_flops: int = 0          # blinding/unblinding elementwise work
     enclave_peak_feature_bytes: int = 0
     calls: int = 0
+    device_matmuls: int = 0         # field matmuls in the request trace
+    enclave_matmuls: int = 0        # r@W_q factor matmuls in the trace
+                                    # (0 when the precompute cache is active)
 
     def record_offload(self, t: int, d_in: int, d_out: int):
         self.blinded_bytes += t * d_in * 4
@@ -50,17 +70,52 @@ class Telemetry:
 
 @dataclass
 class SlalomContext:
-    """Session state for one private-inference request."""
+    """Session state for one private-inference request.
+
+    ``factors``: per-layer precomputed blinding material from
+    ``BlindedLayerCache.session_factors`` (consumed positionally, in call
+    order). ``recorder``: when set, blinded ops record their (weight, shape)
+    instead of blinding — used by the cache builder under ``jax.eval_shape``.
+    """
     session_key: jax.Array
     spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
     telemetry: Telemetry = dfield(default_factory=Telemetry)
     step: int = 0
+    impl: str = "fused"                       # "fused" | "unfused"
+    factors: Optional[List[Any]] = None
+    recorder: Optional[List[Any]] = None
     _layer_counter: int = 0
 
     def next_layer_key(self) -> jax.Array:
         k = B.stream_key(self.session_key, self._layer_counter, self.step)
         self._layer_counter += 1
         return k
+
+    def next_layer_factors(self, t: int, d_in: int, w):
+        """Blinding material for the next blinded op, cached or on-the-fly.
+
+        Returns (w_q, w_scale, w_limbs_or_None, r, u). The cached branch
+        issues no field matmul; the on-the-fly branch issues one (counted in
+        telemetry.enclave_matmuls).
+        """
+        if self.factors is not None:
+            i = self._layer_counter
+            assert i < len(self.factors), (
+                f"precompute cache has {len(self.factors)} layers but the "
+                f"trace reached blinded op #{i} — rebuild the cache for "
+                f"this batch shape/partition")
+            self._layer_counter += 1
+            e = self.factors[i]
+            assert e["r"].shape == (t, d_in), (
+                f"cached stream shape {e['r'].shape} != ({t}, {d_in}) — "
+                f"cache was built for a different batch shape")
+            return e["w_q"], e["w_scale"], e.get("w_limbs"), e["r"], e["u"]
+        key = self.next_layer_key()
+        w_q, w_scale = B.quantize_weight(w, self.spec)
+        r = B.blinding_stream(key, (t, d_in))
+        u = B.unblinding_factor(r, w_q)       # on-request (Slalom does this
+        self.telemetry.enclave_matmuls += 1   # offline; see precompute.py)
+        return w_q, w_scale, None, r, u
 
 
 def blinded_dense(ctx: SlalomContext, p, x):
@@ -76,40 +131,84 @@ def blinded_dense(ctx: SlalomContext, p, x):
         t *= s
     xt = x.reshape(t, d_in)
 
+    if ctx.recorder is not None:
+        # cache-builder trace: record the concrete weight leaf (a transform
+        # of it would be a tracer and leak out of eval_shape), run plain fp.
+        # Weights seen through lax.scan are tracers — one traced call stands
+        # for many runtime layers, so positional caching can't apply; mark
+        # the record and let the executor fall back to on-the-fly factors.
+        kind = "scanned" if isinstance(w, jax.core.Tracer) else "dense"
+        ctx.recorder.append({"kind": kind, "w": None if kind == "scanned"
+                             else w, "t": t, "d_in": d_in, "d_out": d_out})
+        y = xt.astype(jnp.float32) @ w.astype(jnp.float32)
+        if "b" in p:
+            y = y + p["b"].astype(jnp.float32)
+        return y.reshape(lead + (d_out,)).astype(x.dtype)
+
     spec = ctx.spec
-    # --- enclave: quantize weights (offline in deployment), draw the pad ---
-    w_q, w_scale = B.quantize_weight(w, spec)
-    r = B.blinding_stream(ctx.next_layer_key(), (t, d_in))
-    u = B.unblinding_factor(r, w_q)          # precomputed (Slalom §4)
-    # --- enclave: per-request absmax activation scale + blind ---
+    # --- enclave: weight quantization + blinding material (precomputed when
+    # the cache is active, otherwise derived on the request path) ---
+    w_q, w_scale, w_limbs, r, u = ctx.next_layer_factors(t, d_in, w)
+    # --- enclave: per-request absmax activation scale ---
     x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
-    x_b = B.blind_activations(xt.astype(jnp.float32) / x_scale, r, spec)
-    # --- untrusted device: modular matmul on blinded data ---
-    y_b = field_matmul(x_b, w_q)
-    # --- enclave: unblind + dequantize (+ fp bias) ---
-    y = B.unblind_result(y_b, u, spec, out_dtype=jnp.float32)
-    y = y * (x_scale * w_scale)
+    k_out = spec.k_act + spec.k_w
+    if ctx.impl == "fused":
+        if w_limbs is None:
+            w_limbs = encode_weight_planes(w_q)
+        out_scale = x_scale * w_scale * (2.0 ** -k_out)
+        y = fused_blinded_matmul(
+            xt.astype(jnp.float32), r, w_limbs, u, 1.0 / x_scale, out_scale,
+            k_bits=spec.k_act, k_out_bits=k_out)
+    else:
+        # --- seed path: blind, device field-matmul, unblind (3 HBM trips) ---
+        x_b = B.blind_activations(xt.astype(jnp.float32) / x_scale, r, spec)
+        y_b = field_matmul(x_b, w_q)
+        y = B.unblind_result(y_b, u, spec, out_dtype=jnp.float32)
+        y = y * (x_scale * w_scale)
+    ctx.telemetry.device_matmuls += 1
     if "b" in p:
         y = y + p["b"].astype(jnp.float32)
     ctx.telemetry.record_offload(t, d_in, d_out)
     return y.reshape(lead + (d_out,)).astype(x.dtype)
 
 
+def extract_patches(x, kh: int, kw: int, stride: int = 1):
+    """NHWC SAME patch extraction as one strided-slice XLA op.
+
+    Returns (B·Ho·Wo, cin·kh·kw) with channel-major ordering (c, i, j) —
+    pair with ``conv_weight_cols``. Replaces the kh·kw-times-materialized
+    Python-loop im2col (which built kh·kw full-size slices and concatenated
+    them in HBM before blinding).
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches.reshape(-1, patches.shape[-1]), patches.shape[:3]
+
+
+def conv_weight_cols(w):
+    """(kh, kw, cin, cout) -> (cin·kh·kw, cout), matching extract_patches."""
+    kh, kw, cin, cout = w.shape
+    return jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+
+
 def blinded_conv2d(ctx: SlalomContext, p, x, stride: int = 1):
-    """Blinded 3x3 SAME conv via im2col -> blinded matmul (VGG tier-1).
+    """Blinded 3x3 SAME conv via patch extraction -> blinded matmul.
 
     On TPU convolutions lower to MXU matmuls anyway; im2col + limb matmul is
-    the faithful field-arithmetic equivalent.
+    the faithful field-arithmetic equivalent. The patch tensor feeds the
+    fused blind->limb-encode kernel directly.
     """
     w = p["w"]                                # (kh, kw, cin, cout)
     kh, kw, cin, cout = w.shape
-    B_, H, W_, _ = x.shape
-    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
-    cols = []
-    for i in range(kh):
-        for j in range(kw):
-            cols.append(xp[:, i:i + H:stride, j:j + W_:stride, :])
-    xcol = jnp.concatenate(cols, axis=-1).reshape(B_ * H * W_, kh * kw * cin)
-    wcol = w.reshape(kh * kw * cin, cout)
-    y = blinded_dense(ctx, {"w": wcol, "b": p["b"]}, xcol)
-    return y.reshape(B_, H, W_, cout)
+    xcol, out_hw = extract_patches(x, kh, kw, stride)
+    if ctx.recorder is not None:
+        # record the raw (kh,kw,cin,cout) param leaf; the cache builder
+        # reorders it to im2col columns outside the trace
+        ctx.recorder.append({"kind": "conv", "w": w, "t": xcol.shape[0],
+                             "d_in": kh * kw * cin, "d_out": cout})
+        y = xcol.astype(jnp.float32) @ conv_weight_cols(w).astype(jnp.float32)
+        y = y + p["b"].astype(jnp.float32)
+        return y.reshape(out_hw + (cout,)).astype(x.dtype)
+    y = blinded_dense(ctx, {"w": conv_weight_cols(w), "b": p["b"]}, xcol)
+    return y.reshape(out_hw + (cout,))

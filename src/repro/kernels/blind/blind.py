@@ -5,6 +5,12 @@ passes): these streams are pure-VPU elementwise work at ~6 bytes/elem of
 traffic, so fusing the three stages triples effective blinding throughput —
 the direct TPU analogue of the paper's observation that blinding cost is
 the Slalom bottleneck.
+
+``blind_encode_pallas`` goes one step further (DESIGN.md §6): it scales,
+quantizes, blinds AND emits the three balanced base-256 int8 limb planes in
+the same VMEM pass, so the blinded operand leaves the kernel already in the
+layout the limb matmul consumes — no intermediate int32 field tensor, no
+separate ``to_signed``/``to_limbs``/``moveaxis`` jnp passes over HBM.
 """
 from __future__ import annotations
 
@@ -53,6 +59,48 @@ def _tiled_call(kernel, out_dtype, x, *others, interpret=False):
         interpret=interpret,
     )(x2, *others2)
     return out[:M, :N].reshape(shape)
+
+
+def _blind_encode_kernel(x_ref, r_ref, inv_ref, o_ref, *, k_bits: int):
+    """Scale + quantize + blind + limb-encode one (bm, bk) tile.
+
+    inv_ref: (1, 1) float32 reciprocal of the activation absmax scale.
+    o_ref: (3, bm, bk) int8 balanced base-256 limb planes of the blinded
+    signed-canonical field element.
+    """
+    x = x_ref[...].astype(jnp.float32) * inv_ref[0, 0]
+    q = jnp.clip(jnp.round(x * (2.0 ** k_bits)), -HALF, HALF).astype(jnp.int32)
+    b = jnp.mod(jnp.mod(q, P) + r_ref[...], P)
+    s = jnp.where(b > HALF, b - P, b)       # [0,p) -> signed canonical
+    l0 = jnp.mod(s + 128, 256) - 128
+    s1 = (s - l0) // 256
+    l1 = jnp.mod(s1 + 128, 256) - 128
+    s2 = (s1 - l1) // 256
+    o_ref[...] = jnp.stack([l0, l1, s2]).astype(jnp.int8)
+
+
+def blind_encode_pallas(x, r, inv_scale, k_bits: int, *, bm=256, bk=512,
+                        interpret=False):
+    """x: (M, K) float; r: (M, K) int32 field; inv_scale: (1, 1) float32.
+
+    M, K must be multiples of (bm, bk) — the caller pads to the limb-matmul
+    block plan so the output feeds ``limb_matmul_planes`` directly.
+    Returns (3, M, K) int8 blinded limb planes.
+    """
+    M, K = x.shape
+    assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    return pl.pallas_call(
+        functools.partial(_blind_encode_kernel, k_bits=k_bits),
+        grid=(M // bm, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, bm, bk), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((3, M, K), jnp.int8),
+        interpret=interpret,
+    )(x, r, inv_scale)
 
 
 def blind_pallas(x, r, k_bits: int, *, interpret=False):

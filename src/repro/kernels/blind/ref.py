@@ -35,3 +35,17 @@ def blind_ref(x, r, k_bits: int):
 def unblind_ref(y, u, k_out_bits: int, dtype=jnp.float32):
     """y field, u field -> dequantized float (scale 2^k_out)."""
     return dequantize(to_signed(jnp.mod(y - u + P, P)), k_out_bits, dtype)
+
+
+def blind_encode_ref(x, r, inv_scale, k_bits: int):
+    """Oracle for the fused scale+quantize+blind+limb-encode kernel.
+
+    x: (M, K) float; r: (M, K) int32 field; inv_scale: scalar float32
+    reciprocal of the activation scale. Returns (3, M, K) int8 limb planes.
+    Uses multiply-by-reciprocal (not division) to stay bit-identical to the
+    Pallas kernel.
+    """
+    from repro.kernels.limb_matmul.ref import to_limbs
+    xs = x.astype(jnp.float32) * jnp.asarray(inv_scale, jnp.float32).reshape(())
+    b = jnp.mod(from_signed(quantize(xs, k_bits)) + r, P)
+    return jnp.moveaxis(to_limbs(to_signed(b)), -1, 0).astype(jnp.int8)

@@ -5,9 +5,18 @@ int8×int8→int32 MXU matmuls between limb planes, groups partials by limb
 power s = i+j, reduces mod p, recombines with the overflow-free
 shift-and-reduce (2^24 ≡ 3 mod p) and accumulates into the output block.
 
+Two epilogues (DESIGN.md §6):
+
+- ``limb_matmul_planes``       plain field result (M, N) int32 in [0, p);
+- ``limb_matmul_planes_fused`` on the final k step the output block is
+  unblinded in-register (subtract the precomputed factor ``u``), mapped to
+  signed canonical and dequantized to float — the device→enclave tensor
+  never round-trips HBM as a field element.
+
 VMEM per step (bm=bn=256, bk=1024): 2 × 3×256×1024 int8 (1.5 MiB) limb
-blocks + 256×256 int32 out block (256 KiB) — comfortably inside 16 MiB VMEM
-with double buffering. MXU dims are multiples of 128.
+blocks + 256×256 int32 out block (256 KiB); the fused epilogue adds an
+int32 ``u`` block and a float32 out block (512 KiB) — comfortably inside
+16 MiB VMEM with double buffering. MXU dims are multiples of 128.
 """
 from __future__ import annotations
 
@@ -16,8 +25,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.limb_matmul.ref import P
+from repro.kernels.limb_matmul.ref import HALF, P
 
 DEFAULT_BM = 256
 DEFAULT_BN = 256
@@ -30,14 +40,8 @@ def _mod_mul_pow256(y, k: int):
     return y
 
 
-def _kernel(x_ref, w_ref, o_ref, *, nk: int):
-    """x_ref: (3, bm, bk) int8; w_ref: (3, bk, bn) int8; o_ref: (bm, bn)."""
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
+def _step_partial(x_ref, w_ref, o_like):
+    """One k-step of the nine-matmul limb product, reduced mod p."""
     # group the nine partial products by limb power s = i + j
     sums = [None] * 5
     for i in range(3):
@@ -49,10 +53,58 @@ def _kernel(x_ref, w_ref, o_ref, *, nk: int):
                 preferred_element_type=jnp.int32)
             s = i + j
             sums[s] = pij if sums[s] is None else sums[s] + pij
-    acc = jnp.zeros_like(o_ref)
+    acc = jnp.zeros_like(o_like)
     for s in range(5):
         acc = acc + _mod_mul_pow256(jnp.mod(sums[s], P), s)
+    return acc
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    """x_ref: (3, bm, bk) int8; w_ref: (3, bk, bn) int8; o_ref: (bm, bn)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = _step_partial(x_ref, w_ref, o_ref[...])
     o_ref[...] = jnp.mod(o_ref[...] + acc, P)
+
+
+def _kernel_fused(x_ref, w_ref, u_ref, scale_ref, y_ref, acc_ref, *,
+                  nk: int, out_dtype):
+    """Fused epilogue: on the last k step, unblind + dequantize in-register.
+
+    u_ref: (bm, bn) int32 precomputed unblinding factors; scale_ref: (1, 1)
+    float32 combined dequantization scale x_scale·w_scale·2^-(k_act+k_w).
+    acc_ref is a VMEM scratch block carrying the running field accumulator
+    across the (sequential) k steps — the field result never touches HBM;
+    y_ref is the float output.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = _step_partial(x_ref, w_ref, acc_ref[...])
+    acc_ref[...] = jnp.mod(acc_ref[...] + acc, P)
+
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        d = jnp.mod(acc_ref[...] - u_ref[...] + P, P)
+        s = jnp.where(d > HALF, d - P, d)       # [0,p) -> signed canonical
+        y_ref[...] = (s.astype(jnp.float32)
+                      * scale_ref[0, 0]).astype(out_dtype)
+
+
+def _check_blocks(M, N, K, bm, bn, bk):
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    # int32 accumulation exactness: per-step partials are ≤ 3·bk·128² and the
+    # running block is < p, so bk is bounded by (2^31 − p)/(3·128²).
+    assert bk <= 43000, bk
+    return bm, bn, bk
 
 
 def limb_matmul_planes(x_limbs, w_limbs, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
@@ -63,14 +115,10 @@ def limb_matmul_planes(x_limbs, w_limbs, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
     """
     _, M, K = x_limbs.shape
     _, _, N = w_limbs.shape
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    # int32 accumulation exactness: per-step partials are ≤ 3·bk·128² and the
-    # running block is < p, so bk is bounded by (2^31 − p)/(3·128²).
-    assert bk <= 43000, bk
+    bm, bn, bk = _check_blocks(M, N, K, bm, bn, bk)
     grid = (M // bm, N // bn, K // bk)
     return pl.pallas_call(
-        functools.partial(_kernel, nk=grid[2]),
+        _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((3, bm, bk), lambda m, n, k: (0, m, k)),
@@ -80,3 +128,33 @@ def limb_matmul_planes(x_limbs, w_limbs, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
         interpret=interpret,
     )(x_limbs, w_limbs)
+
+
+def limb_matmul_planes_fused(x_limbs, w_limbs, u, scale, *,
+                             bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK,
+                             out_dtype=jnp.float32, interpret=False):
+    """Field matmul with fused unblind+dequantize epilogue.
+
+    x_limbs: (3, M, K) int8; w_limbs: (3, K, N) int8; u: (M, N) int32
+    precomputed unblinding factors; scale: (1, 1) float32 combined scale.
+    Returns (M, N) ``out_dtype`` — already unblinded and dequantized.
+    """
+    _, M, K = x_limbs.shape
+    _, _, N = w_limbs.shape
+    assert u.shape == (M, N), (u.shape, M, N)
+    bm, bn, bk = _check_blocks(M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel_fused, nk=grid[2], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, bm, bk), lambda m, n, k: (0, m, k)),
+            pl.BlockSpec((3, bk, bn), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+            pl.BlockSpec((1, 1), lambda m, n, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_limbs, w_limbs, u, scale)

@@ -142,6 +142,25 @@ def _trip_count(cond: Optional[_Comp]) -> int:
     return max(consts) if consts else 1
 
 
+def _split_operands(ops_str: str) -> List[str]:
+    """Split an operand list on top-level commas only — shapes embed commas
+    (``f32[32,128]{1,0} %copy.3``), so a plain split truncates them."""
+    out, depth, cur = [], 0, []
+    for ch in ops_str:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
 def _dot_flops_of_line(line: str, comp: _Comp) -> float:
     dm = _DEF_RE.match(line)
     if dm is None or dm.group(3) != "dot":
@@ -155,10 +174,13 @@ def _dot_flops_of_line(line: str, comp: _Comp) -> float:
     k = 1
     cdm = _DOT_DIMS_RE.search(line)
     if ops and cdm:
-        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        lhs = names[0].split(" ")[-1].lstrip("%") if names else ""
-        lhs_type = comp.types.get(lhs)
+        operands = [o.strip() for o in _split_operands(ops.group(1))]
+        first = operands[0] if operands else ""
         cdims = [int(c) for c in cdm.group(1).split(",") if c]
+        # older-XLA text prints operand types inline; prefer that, fall back
+        # to the name->type table of the enclosing computation
+        lhs_type = first if _SHAPE_RE.search(first) else \
+            comp.types.get(first.split(" ")[-1].lstrip("%"))
         if lhs_type:
             dims = _shape_dims(lhs_type) or []
             for c in cdims:

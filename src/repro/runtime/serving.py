@@ -5,10 +5,19 @@ input under the session key (core/sealing), the enclave unseals inside the
 trust boundary, the OrigamiExecutor runs tier-1 blinded + tier-2 open, and
 the result is sealed back to the client. Requests are micro-batched with
 padding; the watchdog (runtime/straggler) monitors per-batch latency.
+
+Blinding precompute (DESIGN.md §4): each micro-batch runs under its own
+blinding session key. With ``precompute=True`` (default) the executor's
+``BlindedLayerCache`` quantizes tier-1 weights once at first dispatch, and
+the server double-buffers unblinding factors — after dispatching batch k it
+immediately enqueues factor generation for batch k+1's session, so the
+``r @ W_q`` matmuls overlap device compute instead of sitting on the
+request path (the paper's offline enclave precomputation).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -43,15 +52,30 @@ class PrivateInferenceServer:
     """Batched Origami serving over a model (CNN or LM single-shot)."""
 
     def __init__(self, cfg: ModelConfig, params, *, mode: str = "origami",
-                 max_batch: int = 8, input_key: str = "images"):
+                 max_batch: int = 8, input_key: str = "images",
+                 impl: str = "fused", precompute: bool = True):
         self.cfg = cfg
-        self.executor = OrigamiExecutor(cfg, params, mode=mode)
+        self.executor = OrigamiExecutor(cfg, params, mode=mode, impl=impl,
+                                        precompute=precompute)
         self.quote = measure_enclave(cfg, params,
                                      self.executor.partition)
         self.max_batch = max_batch
         self.input_key = input_key
         self.watchdog = StepWatchdog()
         self.processed = 0
+        self.batches = 0
+        # server-side root for per-batch blinding sessions (distinct from the
+        # clients' sealing keys): batch k runs under fold_in(root, k). MUST
+        # be fresh entropy per instance — a fixed or colliding root would
+        # reuse one-time pads across server restarts/replicas, letting the
+        # device subtract two blinded tensors and cancel r. 64 entropy bits
+        # via two 32-bit words (PRNGKey seeds are limited to C-long range).
+        w0, w1 = np.frombuffer(os.urandom(8), np.uint32)
+        self._blind_root = jax.random.fold_in(jax.random.PRNGKey(int(w0)),
+                                              int(w1))
+
+    def _blind_session(self, batch_idx: int) -> jax.Array:
+        return jax.random.fold_in(self._blind_root, batch_idx)
 
     # -- client side helpers ---------------------------------------------
     def attest(self) -> Quote:
@@ -86,7 +110,13 @@ class PrivateInferenceServer:
         # pad to max_batch so one compiled executable serves all sizes
         pad = self.max_batch - n
         x = np.stack(inputs + [np.zeros_like(inputs[0])] * pad)
-        result = self.executor.infer({self.input_key: jnp.asarray(x)})
+        result = self.executor.infer({self.input_key: jnp.asarray(x)},
+                                     session_key=self._blind_session(
+                                         self.batches))
+        self.batches += 1
+        # double-buffer: enqueue the NEXT session's unblinding factors now,
+        # so their field matmuls overlap this batch's device compute
+        self.executor.prepare_session(self._blind_session(self.batches))
         logits = np.asarray(result.logits, np.float32)[:n]
         self.watchdog.end_step()
         out = []

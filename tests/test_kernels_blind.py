@@ -21,6 +21,23 @@ def test_blind_pallas_matches_ref(shape, k_bits, rng):
     np.testing.assert_array_equal(b_ref, b_pl)
 
 
+@pytest.mark.parametrize("shape,bm,bk", [((256, 512), 128, 256),
+                                         ((128, 128), 128, 128),
+                                         ((512, 256), 256, 256)])
+@pytest.mark.parametrize("k_bits", [6, 8])
+def test_blind_encode_pallas_matches_ref(shape, bm, bk, k_bits, rng):
+    """Fused scale+quantize+blind+limb-encode kernel vs its jnp oracle."""
+    from repro.kernels.blind.blind import blind_encode_pallas
+    from repro.kernels.blind.ref import blind_encode_ref
+    x = jnp.asarray(rng.normal(size=shape) * 3, jnp.float32)
+    r = jnp.asarray(rng.integers(0, P, size=shape), jnp.int32)
+    inv = jnp.float32(1.0 / 2.7)
+    got = np.asarray(blind_encode_pallas(x, r, inv.reshape(1, 1), k_bits,
+                                         bm=bm, bk=bk, interpret=True))
+    want = np.asarray(blind_encode_ref(x, r, inv, k_bits))
+    np.testing.assert_array_equal(got, want)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_unblind_pallas_matches_ref(dtype, rng):
     y = rng.integers(0, P, size=(33, 130), dtype=np.int32)

@@ -50,6 +50,28 @@ def test_mod_mul_pow256():
         np.testing.assert_array_equal(got, want.astype(np.int32))
 
 
+@pytest.mark.parametrize("M,K,N", [
+    (300, 72, 8),      # Kp > K: exercises the interpret re-encode branch
+    (256, 1152, 64),   # multi-k-step grid: scratch accumulator across steps
+])
+def test_fused_blinded_matmul_backends_bit_identical(M, K, N, rng):
+    """The fused chain's pure-jnp fallback and the Pallas(interpret) kernels
+    must agree bit-for-bit (docstring contract of fused_blinded_matmul)."""
+    from repro.kernels.limb_matmul.ops import (encode_weight_planes,
+                                               fused_blinded_matmul)
+    x = jnp.asarray(rng.normal(size=(M, K)), np.float32)
+    r = jnp.asarray(rng.integers(0, ref.P, (M, K)), jnp.int32)
+    w_q = ref.from_signed(jnp.asarray(rng.integers(-128, 128, (K, N)),
+                                      jnp.int32))
+    w_limbs = encode_weight_planes(w_q)
+    u = field_matmul(r, w_q, impl="ref")
+    args = (x, r, w_limbs, u, jnp.float32(0.5), jnp.float32(1e-4))
+    kw = dict(k_bits=8, k_out_bits=15)
+    got_ref = np.asarray(fused_blinded_matmul(*args, impl="ref", **kw))
+    got_int = np.asarray(fused_blinded_matmul(*args, impl="interpret", **kw))
+    np.testing.assert_array_equal(got_ref, got_int)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 80), st.integers(1, 300), st.integers(1, 60),
        st.integers(0, 2 ** 31 - 1))

@@ -1,0 +1,146 @@
+"""Precomputed blinding pipeline: bit-exactness vs on-the-fly, stream reuse
+guard, and the one-device-matmul-per-call telemetry claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import slalom as SL
+from repro.core.blinding import BlindingSpec
+from repro.core.origami import OrigamiExecutor
+from repro.core.precompute import BlindedLayerCache
+from repro.models import model as M
+
+
+def _dense_cache(w, t, spec):
+    recs = [{"kind": "dense", "w": jnp.asarray(w), "t": t,
+             "d_in": w.shape[0], "d_out": w.shape[1]}]
+    return BlindedLayerCache.from_records(recs, spec)
+
+
+@pytest.mark.parametrize("impl", ["fused", "unfused"])
+def test_dense_cached_bit_exact_vs_on_the_fly(impl, rng):
+    spec = BlindingSpec()
+    t, d_in, d_out = 16, 64, 32
+    x = jnp.asarray(rng.normal(size=(t, d_in)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d_in, d_out)) / 8, jnp.float32)
+    key = jax.random.PRNGKey(3)
+
+    ctx_live = SL.SlalomContext(key, spec, impl=impl)
+    y_live = np.asarray(SL.blinded_dense(ctx_live, {"w": w}, x))
+
+    cache = _dense_cache(w, t, spec)
+    ctx_pre = SL.SlalomContext(key, spec, impl=impl,
+                               factors=cache.session_factors(key))
+    y_pre = np.asarray(SL.blinded_dense(ctx_pre, {"w": w}, x))
+    np.testing.assert_array_equal(y_live, y_pre)
+
+
+def test_executor_precompute_bit_exact_cnn(rng):
+    """Tier-1 conv layers: cached factors reproduce the on-the-fly trace
+    bit-for-bit (same streams, same quantized weights, same field math)."""
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jnp.asarray(
+        rng.normal(size=(2, cfg.image_size, cfg.image_size, 3)) * 0.5,
+        jnp.float32)}
+    key = jax.random.PRNGKey(11)
+    live = OrigamiExecutor(cfg, params, mode="origami").infer(
+        batch, session_key=key)
+    pre = OrigamiExecutor(cfg, params, mode="origami",
+                          precompute=True).infer(batch, session_key=key)
+    np.testing.assert_array_equal(np.asarray(live.logits),
+                                  np.asarray(pre.logits))
+
+
+def test_executor_precompute_falls_back_under_scan():
+    """LM blocks run under lax.scan (weights are tracers per traced call) —
+    precompute must degrade gracefully to on-the-fly factors, bit-exact."""
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2),
+                                          (2, 16), 0, cfg.vocab_size)}
+    key = jax.random.PRNGKey(11)
+    live = OrigamiExecutor(cfg, params, mode="origami").infer(
+        batch, session_key=key)
+    pre_ex = OrigamiExecutor(cfg, params, mode="origami", precompute=True)
+    pre = pre_ex.infer(batch, session_key=key)
+    assert pre_ex.cache is None and pre_ex.precompute is False
+    np.testing.assert_array_equal(np.asarray(live.logits),
+                                  np.asarray(pre.logits))
+
+
+def test_stream_reuse_guard(rng):
+    """Distinct (session, layer, step) triples must never yield the same
+    pad r — one-time-pad reuse would break the privacy argument."""
+    spec = BlindingSpec()
+    w = jnp.asarray(rng.normal(size=(32, 16)) / 6, jnp.float32)
+    recs = [{"kind": "dense", "w": w, "t": 8, "d_in": 32, "d_out": 16}
+            for _ in range(2)]
+    cache = BlindedLayerCache.from_records(recs, spec)
+    streams = {}
+    for skey in (jax.random.PRNGKey(1), jax.random.PRNGKey(2)):
+        for step in (0, 1):
+            for i, f in enumerate(cache.session_factors(skey, step)):
+                streams[(int(skey[1]), i, step)] = np.asarray(f["r"])
+    keys = list(streams)
+    for a in range(len(keys)):
+        for b in range(a + 1, len(keys)):
+            assert not np.array_equal(streams[keys[a]], streams[keys[b]]), \
+                (keys[a], keys[b])
+
+
+def test_precompute_removes_request_path_factor_matmul():
+    """With the cache active the request trace performs exactly one device
+    field-matmul per blinded call and zero enclave r@W_q matmuls."""
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jnp.zeros((1, cfg.image_size, cfg.image_size, 3))}
+
+    live = OrigamiExecutor(cfg, params, mode="origami")
+    live.infer(batch)
+    assert live.telemetry.calls > 0
+    assert live.telemetry.device_matmuls == live.telemetry.calls
+    assert live.telemetry.enclave_matmuls == live.telemetry.calls
+
+    pre = OrigamiExecutor(cfg, params, mode="origami", precompute=True)
+    pre.infer(batch)
+    assert pre.telemetry.calls == live.telemetry.calls
+    assert pre.telemetry.device_matmuls == pre.telemetry.calls
+    assert pre.telemetry.enclave_matmuls == 0
+    # the factor matmuls moved off-path into the cache, not vanished
+    assert pre.cache.factor_matmuls == pre.cache.num_layers
+
+
+def test_prefetch_take_semantics():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ex = OrigamiExecutor(cfg, params, mode="origami", precompute=True)
+    batch = {"images": jnp.zeros((1, cfg.image_size, cfg.image_size, 3))}
+    ex.build_cache(batch)
+    key = jax.random.PRNGKey(9)
+    ex.prepare_session(key)
+    got = ex.cache.take(key)
+    assert len(got) == ex.cache.num_layers
+    # taking pops the buffer: next take recomputes (fresh list object)
+    again = ex.cache.take(key)
+    assert again is not got
+    for a, b in zip(got, again):
+        np.testing.assert_array_equal(np.asarray(a["r"]), np.asarray(b["r"]))
+
+
+def test_cache_rebuilds_on_batch_shape_change():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ex = OrigamiExecutor(cfg, params, mode="origami", precompute=True)
+    b1 = {"images": jnp.zeros((1, cfg.image_size, cfg.image_size, 3))}
+    b2 = {"images": jnp.zeros((2, cfg.image_size, cfg.image_size, 3))}
+    ex.infer(b1)
+    c1 = ex.cache
+    ex.infer(b2)
+    assert ex.cache is not c1
+    assert ex.cache.layers[0].t == 2 * c1.layers[0].t
+    # recurring shape (padding bucket) reuses the earlier cache, no rebuild
+    ex.infer(b1)
+    assert ex.cache is c1
