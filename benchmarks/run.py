@@ -7,7 +7,8 @@ the dry-run roofline table (requires artifacts from launch/dryrun.py).
 ``--suite blinding`` runs only the blinded-path matrix (fused vs. unfused,
 with/without precompute, VGG-16 tier-1 shapes) and records it as
 ``BENCH_blinding.json`` next to this file so successive PRs accumulate a
-perf trajectory.
+perf trajectory. ``--suite serving`` sweeps the async ServingEngine over
+offered loads (mixed vgg16/vgg19 smoke traffic) into ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
@@ -35,20 +36,31 @@ def run_blinding_suite(out_path: pathlib.Path) -> None:
     print(f"wrote {out_path}", file=sys.stderr)
 
 
+def run_serving_suite(out_path: pathlib.Path) -> None:
+    from benchmarks import serving_bench
+    results = serving_bench.run_suite(emit)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the c-GAN SSIM layer sweep (slow)")
     ap.add_argument("--roofline", action="store_true")
-    ap.add_argument("--suite", choices=["all", "blinding"], default="all",
-                    help="'blinding' runs the fused/precompute matrix and "
-                         "writes BENCH_blinding.json")
+    ap.add_argument("--suite", choices=["all", "blinding", "serving"],
+                    default="all",
+                    help="'blinding' runs the fused/precompute matrix into "
+                         "BENCH_blinding.json; 'serving' sweeps the engine "
+                         "over offered loads into BENCH_serving.json")
     args, _ = ap.parse_known_args()
 
+    root = pathlib.Path(__file__).resolve().parent.parent
     if args.suite == "blinding":
-        run_blinding_suite(
-            pathlib.Path(__file__).resolve().parent.parent
-            / "BENCH_blinding.json")
+        run_blinding_suite(root / "BENCH_blinding.json")
+        return
+    if args.suite == "serving":
+        run_serving_suite(root / "BENCH_serving.json")
         return
 
     from benchmarks import (blinding_micro, exec_micro, paper_fig2_4_11,

@@ -1,0 +1,102 @@
+"""Serving-engine throughput vs. offered load (BENCH_serving.json).
+
+Drives the async ServingEngine with a mixed vgg16/vgg19 smoke fleet at
+several offered loads (Poisson-ish open-loop arrivals via fixed
+inter-arrival sleeps, plus one closed-loop burst) and records achieved
+throughput, latency quantiles and batching efficiency. Successive PRs
+accumulate the JSON next to BENCH_blinding.json as a perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+
+def _build_engine(max_batch: int, max_wait_ms: float):
+    from repro.configs import get_smoke
+    from repro.models import model as M
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    engine = ServingEngine(EngineConfig(max_batch=max_batch,
+                                        max_wait_ms=max_wait_ms))
+    cfgs = {}
+    for i, name in enumerate(("vgg16", "vgg19")):
+        cfg = get_smoke(name)
+        params = M.init_params(cfg, jax.random.PRNGKey(i))
+        engine.register_model(name, cfg, params)
+        cfgs[name] = cfg
+    return engine, cfgs
+
+
+def _requests(cfgs, n_per_model: int):
+    # one sealing path for driver, benchmark and server: the launch
+    # driver's helper builds (Request, key) streams via client_seal
+    from repro.launch.serve import _sealed_requests
+
+    stream = []
+    for i, (name, cfg) in enumerate(cfgs.items()):
+        reqs, _ = _sealed_requests(cfg, n_per_model, rid0=1000 * i)
+        stream.append([(name, r) for r in reqs])
+    # interleave the two models round-robin (mixed traffic)
+    return [r for pair in zip(*stream) for r in pair]
+
+
+def _drive(engine, mixed, offered_rps: float) -> Dict[str, float]:
+    """Open-loop arrivals at ``offered_rps`` (inf = closed-loop burst)."""
+    gap = 0.0 if not np.isfinite(offered_rps) else 1.0 / offered_rps
+    t0 = time.monotonic()
+    futures = []
+    for name, req in mixed:
+        futures.append(engine.submit(name, req))
+        if gap:
+            time.sleep(gap)
+    responses = [f.result(timeout=300) for f in futures]
+    dt = time.monotonic() - t0
+    ok = sum(r.ok for r in responses)
+    lats = sorted(r.latency_s for r in responses if r.ok)
+    q = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))] if lats else 0
+    return {
+        "offered_rps": offered_rps if np.isfinite(offered_rps) else -1.0,
+        "achieved_rps": ok / dt,
+        "ok": ok, "n": len(responses), "wall_s": round(dt, 3),
+        "p50_ms": round(q(0.50) * 1e3, 1),
+        "p95_ms": round(q(0.95) * 1e3, 1),
+    }
+
+
+def run_suite(emit: Callable[[str, float, str], None], *,
+              n_per_model: int = 12, max_batch: int = 4,
+              max_wait_ms: float = 10.0) -> Dict[str, Dict]:
+    engine, cfgs = _build_engine(max_batch, max_wait_ms)
+    results: Dict[str, Dict] = {}
+    try:
+        # warm the compiled executables + layer caches out of the timings
+        warm = _requests(cfgs, max_batch)
+        [f.result(timeout=300) for f in
+         [engine.submit(m, r) for m, r in warm]]
+
+        loads = [("load_burst", float("inf")), ("load_50rps", 50.0),
+                 ("load_10rps", 10.0)]
+        for name, rps in loads:
+            mixed = _requests(cfgs, n_per_model)
+            r = _drive(engine, mixed, rps)
+            results[name] = r
+            emit(f"serving/{name}", r["p50_ms"] * 1e3,
+                 f"rps={r['achieved_rps']:.1f} p95_ms={r['p95_ms']}")
+        stats = engine.stats.snapshot(engine)
+        results["engine"] = {
+            "batches": stats["batches"],
+            "padded_slots": stats["padded_slots"],
+            "batched_requests": stats["batched_requests"],
+            "time_to_first_batch_s": stats["time_to_first_batch_s"],
+            "sessions": stats["sessions"],
+            "matmuls": stats["matmuls"],
+        }
+        emit("serving/batches", float(stats["batches"]),
+             f"padded={stats['padded_slots']}")
+    finally:
+        engine.close()
+    return results

@@ -6,3 +6,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# serving-engine smoke: mixed vgg16/vgg19 through the async engine,
+# logits cross-checked bit-exactly against the legacy synchronous server
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine

@@ -1,10 +1,13 @@
-"""Origami core: blinding, Slalom protocol, precompute, executor, trust."""
+"""Origami core: blinding, Slalom protocol, precompute, executor, trust,
+partition planner."""
 from repro.core.blinding import BlindingSpec
 from repro.core.origami import MODES, OrigamiExecutor, OrigamiResult
+from repro.core.planner import PartitionPlan, PartitionPlanner
 from repro.core.precompute import BlindedLayerCache
 from repro.core.slalom import SlalomContext, Telemetry, blinded_dense
 from repro.core.trust import EnclaveParams, EnclaveSim
 
 __all__ = ["BlindingSpec", "BlindedLayerCache", "MODES", "OrigamiExecutor",
-           "OrigamiResult", "SlalomContext", "Telemetry", "blinded_dense",
+           "OrigamiResult", "PartitionPlan", "PartitionPlanner",
+           "SlalomContext", "Telemetry", "blinded_dense",
            "EnclaveParams", "EnclaveSim"]

@@ -121,7 +121,11 @@ class OrigamiExecutor:
         self.cache = BlindedLayerCache.from_records(records, self.spec)
         self._cache_batch_shapes = tuple(sorted(
             (k, tuple(jnp.shape(v))) for k, v in batch.items()))
-        self._caches[self._cache_batch_shapes] = self.cache
+        # copy-on-write: the SessionPool's refill thread snapshots this
+        # dict concurrently; rebinding (vs. in-place insert) keeps any
+        # iteration over the old dict safe without a lock
+        self._caches = {**self._caches,
+                        self._cache_batch_shapes: self.cache}
         return self.cache
 
     def prepare_session(self, session_key, step: int = 0) -> None:

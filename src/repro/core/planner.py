@@ -1,0 +1,179 @@
+"""Cost-model partition planner: pick the Origami switch layer per model.
+
+DarKnight/Origami-style systems fix the trust partition by hand; the paper
+picks it with Algorithm 1 (a c-GAN adversary per candidate layer, minutes of
+GPU per layer). Serving needs the same decision *at model-registration
+time*, in milliseconds. ``PartitionPlanner`` closes that gap with two
+calibrated stand-ins:
+
+- **privacy**: a reconstruction *proxy* built on ``privacy/ssim.py`` —
+  SSIM between the (normalized, grayscale) input and the channel-mean
+  boundary feature map upsampled back to image resolution. It tracks the
+  c-GAN trend (early conv boundaries retain scene geometry, pooled/deep
+  boundaries do not) at ~1e-6 of the cost; ``verify_depth`` layers past the
+  candidate are checked too, mirroring Algorithm 1's non-monotonicity
+  guard. The full c-GAN search (privacy/reconstruct.py) remains the
+  offline oracle.
+- **cost**: the paper-calibrated ``EnclaveSim.runtime(mode, p)`` from
+  core/trust.py prices every feasible partition; the planner returns the
+  cheapest one (smallest ``p`` on ties).
+
+Monotonicity invariant (tested): tightening the privacy floor only shrinks
+the feasible set, and ``EnclaveSim`` runtime is non-decreasing in the
+number of blinded layers (each tier-1 layer adds blind/unblind traffic on
+top of the same device FLOPs), so the chosen partition never *shrinks* as
+the floor tightens.
+
+LM families have no image-SSIM analogue (their oracle is
+``token_recovery_probe``, minutes of training) — for them the planner
+honours the config's declared partition and marks the plan's ``source``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.trust import EnclaveSim
+from repro.privacy.data import make_batch
+from repro.privacy.ssim import ssim
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    model: str
+    mode: str
+    partition: int                      # chosen tier-1 depth p
+    source: str                         # "planner" | "config" | "explicit"
+    privacy_floor: Optional[float]
+    leakage: Dict[int, float]           # boundary layer -> proxy leakage
+    runtime_s: Dict[int, float]         # candidate p -> modeled runtime
+    feasible: Tuple[int, ...]           # candidates meeting the floor
+
+    def summary(self) -> str:
+        leak = self.leakage.get(self.partition)
+        leak_s = f"{leak:.3f}" if leak is not None else "n/a"
+        rt = self.runtime_s.get(self.partition)
+        rt_s = f"{rt * 1e3:.1f}ms" if rt is not None else "n/a"
+        return (f"{self.model}: p={self.partition} ({self.source}) "
+                f"leakage={leak_s} floor={self.privacy_floor} "
+                f"modeled_runtime={rt_s}")
+
+
+def _grayscale_unit(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H, W, 1) channel-mean, min-max to [0, 1]."""
+    g = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    lo = jnp.min(g, axis=(1, 2, 3), keepdims=True)
+    hi = jnp.max(g, axis=(1, 2, 3), keepdims=True)
+    return (g - lo) / (hi - lo + 1e-9)
+
+
+def boundary_leakage(params, cfg: ModelConfig, layer: int,
+                     n_images: int = 4) -> Optional[float]:
+    """Reconstruction proxy for the boundary after ``layer`` (1-based).
+
+    Channel-mean the boundary feature map, nearest-upsample it back to
+    image resolution, and SSIM it against the grayscale input; contrast
+    inversions leak as much as the identity, so take ``|SSIM|`` and the max
+    over the feature and its negative. fc boundaries carry no spatial grid
+    for this proxy to score — returns ``None`` (unmeasurable), which
+    ``leakage_profile`` resolves fail-closed.
+    """
+    from repro.models import vgg as V
+    x = jnp.asarray(make_batch(0, n_images, cfg.image_size))
+    _, feat = V.vgg_forward(params, x, cfg, capture=layer)
+    if feat.ndim != 4:                       # fc features: no spatial layout
+        return None
+    f = _grayscale_unit(feat)
+    rep = cfg.image_size // f.shape[1]
+    if rep > 1:
+        f = jnp.repeat(jnp.repeat(f, rep, axis=1), rep, axis=2)
+    g = _grayscale_unit(x)
+    s = max(abs(float(ssim(f, g))), abs(float(ssim(1.0 - f, g))))
+    return s
+
+
+def leakage_profile(params, cfg: ModelConfig, *,
+                    n_images: int = 4) -> Dict[int, float]:
+    """Proxy leakage for every candidate boundary layer.
+
+    Boundaries the proxy cannot score (fc layers — no spatial grid)
+    inherit the last measurable boundary's leakage rather than scoring 0:
+    a 0 would make them feasible under *any* floor (fail-open), even
+    though feature-inversion attacks reconstruct fc features too. The
+    carry-forward is fail-closed — an fc boundary is treated as no safer
+    than the features feeding it until the offline c-GAN/probe says
+    otherwise (inject its numbers via ``plan(..., leakage=...)``).
+    """
+    n = len(cfg.cnn_layers)
+    profile: Dict[int, float] = {}
+    carry = 1.0                              # nothing measured yet: unsafe
+    for p in range(1, n):
+        v = boundary_leakage(params, cfg, p, n_images)
+        if v is None:
+            v = carry
+        else:
+            carry = v
+        profile[p] = v
+    return profile
+
+
+class PartitionPlanner:
+    """Sweeps ``EnclaveSim.runtime(mode, p)`` under a privacy floor."""
+
+    def __init__(self, privacy_floor: float = 0.35, verify_depth: int = 2,
+                 n_images: int = 4, device: str = "gpu"):
+        self.privacy_floor = privacy_floor
+        self.verify_depth = verify_depth
+        self.n_images = n_images
+        self.device = device
+
+    def plan(self, cfg: ModelConfig, params=None, *, mode: str = "origami",
+             partition: Optional[int] = None,
+             leakage: Optional[Dict[int, float]] = None) -> PartitionPlan:
+        """Returns the serving plan for one model.
+
+        ``partition`` pins the choice (source="explicit"); ``leakage``
+        injects a precomputed/offline profile (e.g. real c-GAN SSIMs from
+        privacy/reconstruct.py) in place of the proxy.
+        """
+        if partition is not None:
+            return PartitionPlan(cfg.name, mode, partition, "explicit",
+                                 None, {}, {}, ())
+        if cfg.family != "cnn" or mode not in ("origami", "split"):
+            # no image-reconstruction metric (LM) or partition-free mode
+            # (open/enclave/slalom): honour the config's declared point.
+            return PartitionPlan(cfg.name, mode, cfg.origami.tier1_layers,
+                                 "config", None, {}, {}, ())
+        if leakage is None:
+            assert params is not None, "planner needs params for the proxy"
+            leakage = leakage_profile(params, cfg, n_images=self.n_images)
+        candidates = sorted(leakage)
+        n_max = max(candidates)
+        n_blind_all = len(cfg.cnn_layers)   # tier-1 covers every layer
+        sim = EnclaveSim(cfg, device=self.device)
+        runtime_s = {p: sim.runtime(mode, p).runtime_s
+                     for p in candidates + [n_blind_all]}
+
+        # Algorithm 1's verify-deeper rule: a candidate is safe only if the
+        # next ``verify_depth`` boundaries are also below the floor
+        # (max-pool boundaries can be safe while the next conv leaks again).
+        def safe(p: int) -> float:
+            window = range(p, min(p + self.verify_depth, n_max) + 1)
+            return max(leakage[q] for q in window if q in leakage)
+
+        feasible = tuple(p for p in candidates
+                         if safe(p) <= self.privacy_floor)
+        if not feasible:
+            # no boundary is safe to expose: blind every layer (partition =
+            # num layers, i.e. the Slalom regime — nothing leaves the
+            # blinded tier), not the deepest *candidate*, whose boundary
+            # would still be revealed.
+            chosen = n_blind_all
+        else:
+            chosen = min(feasible, key=lambda p: (runtime_s[p], p))
+        return PartitionPlan(cfg.name, mode, chosen, "planner",
+                             self.privacy_floor, dict(leakage), runtime_s,
+                             feasible)

@@ -28,6 +28,7 @@ step) triples never reuse a pad.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Any, Dict, List, Tuple
 
@@ -57,6 +58,9 @@ class BlindedLayerCache:
         self.spec = spec
         self.factor_matmuls = 0          # r@W_q matmuls issued off-path
         self._ready: Dict[Tuple[bytes, int], List[Dict[str, Any]]] = {}
+        # prefetch/take race under the serving engine: the SessionPool's
+        # refill thread inserts while the batcher thread pops
+        self._lock = threading.Lock()
 
     @classmethod
     def from_records(cls, records: List[Dict[str, Any]],
@@ -97,27 +101,47 @@ class BlindedLayerCache:
         return factors
 
     # prefetched sets a session's r tensors can pin ~100s of MB for large
-    # models; double-buffering needs exactly one set in flight, keep 2 for
-    # slack and evict FIFO so an abandoned session can't pin factors forever
+    # models; double-buffering needs exactly one set in flight — keep 2 for
+    # slack and evict FIFO so an abandoned session can't pin factors
+    # forever. The serving engine's SessionPool raises this to its pool
+    # depth via ``max_prefetched`` (runtime/sessions.py).
     MAX_PREFETCHED = 2
+
+    @property
+    def max_prefetched(self) -> int:
+        return getattr(self, "_max_prefetched", self.MAX_PREFETCHED)
+
+    @max_prefetched.setter
+    def max_prefetched(self, n: int) -> None:
+        self._max_prefetched = max(1, int(n))
 
     def prefetch(self, session_key, step: int = 0) -> None:
         """Enqueue factor generation for a future session (async dispatch:
         returns immediately, compute overlaps whatever runs on device)."""
         k = self._skey(session_key, step)
-        if k not in self._ready:
-            while len(self._ready) >= self.MAX_PREFETCHED:
+        with self._lock:
+            if k in self._ready:
+                return
+        factors = self.session_factors(session_key, step)
+        with self._lock:
+            while len(self._ready) >= self.max_prefetched:
                 self._ready.pop(next(iter(self._ready)))
-            self._ready[k] = self.session_factors(session_key, step)
+            self._ready.setdefault(k, factors)
+
+    def prefetched(self, session_key, step: int = 0) -> bool:
+        with self._lock:
+            return self._skey(session_key, step) in self._ready
 
     def clear_prefetch(self) -> None:
         """Drop all buffered factor sets (e.g. when a server goes idle)."""
-        self._ready.clear()
+        with self._lock:
+            self._ready.clear()
 
     def take(self, session_key, step: int = 0) -> List[Dict]:
         """Pop prefetched factors for this session, or compute them now."""
-        return (self._ready.pop(self._skey(session_key, step), None)
-                or self.session_factors(session_key, step))
+        with self._lock:
+            hit = self._ready.pop(self._skey(session_key, step), None)
+        return hit or self.session_factors(session_key, step)
 
     @property
     def num_layers(self) -> int:

@@ -17,14 +17,17 @@ import jax.numpy as jnp
 
 class SealedBox(NamedTuple):
     ciphertext: jax.Array      # uint32 bit-patterns
-    nonce: jax.Array           # (2,) uint32
+    nonce: jax.Array           # (>=2,) uint32 (word 2+: e.g. direction tag)
     mac: jax.Array             # () uint32
 
 
 def _keystream(key: jax.Array, nonce: jax.Array, n: int) -> jax.Array:
-    k = jax.random.fold_in(jax.random.wrap_key_data(
-        jnp.asarray(key, jnp.uint32)), nonce[0])
-    k = jax.random.fold_in(k, nonce[1])
+    """Nonce words fold in sequentially, so nonces of different lengths
+    live in disjoint key domains (a request's (lo, hi) can never collide
+    with a response's (lo, hi, tag))."""
+    k = jax.random.wrap_key_data(jnp.asarray(key, jnp.uint32))
+    for i in range(nonce.shape[0]):
+        k = jax.random.fold_in(k, nonce[i])
     return jax.random.bits(k, (n,), jnp.uint32)
 
 
@@ -42,6 +45,16 @@ def _mac(key: jax.Array, data_u32: jax.Array) -> jax.Array:
     return acc
 
 
+def _authenticated_words(nonce: jax.Array, ct: jax.Array) -> jax.Array:
+    """MAC input: length-prefixed nonce || ciphertext. The nonce selects
+    the keystream, so it MUST be authenticated — an unauthenticated nonce
+    swap would pass verification and decrypt to attacker-chosen garbage.
+    The length prefix keeps (nonce, ct) framings of different nonce widths
+    (request 2-word vs. response 3-word) from aliasing."""
+    n = jnp.asarray(nonce, jnp.uint32).reshape(-1)
+    return jnp.concatenate([jnp.asarray([n.size], jnp.uint32), n, ct])
+
+
 def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
     """Encrypt + authenticate a float tensor under the session key."""
     bits = jax.lax.bitcast_convert_type(
@@ -49,14 +62,14 @@ def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
     ks = _keystream(key, nonce, bits.size)
     ct = bits ^ ks
     return SealedBox(ciphertext=ct.reshape(x.shape), nonce=nonce,
-                     mac=_mac(key, ct))
+                     mac=_mac(key, _authenticated_words(nonce, ct)))
 
 
 def unseal(key: jax.Array, box: SealedBox,
            shape: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
     """Returns (plaintext, mac_ok). Enclave-side."""
     ct = box.ciphertext.reshape(-1)
-    ok = _mac(key, ct) == box.mac
+    ok = _mac(key, _authenticated_words(box.nonce, ct)) == box.mac
     ks = _keystream(key, box.nonce, ct.size)
     pt = jax.lax.bitcast_convert_type(ct ^ ks, jnp.float32)
     return pt.reshape(shape), ok

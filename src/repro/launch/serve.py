@@ -3,6 +3,10 @@
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --model vgg16 --smoke \
         --requests 16 --mode origami
+
+    # async engine over a mixed vgg16/vgg19 fleet, partition from the
+    # cost-model planner, logits cross-checked against the legacy server:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --engine
 """
 from __future__ import annotations
 
@@ -18,15 +22,122 @@ from repro.privacy.data import make_batch
 from repro.runtime.serving import PrivateInferenceServer, Request
 
 
+def _sealed_requests(cfg, n, rid0=0, rng=None):
+    rng = rng or np.random.default_rng(rid0)
+    keys, reqs = [], []
+    for i in range(n):
+        rid = rid0 + i
+        img = make_batch(rid, 1, cfg.image_size)[0]
+        key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
+        box = PrivateInferenceServer.client_seal(key, img, rid)
+        keys.append(key)
+        reqs.append(Request(rid=rid, box=box, shape=img.shape,
+                            session_key=key))
+    return reqs, keys
+
+
+def run_engine(args) -> None:
+    """Mixed-model continuous-batching smoke: vgg16 + vgg19 through one
+    ServingEngine, each request's logits cross-checked bit-exactly against
+    a legacy synchronous server of the same model."""
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    get = get_smoke if args.smoke else get_config
+    names = [m.strip() for m in args.models.split(",") if m.strip()]
+    engine = ServingEngine(EngineConfig(max_batch=args.batch,
+                                        max_wait_ms=args.max_wait_ms))
+    legacy, per_model = {}, {}
+    for i, name in enumerate(names):
+        cfg = get(name)
+        params = M.init_params(cfg, jax.random.PRNGKey(i))
+        entry = engine.register_model(name, cfg, params, mode=args.mode,
+                                      privacy_floor=args.privacy_floor)
+        print(f"[engine] registered {entry.plan.summary()} "
+              f"quote={entry.quote.measurement[:12]}…")
+        legacy[name] = PrivateInferenceServer(cfg, params, mode=args.mode,
+                                              max_batch=args.batch)
+        legacy[name].executor = entry.executor    # same weights, same cache
+        per_model[name] = cfg
+
+    # interleave the models' request streams (worst case for a
+    # fixed-stride batcher, the normal case for the bucket batcher);
+    # disjoint rid spaces per model, keys looked up by rid
+    n_each = args.requests // len(names)
+    streams, key_by_rid = {}, {}
+    for i, m in enumerate(per_model):
+        reqs, keys = _sealed_requests(per_model[m], n_each,
+                                      rid0=n_each * i)
+        streams[m] = (reqs, keys)
+        key_by_rid.update({r.rid: k for r, k in zip(reqs, keys)})
+    t0 = time.time()
+    futures = []
+    for j in range(n_each):
+        for m in names:
+            futures.append((m, j, engine.submit(m, streams[m][0][j])))
+    responses = [(m, j, f.result(timeout=300)) for m, j, f in futures]
+    dt = time.time() - t0
+    ok = sum(r.ok for _, _, r in responses)
+
+    # cross-check: every engine response must be bit-identical to the
+    # legacy synchronous server run over the same per-model stream
+    mismatches = 0
+    for m in names:
+        reqs, _ = streams[m]
+        want = []
+        for i in range(0, n_each, args.batch):
+            want += legacy[m].serve_batch(reqs[i:i + args.batch])
+        want_logits = {r.rid: PrivateInferenceServer.client_open(
+            key_by_rid[r.rid], r.box, (per_model[m].num_classes,))
+            for r in want if r.ok}
+        for _, j, resp in [t for t in responses if t[0] == m]:
+            got = PrivateInferenceServer.client_open(
+                key_by_rid[resp.rid], resp.box,
+                (per_model[m].num_classes,))
+            if not np.array_equal(got, want_logits[resp.rid]):
+                mismatches += 1
+    order = list(engine.completion_order)
+    ooo = any(order[k][0] != order[k + 1][0] for k in range(len(order) - 1))
+    stats = engine.stats.snapshot(engine)
+    print(f"[engine] {ok}/{len(responses)} ok in {dt:.2f}s "
+          f"({dt / max(len(responses), 1) * 1e3:.0f} ms/req) "
+          f"batches={stats['batches']} padded={stats['padded_slots']} "
+          f"out_of_order={ooo}")
+    print(f"[engine] p50={stats['p50_latency_s']:.3f}s "
+          f"p95={stats['p95_latency_s']:.3f}s "
+          f"ttfb={stats['time_to_first_batch_s']:.3f}s "
+          f"sessions={stats['sessions']}")
+    print(f"[engine] bit-identical vs legacy: "
+          f"{'OK' if mismatches == 0 else f'{mismatches} MISMATCHES'}")
+    engine.close()
+    if mismatches or ok != len(responses):
+        raise SystemExit(1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vgg16")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mode", default="origami",
                     choices=("open", "enclave", "split", "slalom", "origami"))
-    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="default: 16 (legacy loop) / 32 (--engine, the "
+                         "mixed-smoke acceptance floor)")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", action="store_true",
+                    help="drive the async ServingEngine over --models")
+    ap.add_argument("--models", default="vgg16,vgg19",
+                    help="comma list for --engine (mixed traffic)")
+    ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--privacy-floor", type=float, default=None,
+                    help="SSIM leakage floor for the partition planner "
+                         "(default: use the config's declared partition)")
     args = ap.parse_args()
+
+    if args.requests is None:
+        args.requests = 32 if args.engine else 16
+    if args.engine:
+        run_engine(args)
+        return
 
     cfg = get_smoke(args.model) if args.smoke else get_config(args.model)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -37,17 +148,7 @@ def main():
     quote = server.attest()
     print(f"[serve] attested enclave measurement={quote.measurement[:16]}… "
           f"partition={quote.partition} mode={args.mode}")
-    rng = np.random.default_rng(0)
-    keys, reqs, images = [], [], []
-    for rid in range(args.requests):
-        img = make_batch(rid, 1, cfg.image_size)[0]
-        key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
-        box = PrivateInferenceServer.client_seal(key, img, rid)
-        keys.append(key)
-        images.append(img)
-        reqs.append(Request(rid=rid, box=box, shape=img.shape,
-                            session_key=key))
-
+    reqs, keys = _sealed_requests(cfg, args.requests)
     t0 = time.time()
     responses = server.serve(reqs)
     dt = time.time() - t0

@@ -1,0 +1,407 @@
+"""Async blinded-serving engine: continuous micro-batching over enclaves.
+
+The paper's deployment (Fig. 3a) is request/response; the seed server was a
+synchronous list loop — fixed-stride chunking, blinding factors generated
+between batches, one model per process. ``ServingEngine`` is the serving
+layer Privado-style systems put in front of enclave inference:
+
+- **request queue with admission control**: ``submit`` returns a future
+  immediately; past ``max_queue`` in-flight requests the engine sheds load
+  (``Response.ok=False``) instead of growing the queue without bound, and
+  per-request deadlines drop work that can no longer be served in time
+  *before* it costs an unseal or an inference slot.
+- **continuous micro-batcher**: requests bucket by (model, input shape).
+  A bucket dispatches the moment it holds ``max_batch`` requests **or**
+  its oldest request has waited ``max_wait_ms`` — no more fixed strides,
+  so a full bucket never waits on an unrelated straggler.
+- **out-of-order completion**: responses resolve per-request futures keyed
+  by ``rid``; a later-submitted model's full bucket can (and does)
+  complete before an earlier partial bucket flushes on its timer.
+- **per-model executor registry**: one engine serves vgg16 and vgg19 (and
+  a smoke LM) concurrently, each with its own OrigamiExecutor, attestation
+  quote, blinding ``SessionPool`` (runtime/sessions.py) and partition plan
+  from ``core/planner.py``.
+
+Batches execute on the single batcher thread (the enclave executes one
+batch at a time; JAX async dispatch still overlaps the session pool's
+factor matmuls), so per-executor state needs no further locking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.attestation import Quote, measure_enclave
+from repro.core.origami import OrigamiExecutor
+from repro.core.planner import PartitionPlan, PartitionPlanner
+from repro.runtime.sessions import SessionPool
+from repro.runtime.straggler import StepWatchdog
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_wait_ms: float = 5.0            # bucket age that forces a flush
+    max_queue: int = 256                # admission-control bound (in-flight)
+    default_deadline_s: Optional[float] = None
+    session_pool_depth: int = 4
+
+
+@dataclasses.dataclass
+class _Pending:
+    model: str
+    req: "Request"
+    future: Future
+    submit_t: float
+    deadline_s: Optional[float]
+
+
+@dataclasses.dataclass
+class _ModelEntry:
+    name: str
+    cfg: ModelConfig
+    executor: OrigamiExecutor
+    quote: Quote
+    pool: SessionPool
+    plan: PartitionPlan
+    input_key: str = "images"
+    input_dtype: Optional[str] = None    # cast unsealed floats (LM tokens)
+
+
+class EngineStats:
+    """Aggregate serving telemetry (queried live, not a snapshot)."""
+
+    LAT_WINDOW = 4096
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.rejected = 0                # admission control
+        self.expired = 0                 # deadline passed before dispatch
+        self.mac_failures = 0
+        self.batches = 0
+        self.padded_slots = 0
+        self.batched_requests = 0
+        self.start_t = time.monotonic()
+        self.first_batch_t: Optional[float] = None
+        self.latencies: Deque[float] = deque(maxlen=self.LAT_WINDOW)
+
+    # -- recording ---------------------------------------------------------
+    def record_batch(self, n_valid: int, pad: int) -> None:
+        with self.lock:
+            if self.first_batch_t is None:
+                self.first_batch_t = time.monotonic()
+            self.batches += 1
+            self.batched_requests += n_valid
+            self.padded_slots += pad
+
+    def record_done(self, latency_s: float) -> None:
+        with self.lock:
+            self.completed += 1
+            self.latencies.append(latency_s)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def time_to_first_batch_s(self) -> Optional[float]:
+        if self.first_batch_t is None:
+            return None
+        return self.first_batch_t - self.start_t
+
+    def _quantile(self, q: float) -> Optional[float]:
+        with self.lock:
+            lat = sorted(self.latencies)
+        if not lat:
+            return None
+        return lat[min(len(lat) - 1, int(q * len(lat)))]
+
+    def p50_latency_s(self) -> Optional[float]:
+        return self._quantile(0.50)
+
+    def p95_latency_s(self) -> Optional[float]:
+        return self._quantile(0.95)
+
+    def snapshot(self, engine: "ServingEngine") -> Dict[str, object]:
+        with self.lock:
+            out = {
+                "submitted": self.submitted, "completed": self.completed,
+                "rejected": self.rejected, "expired": self.expired,
+                "mac_failures": self.mac_failures, "batches": self.batches,
+                "padded_slots": self.padded_slots,
+                "batched_requests": self.batched_requests,
+            }
+        out["queue_depth"] = engine.queue_depth()
+        out["time_to_first_batch_s"] = self.time_to_first_batch_s
+        out["p50_latency_s"] = self.p50_latency_s()
+        out["p95_latency_s"] = self.p95_latency_s()
+        out["sessions"] = {name: e.pool.stats()
+                           for name, e in engine.models.items()}
+        out["matmuls"] = {
+            name: {"mode": e.executor.mode,
+                   "device": e.executor.telemetry.device_matmuls,
+                   "enclave": e.executor.telemetry.enclave_matmuls}
+            for name, e in engine.models.items()}
+        return out
+
+
+class ServingEngine:
+    """Continuous micro-batching engine over a registry of enclaves."""
+
+    def __init__(self, cfg: Optional[EngineConfig] = None, **kw):
+        self.cfg = cfg or EngineConfig(**kw)
+        self.models: Dict[str, _ModelEntry] = {}
+        self.stats = EngineStats()
+        self.watchdog = StepWatchdog()
+        self._buckets: "OrderedDict[Tuple[str, Tuple[int, ...]], Deque[_Pending]]" = OrderedDict()
+        self._futures: Dict[Tuple[str, int], Future] = {}   # (model, rid)
+        self._in_flight = 0
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._flush_t = -1.0              # see flush()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        # (model, rid) completion log, bounded like EngineStats.latencies —
+        # an unbounded list would leak one tuple per request forever
+        self.completion_order: Deque[Tuple[str, int]] = deque(
+            maxlen=EngineStats.LAT_WINDOW)
+
+    # -- registry ----------------------------------------------------------
+    def register_model(self, name: str, cfg: ModelConfig, params, *,
+                       mode: str = "origami", impl: str = "fused",
+                       precompute: bool = True, input_key: str = "images",
+                       input_dtype: Optional[str] = None,
+                       partition: Optional[int] = None,
+                       privacy_floor: Optional[float] = None,
+                       planner: Optional[PartitionPlanner] = None,
+                       leakage: Optional[Dict[int, float]] = None
+                       ) -> _ModelEntry:
+        """Build an executor for ``name`` and admit it to the registry.
+
+        The partition point comes from, in order: the explicit ``partition``
+        argument, the cost-model planner (when ``privacy_floor`` or
+        ``planner`` is given), or the config's declared
+        ``origami.tier1_layers``.
+        """
+        if planner is None and privacy_floor is not None:
+            planner = PartitionPlanner(privacy_floor=privacy_floor)
+        if planner is not None or partition is not None:
+            planner = planner or PartitionPlanner()
+            plan = planner.plan(cfg, params, mode=mode, partition=partition,
+                                leakage=leakage)
+        else:
+            plan = PartitionPlan(cfg.name, mode, cfg.origami.tier1_layers,
+                                 "config", None, {}, {}, ())
+        executor = OrigamiExecutor(cfg, params, mode=mode,
+                                   partition=plan.partition, impl=impl,
+                                   precompute=precompute)
+        return self.register_executor(name, executor, input_key=input_key,
+                                      input_dtype=input_dtype, plan=plan)
+
+    def register_executor(self, name: str, executor: OrigamiExecutor, *,
+                          input_key: str = "images",
+                          input_dtype: Optional[str] = None,
+                          plan: Optional[PartitionPlan] = None,
+                          pool: Optional[SessionPool] = None) -> _ModelEntry:
+        """Admit a pre-built executor (the legacy server's compat path)."""
+        assert name not in self.models, f"model {name!r} already registered"
+        plan = plan or PartitionPlan(executor.cfg.name, executor.mode,
+                                     executor.partition, "explicit",
+                                     None, {}, {}, ())
+        entry = _ModelEntry(
+            name=name, cfg=executor.cfg, executor=executor,
+            quote=measure_enclave(executor.cfg, executor.params,
+                                  executor.partition),
+            pool=pool or SessionPool(executor,
+                                     depth=self.cfg.session_pool_depth),
+            plan=plan, input_key=input_key, input_dtype=input_dtype)
+        with self._lock:
+            self.models[name] = entry
+        return entry
+
+    def attest(self, name: str) -> Quote:
+        return self.models[name].quote
+
+    # -- submission --------------------------------------------------------
+    def submit(self, model: str, req: "Request",
+               deadline_s: Optional[float] = None) -> Future:
+        """Queue one sealed request; resolves to a ``Response``.
+
+        Rejected (queue full / unknown model / duplicate in-flight rid)
+        requests resolve immediately with ``ok=False`` — admission control
+        is part of the response contract, not an exception path.
+        """
+        from repro.runtime.serving import Response
+        fut: Future = Future()
+        now = time.monotonic()
+        deadline = (deadline_s if deadline_s is not None
+                    else self.cfg.default_deadline_s)
+        with self._cv:
+            self.stats.submitted += 1
+            entry = self.models.get(model)
+            if entry is None or self._closed:
+                self.stats.rejected += 1
+                fut.set_result(Response(req.rid, None, False, 0.0))
+                return fut
+            if (self._in_flight >= self.cfg.max_queue
+                    or (model, req.rid) in self._futures):
+                self.stats.rejected += 1
+                fut.set_result(Response(req.rid, None, False, 0.0))
+                return fut
+            self._futures[(model, req.rid)] = fut
+            bucket_key = (model, tuple(req.shape))
+            bucket = self._buckets.setdefault(bucket_key, deque())
+            bucket.append(_Pending(model, req, fut, now, deadline))
+            self._in_flight += 1
+            self._ensure_thread()
+            self._cv.notify_all()
+        return fut
+
+    def submit_many(self, model: str, reqs: List["Request"],
+                    deadline_s: Optional[float] = None) -> List[Future]:
+        return [self.submit(model, r, deadline_s) for r in reqs]
+
+    def future_for(self, model: str, rid: int) -> Optional[Future]:
+        """The in-flight future for (model, rid), if any."""
+        with self._lock:
+            return self._futures.get((model, rid))
+
+    def flush(self) -> None:
+        """Dispatch everything already queued without waiting for
+        max_batch or the max_wait timer — for callers that know their
+        request list is complete (e.g. the synchronous serve() wrapper,
+        whose tail batch would otherwise idle out the timer). Requests
+        submitted after the flush batch up normally."""
+        with self._cv:
+            self._flush_t = time.monotonic()
+            self._cv.notify_all()
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    # -- batcher -----------------------------------------------------------
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._batch_loop,
+                                            name="serving-engine-batcher",
+                                            daemon=True)
+            self._thread.start()
+
+    def _ready_bucket(self, now: float):
+        """The ready bucket (full or past max_wait) whose head request has
+        waited longest — head age, not registry order, breaks ties so a
+        persistently full hot bucket cannot starve a timer-expired trickle
+        bucket. Also returns the earliest upcoming flush time across
+        non-ready buckets (the cv wait timeout when nothing is ready)."""
+        max_wait = self.cfg.max_wait_ms / 1e3
+        best_key = best_head_t = None
+        next_deadline = None
+        for key, bucket in self._buckets.items():
+            if not bucket:
+                continue
+            head_t = bucket[0].submit_t
+            if (len(bucket) >= self.cfg.max_batch
+                    or head_t + max_wait <= now
+                    or head_t <= self._flush_t):
+                if best_head_t is None or head_t < best_head_t:
+                    best_key, best_head_t = key, head_t
+            else:
+                flush_at = head_t + max_wait
+                next_deadline = (flush_at if next_deadline is None
+                                 else min(next_deadline, flush_at))
+        return best_key, next_deadline
+
+    def _batch_loop(self) -> None:
+        from repro.runtime.serving import Response
+        while True:
+            with self._cv:
+                while True:
+                    if self._closed and self._in_flight == 0:
+                        return
+                    now = time.monotonic()
+                    key, next_flush = self._ready_bucket(now)
+                    if key is not None:
+                        break
+                    timeout = (None if next_flush is None
+                               else max(1e-4, next_flush - now))
+                    self._cv.wait(timeout=timeout)
+                bucket = self._buckets[key]
+                batch: List[_Pending] = []
+                expired: List[_Pending] = []
+                while bucket and len(batch) < self.cfg.max_batch:
+                    p = bucket.popleft()
+                    if (p.deadline_s is not None
+                            and now - p.submit_t > p.deadline_s):
+                        expired.append(p)
+                    else:
+                        batch.append(p)
+                self._in_flight -= len(batch) + len(expired)
+                if not bucket:
+                    self._buckets.pop(key, None)
+            for p in expired:
+                with self.stats.lock:
+                    self.stats.expired += 1
+                self._finish(p, Response(p.req.rid, None, False,
+                                         time.monotonic() - p.submit_t))
+            if batch:
+                try:
+                    self._dispatch(self.models[batch[0].model], batch)
+                except Exception as exc:  # noqa: BLE001 — fail the batch,
+                    for p in batch:       # not the engine
+                        with self._lock:
+                            self._futures.pop((p.model, p.req.rid), None)
+                        if not p.future.done():
+                            p.future.set_exception(exc)
+
+    def _dispatch(self, entry: _ModelEntry, batch: List[_Pending]) -> None:
+        """One enclave dispatch through the same sealed-batch primitive as
+        the legacy server (runtime/serving.py) — single-sourcing the
+        unseal -> MAC-filter -> pad -> infer -> seal pipeline is what keeps
+        the engine bit-identical to its legacy oracle."""
+        from repro.runtime.serving import Response, execute_sealed_batch
+        self.watchdog.start_step()
+        boxes, n_valid, pad = execute_sealed_batch(
+            entry.executor, [p.req for p in batch],
+            input_key=entry.input_key, max_batch=self.cfg.max_batch,
+            session_key=entry.pool.acquire,   # lazy: only consumed if a
+            input_dtype=entry.input_dtype)    # valid request reaches infer
+        if n_valid:
+            self.stats.record_batch(n_valid, pad)
+        with self.stats.lock:
+            self.stats.mac_failures += sum(b is None for b in boxes)
+        self.watchdog.end_step()
+        for p, box in zip(batch, boxes):
+            self._finish(p, Response(p.req.rid, box, box is not None,
+                                     time.monotonic() - p.submit_t))
+
+    def _finish(self, p: _Pending, resp) -> None:
+        if resp.ok:
+            self.stats.record_done(resp.latency_s)
+        with self._lock:
+            self.completion_order.append((p.model, p.req.rid))
+            self._futures.pop((p.model, p.req.rid), None)
+        p.future.set_result(resp)
+
+    # -- lifecycle ---------------------------------------------------------
+    def drain(self, timeout_s: float = 60.0) -> bool:
+        """Block until the queue is empty (True) or timeout (False)."""
+        end = time.monotonic() + timeout_s
+        while time.monotonic() < end:
+            if self.queue_depth() == 0:
+                return True
+            time.sleep(0.002)
+        return self.queue_depth() == 0
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        for entry in self.models.values():
+            entry.pool.close()

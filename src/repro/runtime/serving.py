@@ -6,20 +6,25 @@ trust boundary, the OrigamiExecutor runs tier-1 blinded + tier-2 open, and
 the result is sealed back to the client. Requests are micro-batched with
 padding; the watchdog (runtime/straggler) monitors per-batch latency.
 
-Blinding precompute (DESIGN.md §4): each micro-batch runs under its own
-blinding session key. With ``precompute=True`` (default) the executor's
-``BlindedLayerCache`` quantizes tier-1 weights once at first dispatch, and
-the server double-buffers unblinding factors — after dispatching batch k it
-immediately enqueues factor generation for batch k+1's session, so the
-``r @ W_q`` matmuls overlap device compute instead of sitting on the
-request path (the paper's offline enclave precomputation).
+``PrivateInferenceServer`` is the synchronous single-model front end.
+``serve_batch`` is the one-enclave-dispatch primitive (unseal -> filter
+failed MACs -> pad -> blinded infer -> seal); ``serve`` is now a thin
+compat wrapper over the async ``ServingEngine`` (runtime/engine.py), which
+adds continuous micro-batching, deadlines, admission control and an N-deep
+blinding-session pool (runtime/sessions.py) on top of the same primitive.
+
+Nonce discipline: requests seal under the 64-bit rid split
+``[lo, hi]``; responses under ``[lo, hi, DIRECTION_RESPONSE]`` — same
+split, third word tags the direction, so no (key, nonce) pair is ever
+reused between the two directions or between rids differing only in high
+bits (the seed truncated the response nonce to 32 rid bits).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +35,23 @@ from repro.core.attestation import Quote, measure_enclave, verify_quote
 from repro.core.origami import OrigamiExecutor
 from repro.core.sealing import SealedBox, seal, unseal
 from repro.runtime.straggler import StepWatchdog
+
+# third nonce word for enclave->client traffic (requests use 2-word nonces;
+# sealing._keystream folds nonce words sequentially, so the domains differ)
+DIRECTION_RESPONSE = 0xEE
+
+
+def request_nonce(rid: int) -> jax.Array:
+    return jnp.asarray([rid & 0xFFFFFFFF, (rid >> 32) & 0xFFFFFFFF],
+                       jnp.uint32)
+
+
+def response_nonce(rid: int) -> jax.Array:
+    """Full 64-bit rid split + direction tag (not the seed's 32-bit
+    truncation, which reused a (key, nonce) pair across rids that differed
+    only in their high 32 bits)."""
+    return jnp.asarray([rid & 0xFFFFFFFF, (rid >> 32) & 0xFFFFFFFF,
+                        DIRECTION_RESPONSE], jnp.uint32)
 
 
 @dataclasses.dataclass
@@ -48,6 +70,48 @@ class Response:
     latency_s: float
 
 
+def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
+                         *, input_key: str, max_batch: int,
+                         session_key, input_dtype: Optional[str] = None
+                         ) -> Tuple[List[Optional[SealedBox]], int, int]:
+    """The one sealed-batch primitive both serving paths share:
+    unseal -> filter failed MACs -> pad -> blinded infer -> seal responses.
+
+    Returns ``(boxes, n_valid, pad)`` with ``boxes`` positional —
+    ``boxes[i] is None`` iff request i failed its MAC (it never reached
+    the executor: no inference slot, no blinding, no telemetry skew).
+    ``session_key`` may be a zero-arg callable (e.g. ``SessionPool.
+    acquire``), only invoked once at least one valid request will reach
+    the executor — an all-invalid batch must not burn a blinding session.
+    Keeping this in one place is what keeps the async engine bit-identical
+    to the legacy server it is cross-checked against.
+    """
+    valid_idx: List[int] = []
+    inputs: List[np.ndarray] = []
+    for i, r in enumerate(requests):
+        pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
+                        r.shape)
+        if bool(ok):
+            valid_idx.append(i)
+            inputs.append(np.asarray(pt))
+    boxes: List[Optional[SealedBox]] = [None] * len(requests)
+    if not inputs:
+        return boxes, 0, 0
+    # pad to max_batch so one compiled executable serves all sizes
+    pad = max_batch - len(inputs)
+    x = jnp.asarray(np.stack(inputs + [np.zeros_like(inputs[0])] * pad))
+    if input_dtype is not None:          # LM tokens ride as f32 payloads
+        x = x.astype(input_dtype)
+    sk = session_key() if callable(session_key) else session_key
+    result = executor.infer({input_key: x}, session_key=sk)
+    logits = np.asarray(result.logits, np.float32)[:len(inputs)]
+    for row, i in enumerate(valid_idx):
+        r = requests[i]
+        boxes[i] = seal(jnp.asarray(r.session_key, jnp.uint32),
+                        jnp.asarray(logits[row]), response_nonce(r.rid))
+    return boxes, len(inputs), pad
+
+
 class PrivateInferenceServer:
     """Batched Origami serving over a model (CNN or LM single-shot)."""
 
@@ -64,6 +128,7 @@ class PrivateInferenceServer:
         self.watchdog = StepWatchdog()
         self.processed = 0
         self.batches = 0
+        self._engine = None              # lazy ServingEngine (serve())
         # server-side root for per-batch blinding sessions (distinct from the
         # clients' sealing keys): batch k runs under fold_in(root, k). MUST
         # be fresh entropy per instance — a fixed or colliding root would
@@ -83,9 +148,8 @@ class PrivateInferenceServer:
 
     @staticmethod
     def client_seal(key: np.ndarray, x: np.ndarray, rid: int) -> SealedBox:
-        nonce = jnp.asarray([rid & 0xFFFFFFFF, (rid >> 32) & 0xFFFFFFFF],
-                            jnp.uint32)
-        return seal(jnp.asarray(key, jnp.uint32), jnp.asarray(x), nonce)
+        return seal(jnp.asarray(key, jnp.uint32), jnp.asarray(x),
+                    request_nonce(rid))
 
     @staticmethod
     def client_open(key: np.ndarray, box: SealedBox,
@@ -96,44 +160,81 @@ class PrivateInferenceServer:
 
     # -- server side -------------------------------------------------------
     def serve_batch(self, requests: List[Request]) -> List[Response]:
+        """One enclave dispatch. Callers own batching: more than
+        ``max_batch`` requests is an error (the seed silently dropped the
+        tail) — use ``serve`` for arbitrary request lists."""
+        if len(requests) > self.max_batch:
+            raise ValueError(
+                f"serve_batch got {len(requests)} requests for max_batch="
+                f"{self.max_batch}; use serve() to micro-batch")
         self.watchdog.start_step()
         t0 = time.monotonic()
-        inputs, valid = [], []
-        for r in requests[: self.max_batch]:
-            pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
-                            r.shape)
-            valid.append(bool(ok))
-            inputs.append(np.asarray(pt))
-        n = len(inputs)
-        if n == 0:
-            return []
-        # pad to max_batch so one compiled executable serves all sizes
-        pad = self.max_batch - n
-        x = np.stack(inputs + [np.zeros_like(inputs[0])] * pad)
-        result = self.executor.infer({self.input_key: jnp.asarray(x)},
-                                     session_key=self._blind_session(
-                                         self.batches))
-        self.batches += 1
-        # double-buffer: enqueue the NEXT session's unblinding factors now,
-        # so their field matmuls overlap this batch's device compute
-        self.executor.prepare_session(self._blind_session(self.batches))
-        logits = np.asarray(result.logits, np.float32)[:n]
+        boxes, n_valid, _ = execute_sealed_batch(
+            self.executor, requests, input_key=self.input_key,
+            max_batch=self.max_batch,
+            session_key=self._blind_session(self.batches))
+        if n_valid:
+            self.batches += 1
+            # double-buffer: enqueue the NEXT session's unblinding factors
+            # now, so their field matmuls overlap this batch's device
+            # compute (the engine's SessionPool deepens this to N)
+            self.executor.prepare_session(self._blind_session(self.batches))
+            self.processed += n_valid
         self.watchdog.end_step()
-        out = []
         dt = time.monotonic() - t0
-        for i, r in enumerate(requests[: self.max_batch]):
-            if not valid[i]:
-                out.append(Response(r.rid, None, False, dt))
-                continue
-            box = seal(jnp.asarray(r.session_key, jnp.uint32),
-                       jnp.asarray(logits[i]),
-                       jnp.asarray([r.rid & 0xFFFFFFFF, 0xEE], jnp.uint32))
-            out.append(Response(r.rid, box, True, dt))
-        self.processed += n
-        return out
+        # positional assembly (not keyed by rid — rids may repeat)
+        return [Response(r.rid, box, box is not None, dt)
+                for r, box in zip(requests, boxes)]
 
     def serve(self, requests: List[Request]) -> List[Response]:
-        responses = []
-        for i in range(0, len(requests), self.max_batch):
-            responses += self.serve_batch(requests[i:i + self.max_batch])
+        """Compat wrapper: drives the async ServingEngine and returns
+        responses in request order (the engine completes out of order).
+
+        Legacy contract: every request gets a real answer. The engine
+        rejects a rid that is already in flight, so duplicate rids are
+        submitted in waves — each wave waits for the previous occurrence
+        of its rid to finish.
+        """
+        responses: List[Optional[Response]] = [None] * len(requests)
+        waves: List[List[int]] = []
+        depth: dict = {}
+        for i, r in enumerate(requests):
+            d = depth.get(r.rid, 0)
+            depth[r.rid] = d + 1
+            while len(waves) <= d:
+                waves.append([])
+            waves[d].append(i)
+        for wave in waves:
+            futures = [(i, self.engine.submit("default", requests[i]))
+                       for i in wave]
+            # the list is complete — don't let a partial tail batch idle
+            # out the max_wait timer
+            self.engine.flush()
+            for i, f in futures:
+                responses[i] = f.result(timeout=300.0)
         return responses
+
+    @property
+    def engine(self):
+        """Lazily-built single-model ServingEngine sharing this server's
+        executor (so serve() and serve_batch() hit the same caches).
+
+        ``max_queue`` is effectively unbounded: serve() is synchronous, so
+        admission control would silently shed the tail of a long request
+        list the legacy loop used to serve."""
+        if self._engine is None:
+            from repro.runtime.engine import EngineConfig, ServingEngine
+            self._engine = ServingEngine(EngineConfig(
+                max_batch=self.max_batch, max_wait_ms=25.0,
+                max_queue=1_000_000_000))
+            self._engine.register_executor("default", self.executor,
+                                           input_key=self.input_key)
+        return self._engine
+
+    def close(self) -> None:
+        """Stop the compat engine's batcher + session-pool threads (they
+        are daemons, but long-lived processes creating many servers should
+        release them and their prefetched factor sets deterministically)."""
+        if self._engine is not None:
+            self._engine.close()
+            self._engine = None

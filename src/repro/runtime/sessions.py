@@ -1,0 +1,207 @@
+"""Blinding-session pool: pre-generated (r, u) factor sets, N deep.
+
+PR 1's serving loop double-buffered blinding sessions: after dispatching
+batch k it enqueued factor generation for batch k+1 — exactly one session
+of slack. Under bursty load that is not enough: two back-to-back batches
+drain the buffer and the second one pays the ``r @ W_q`` field matmuls on
+the request path again.
+
+``SessionPool`` generalizes the double-buffer into an N-deep ring:
+
+- **keys**: session keys are ``fold_in(root, counter)`` with a fresh
+  64-bit entropy root per pool (same construction and rationale as the
+  legacy server — a colliding root would reuse one-time pads across
+  replicas).
+- **refill**: a daemon thread keeps ``depth`` sessions prefetched into the
+  executor's ``BlindedLayerCache`` (whose ``max_prefetched`` is raised to
+  match). JAX dispatch is async, so the refill thread mostly *enqueues*
+  device work that overlaps the batcher thread's inference.
+- **reuse guard**: every key handed out is remembered (as bytes) and
+  re-issue raises — the one-time-pad argument (DESIGN.md §3) dies the
+  moment a session is used twice. ``stats()`` exposes
+  consumed/refilled/misses/reuse-checked counters for EngineStats.
+
+The pool is executor-agnostic: before the first batch builds the layer
+cache, ``prepare`` is a no-op and ``acquire`` simply hands out fresh keys
+(factors are then computed on the request path once, as in the seed).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional, Set
+
+import jax
+import numpy as np
+
+
+class SessionReuseError(RuntimeError):
+    """A blinding session key was issued twice — one-time pad violation."""
+
+
+def fresh_root(seed: Optional[int] = None) -> jax.Array:
+    """64 entropy bits via two 32-bit words (PRNGKey seeds are C-long)."""
+    if seed is not None:
+        return jax.random.fold_in(jax.random.PRNGKey(seed & 0xFFFFFFFF),
+                                  (seed >> 32) & 0xFFFFFFFF)
+    w0, w1 = np.frombuffer(os.urandom(8), np.uint32)
+    return jax.random.fold_in(jax.random.PRNGKey(int(w0)), int(w1))
+
+
+class SessionPool:
+    """N-deep pre-generated blinding-session ring for one executor."""
+
+    def __init__(self, executor=None, *, depth: int = 4,
+                 root: Optional[jax.Array] = None,
+                 background: bool = True):
+        assert depth >= 1, depth
+        self.executor = executor
+        self.depth = depth
+        self._root = root if root is not None else fresh_root()
+        self._next = 0                     # next counter to prefetch
+        self._head = 0                     # next counter to hand out
+        self._issued: Set[bytes] = set()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
+        # telemetry
+        self.consumed = 0
+        self.refilled = 0
+        self.misses = 0                    # acquired with factors not ready
+        self.refill_errors = 0
+        self.reuse_checked = 0
+        cache = self._cache()
+        if cache is not None:
+            cache.max_prefetched = max(depth, cache.max_prefetched)
+        self._thread: Optional[threading.Thread] = None
+        if background:
+            self._thread = threading.Thread(
+                target=self._refill_loop, name="session-pool-refill",
+                daemon=True)
+            self._thread.start()
+
+    # -- internals ---------------------------------------------------------
+    def _cache(self):
+        return getattr(self.executor, "cache", None) if self.executor else None
+
+    def _caches(self):
+        """Every layer cache the executor has built — one per batch shape.
+
+        The executor swaps ``cache`` per input shape ((model, shape)
+        buckets each get their own), so prefetching only into the current
+        one would thrash under mixed-shape traffic: every shape switch
+        would miss and pay the factor matmuls on the hot path. Prefetching
+        each session into all known shape caches costs depth x n_shapes
+        factor sets (FIFO-evicted, bounded by max_prefetched) and keeps
+        every bucket hitting."""
+        if self.executor is None:
+            return []
+        # snapshot the attribute once: the executor rebinds _caches
+        # copy-on-write (origami.py), so the dict we iterate never mutates
+        by_shape = getattr(self.executor, "_caches", {})
+        caches = {id(c): c for c in by_shape.values() if c is not None}
+        cur = self._cache()
+        if cur is not None:
+            caches.setdefault(id(cur), cur)
+        return list(caches.values())
+
+    def _key_for(self, counter: int) -> jax.Array:
+        return jax.random.fold_in(self._root, counter)
+
+    def _prefetch(self, counter: int) -> bool:
+        """Generate factors for one future session. False if no cache yet."""
+        caches = self._caches()
+        for cache in caches:
+            cache.max_prefetched = max(self.depth + 1, cache.max_prefetched)
+            cache.prefetch(self._key_for(counter))
+        return bool(caches)
+
+    def _refill_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and (
+                        self._next - self._head >= self.depth
+                        or self._cache() is None):
+                    # before the first batch builds the layer cache there is
+                    # nothing to prefetch — poll instead of burning counters
+                    self._cv.wait(
+                        timeout=0.05 if self._cache() is None else None)
+                if self._closed:
+                    return
+                counter = self._next
+                self._next += 1
+            try:
+                ok = self._prefetch(counter)
+            except Exception:  # noqa: BLE001 — a dead refill thread would
+                # silently put every factor matmul back on the hot path;
+                # count the failure and keep the loop alive (acquire()
+                # falls back to synchronous factors for this session)
+                with self._lock:
+                    self.refill_errors += 1
+                continue
+            if ok:
+                with self._lock:
+                    self.refilled += 1
+
+    # -- public API --------------------------------------------------------
+    def acquire(self) -> jax.Array:
+        """Pop the next never-before-issued session key.
+
+        The key's factors are prefetched whenever the executor's layer
+        cache exists; a miss (factors not ready) is counted, not fatal —
+        the executor computes them synchronously on first use.
+        """
+        with self._cv:
+            counter = self._head
+            self._head += 1
+            if self._head > self._next:     # outran the refill thread
+                self._next = self._head
+            key = self._key_for(counter)
+            kb = np.asarray(key).tobytes()
+            self.reuse_checked += 1
+            if kb in self._issued:
+                raise SessionReuseError(
+                    f"blinding session {counter} issued twice")
+            self._issued.add(kb)
+            self.consumed += 1
+            cache = self._cache()
+            if cache is None or not cache.prefetched(key):
+                self.misses += 1
+            self._cv.notify_all()           # wake refill to top the pool up
+        return key
+
+    def prime(self) -> None:
+        """Synchronously top the pool up (e.g. right after the first batch
+        built the layer cache, or when running without the thread)."""
+        with self._lock:
+            start, self._next = self._next, max(self._next,
+                                                self._head + self.depth)
+            stop = self._next
+        for c in range(start, stop):
+            if self._prefetch(c):
+                with self._lock:
+                    self.refilled += 1
+
+    def ready(self) -> int:
+        """How many handed-out-next sessions have factors prefetched."""
+        cache = self._cache()
+        if cache is None:
+            return 0
+        with self._lock:
+            head, nxt = self._head, self._next
+        return sum(cache.prefetched(self._key_for(c))
+                   for c in range(head, nxt))
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"consumed": self.consumed, "refilled": self.refilled,
+                    "misses": self.misses, "reuse_checked": self.reuse_checked,
+                    "refill_errors": self.refill_errors,
+                    "depth": self.depth, "pending": self._next - self._head}
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

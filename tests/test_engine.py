@@ -1,0 +1,218 @@
+"""Async serving engine: equivalence vs. the legacy server, out-of-order
+completion under mixed traffic, session-pool hygiene, admission control."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.privacy.data import make_batch
+from repro.runtime.engine import EngineConfig, ServingEngine
+from repro.runtime.serving import PrivateInferenceServer, Request
+from repro.runtime.sessions import SessionPool, SessionReuseError
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    cfg16 = get_smoke("vgg16")
+    cfg19 = get_smoke("vgg19")
+    return {
+        "vgg16": (cfg16, M.init_params(cfg16, jax.random.PRNGKey(0))),
+        "vgg19": (cfg19, M.init_params(cfg19, jax.random.PRNGKey(1))),
+    }
+
+
+def _request(cfg, rid, rng):
+    img = make_batch(rid, 1, cfg.image_size)[0]
+    key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
+    box = PrivateInferenceServer.client_seal(key, img, rid)
+    return Request(rid=rid, box=box, shape=img.shape, session_key=key), key
+
+
+def test_engine_bit_identical_to_legacy_server(zoo, rng):
+    cfg, params = zoo["vgg16"]
+    reqs, keys = zip(*[_request(cfg, i, rng) for i in range(8)])
+
+    legacy = PrivateInferenceServer(cfg, params, mode="origami", max_batch=4)
+    want = []
+    for i in range(0, 8, 4):
+        want += legacy.serve_batch(list(reqs[i:i + 4]))
+
+    engine = ServingEngine(EngineConfig(max_batch=4, max_wait_ms=500.0))
+    engine.register_model("vgg16", cfg, params)
+    try:
+        futures = [engine.submit("vgg16", r) for r in reqs]
+        got = [f.result(timeout=180) for f in futures]
+    finally:
+        engine.close()
+
+    assert all(r.ok for r in got)
+    for w, g in zip(want, got):
+        lw = PrivateInferenceServer.client_open(keys[w.rid], w.box,
+                                                (cfg.num_classes,))
+        lg = PrivateInferenceServer.client_open(keys[g.rid], g.box,
+                                                (cfg.num_classes,))
+        assert np.array_equal(lw, lg), f"rid {w.rid} not bit-identical"
+
+
+def test_out_of_order_completion_mixed_models(zoo, rng):
+    """A later-submitted model's full bucket completes before an earlier
+    partial bucket that waits for its max_wait timer."""
+    engine = ServingEngine(EngineConfig(max_batch=4, max_wait_ms=2000.0))
+    for name, (cfg, params) in zoo.items():
+        engine.register_model(name, cfg, params)
+    try:
+        cfg16, _ = zoo["vgg16"]
+        cfg19, _ = zoo["vgg19"]
+        # build (and seal) every request up front: only the cheap submit
+        # calls sit between the partial bucket opening and the full bucket
+        # filling, so the vgg16 flush timer cannot fire in between even on
+        # a heavily loaded CPU
+        warm16 = [_request(cfg16, 900 + i, rng)[0] for i in range(4)]
+        warm19 = [_request(cfg19, 950 + i, rng)[0] for i in range(4)]
+        reqs16 = [_request(cfg16, 10 + i, rng)[0] for i in range(2)]
+        reqs19 = [_request(cfg19, 20 + i, rng)[0] for i in range(4)]
+
+        # warm both executables so timing reflects batching, not compiles
+        [f.result(timeout=300)
+         for f in ([engine.submit("vgg16", r) for r in warm16]
+                   + [engine.submit("vgg19", r) for r in warm19])]
+
+        mark = len(engine.completion_order)
+        # 2 vgg16 (partial bucket -> waits on timer), then 4 vgg19 (full)
+        f16 = [engine.submit("vgg16", r) for r in reqs16]
+        f19 = [engine.submit("vgg19", r) for r in reqs19]
+        got = [f.result(timeout=300) for f in f16 + f19]
+        assert all(r.ok for r in got)
+        order = list(engine.completion_order)[mark:]
+        # vgg19's full bucket dispatched first despite later submission
+        assert [m for m, _ in order[:4]] == ["vgg19"] * 4, order
+        assert {m for m, _ in order[4:]} == {"vgg16"}, order
+    finally:
+        engine.close()
+
+
+def _lm_request(cfg, rid, seq, rng):
+    toks = rng.integers(0, cfg.vocab_size, size=(seq,)).astype(np.float32)
+    key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
+    box = PrivateInferenceServer.client_seal(key, toks, rid)
+    return Request(rid=rid, box=box, shape=toks.shape, session_key=key), key
+
+
+def test_lm_mixed_shape_buckets_complete_independently(rng):
+    """A smoke LM in the same registry; two sequence lengths land in two
+    (model, shape) buckets that pad and dispatch independently."""
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=150.0))
+    engine.register_model("lm", cfg, params, input_key="tokens",
+                          input_dtype="int32")
+    try:
+        reqs = ([_lm_request(cfg, 30 + i, 8, rng) for i in range(2)]
+                + [_lm_request(cfg, 40, 16, rng)])
+        futs = [engine.submit("lm", r) for r, _ in reqs]
+        got = [f.result(timeout=300) for f in futs]
+        assert all(r.ok for r in got)
+        assert engine.stats.batches >= 2       # two buckets, two dispatches
+        # logits unseal per request with the right (seq, vocab) shape
+        lg = PrivateInferenceServer.client_open(
+            reqs[2][1], got[2].box, (16, cfg.padded_vocab))
+        assert np.isfinite(lg).all()
+    finally:
+        engine.close()
+
+
+def test_admission_control_rejects_over_capacity(zoo, rng):
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=4, max_wait_ms=50.0,
+                                        max_queue=2))
+    engine.register_model("vgg16", cfg, params)
+    try:
+        reqs = [_request(cfg, 50 + i, rng)[0] for i in range(6)]
+        futs = [engine.submit("vgg16", r) for r in reqs]
+        got = [f.result(timeout=300) for f in futs]
+        # with max_queue=2 at least the burst tail is shed immediately
+        assert engine.stats.rejected >= 1
+        rejected = [r for r in got if not r.ok]
+        assert all(r.box is None for r in rejected)
+    finally:
+        engine.close()
+
+
+def test_unknown_model_rejected(zoo, rng):
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=10.0))
+    engine.register_model("vgg16", cfg, params)
+    try:
+        req, _ = _request(cfg, 60, rng)
+        resp = engine.submit("resnet50", req).result(timeout=10)
+        assert not resp.ok and engine.stats.rejected == 1
+    finally:
+        engine.close()
+
+
+def test_expired_deadline_never_reaches_executor(zoo, rng):
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=4, max_wait_ms=80.0))
+    entry = engine.register_model("vgg16", cfg, params)
+    try:
+        req, _ = _request(cfg, 70, rng)
+        fut = engine.submit("vgg16", req, deadline_s=1e-4)
+        time.sleep(0.02)                      # let the deadline lapse
+        resp = fut.result(timeout=60)
+        assert not resp.ok
+        assert engine.stats.expired == 1
+        assert engine.stats.batches == 0      # nothing was dispatched
+        assert entry.pool.consumed == 0
+    finally:
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
+# session pool
+# ---------------------------------------------------------------------------
+
+def test_session_pool_never_reuses_across_refills():
+    pool = SessionPool(None, depth=3, background=False)
+    seen = set()
+    for _ in range(4):                        # several refill cycles deep
+        pool.prime()
+        for _ in range(3):
+            kb = np.asarray(pool.acquire()).tobytes()
+            assert kb not in seen
+            seen.add(kb)
+    assert len(seen) == 12
+    s = pool.stats()
+    assert s["consumed"] == 12 and s["reuse_checked"] == 12
+    pool.close()
+
+
+def test_session_pool_reuse_guard_trips():
+    pool = SessionPool(None, depth=2, background=False)
+    pool.acquire()
+    pool._head = 0                            # simulate a counter rollback
+    with pytest.raises(SessionReuseError):
+        pool.acquire()
+    pool.close()
+
+
+def test_session_pool_refills_executor_cache(zoo, rng):
+    """After the first batch builds the layer cache, the background refill
+    keeps factor sets prefetched so acquire() stops missing."""
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0,
+                                        session_pool_depth=3))
+    entry = engine.register_model("vgg16", cfg, params)
+    try:
+        reqs = [_request(cfg, 80 + i, rng)[0] for i in range(2)]
+        [f.result(timeout=300)
+         for f in [engine.submit("vgg16", r) for r in reqs]]
+        assert entry.executor.cache is not None
+        entry.pool.prime()                    # deterministic refill
+        assert entry.pool.ready() >= 1
+        stats = entry.pool.stats()
+        assert stats["refilled"] >= 1
+    finally:
+        engine.close()

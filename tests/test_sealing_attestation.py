@@ -36,6 +36,20 @@ def test_tamper_detection(rng):
     assert not bool(ok)
 
 
+def test_nonce_tamper_detected(rng):
+    """The nonce selects the keystream, so it must be authenticated: a
+    swapped nonce (e.g. another rid's split, or a stripped direction tag)
+    must fail the MAC, not decrypt to garbage with ok=True."""
+    x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    box = seal(_key(), x, jnp.asarray([1, 2, 0xEE], jnp.uint32))
+    swapped = box._replace(nonce=jnp.asarray([3, 2, 0xEE], jnp.uint32))
+    _, ok = unseal(_key(), swapped, x.shape)
+    assert not bool(ok)
+    stripped = box._replace(nonce=box.nonce[:2])   # drop the direction tag
+    _, ok = unseal(_key(), stripped, x.shape)
+    assert not bool(ok)
+
+
 def test_wrong_key_garbles(rng):
     x = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
     box = seal(_key(1), x, jnp.asarray([1, 2], jnp.uint32))

@@ -56,3 +56,73 @@ def test_batching_pads_and_preserves_order(server, rng):
     responses = srv.serve(list(reqs))      # 4 + 1 across two batches
     assert [r.rid for r in responses] == [10, 11, 12, 13, 14]
     assert all(r.ok for r in responses)
+
+
+def test_serve_batch_rejects_over_max_batch(server, rng):
+    cfg, srv = server
+    reqs, _ = zip(*[_request(cfg, 20 + i, rng) for i in range(5)])
+    with pytest.raises(ValueError, match="max_batch"):
+        srv.serve_batch(list(reqs))        # seed silently dropped the tail
+
+
+def test_failed_mac_never_reaches_executor(server, rng):
+    """Invalid requests are filtered before padding: no inference slot, no
+    blinded dispatch, no batch-counter bump."""
+    cfg, srv = server
+    good, _ = _request(cfg, 30, rng)
+    bad_src, _ = _request(cfg, 31, rng)
+    bad = Request(rid=31, box=bad_src.box._replace(
+        ciphertext=bad_src.box.ciphertext.at[0, 0, 0].add(3)),
+        shape=bad_src.shape, session_key=bad_src.session_key)
+
+    batches_before = srv.batches
+    responses = srv.serve_batch([bad])     # all-invalid batch
+    assert [r.ok for r in responses] == [False]
+    assert srv.batches == batches_before   # executor never ran
+
+    responses = srv.serve_batch([good, bad])
+    by_rid = {r.rid: r for r in responses}
+    assert by_rid[30].ok and not by_rid[31].ok
+    assert srv.batches == batches_before + 1
+
+
+def test_duplicate_rids_all_served(server, rng):
+    """Legacy contract: duplicate rids get real answers (the engine
+    serializes them into waves rather than rejecting the second)."""
+    cfg, srv = server
+    req, key = _request(cfg, 77, rng)
+    responses = srv.serve([req, req])
+    assert [r.rid for r in responses] == [77, 77]
+    assert all(r.ok for r in responses)
+
+
+def test_serve_batch_duplicate_rid_positional(server, rng):
+    """A valid and a tampered request sharing a rid must not collapse:
+    responses are positional, so the valid one keeps its logits."""
+    cfg, srv = server
+    good, _ = _request(cfg, 88, rng)
+    bad = Request(rid=88, box=good.box._replace(
+        ciphertext=good.box.ciphertext.at[0, 0, 0].add(3)),
+        shape=good.shape, session_key=good.session_key)
+    responses = srv.serve_batch([good, bad])
+    assert responses[0].ok and not responses[1].ok
+
+
+def test_response_nonce_uses_full_rid_and_direction_tag(server, rng):
+    """Two rids differing only in their high 32 bits must not share a
+    response (key, nonce) pair, and responses must never collide with the
+    request nonce of the same rid."""
+    from repro.runtime.serving import request_nonce, response_nonce
+    lo, hi = 7, 7 + (1 << 32)
+    assert not np.array_equal(response_nonce(lo), response_nonce(hi))
+    assert response_nonce(lo).shape != request_nonce(lo).shape
+
+    # end-to-end with a high-bit rid: seal/unseal round-trips
+    cfg, srv = server
+    rid = (1 << 40) + 3
+    req, key = _request(cfg, rid, rng)
+    responses = srv.serve_batch([req])
+    assert responses[0].ok
+    logits = PrivateInferenceServer.client_open(key, responses[0].box,
+                                                (cfg.num_classes,))
+    assert np.isfinite(logits).all()
