@@ -10,3 +10,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # logits cross-checked bit-exactly against the legacy synchronous server
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine
+# integrity smoke: sampled Freivalds policy at rate 1.0 with a dishonest
+# device flipping bits — the drill fails unless every corruption is
+# detected, recovered (responses stay bit-exact vs the honest legacy
+# server) and the backend quarantined (DESIGN.md §9)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --requests 16 --verify sampled --verify-rate 1.0 --inject bit_flip

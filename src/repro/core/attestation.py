@@ -8,7 +8,9 @@ exactly the guarantee the paper assumes ("the user may verify the model").
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import hmac
 import json
 from dataclasses import dataclass
 from typing import Any, Dict
@@ -52,5 +54,16 @@ def measure_enclave(cfg: ModelConfig, params, partition: int) -> Quote:
                  field_p=P)
 
 
+def _canonical(quote: Quote) -> bytes:
+    """Fixed-length canonical encoding for constant-time comparison: the
+    sha256 of the sorted-key JSON of all quote fields (hashing first also
+    removes any length side channel between differently-sized quotes)."""
+    return hashlib.sha256(json.dumps(
+        dataclasses.asdict(quote), sort_keys=True).encode()).digest()
+
+
 def verify_quote(quote: Quote, expected: Quote) -> bool:
-    return quote == expected
+    """Constant-time quote check — dataclass ``==`` short-circuits on the
+    first differing field/character, leaking where a forged measurement
+    diverges; compare canonical digests with ``hmac.compare_digest``."""
+    return hmac.compare_digest(_canonical(quote), _canonical(expected))

@@ -16,13 +16,14 @@ core/trust.py prices with the paper-calibrated cost model.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dfield
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import integrity as IG
 from repro.core import slalom as SL
 from repro.core.blinding import BlindingSpec
 from repro.core.precompute import BlindedLayerCache
@@ -38,6 +39,9 @@ class OrigamiResult:
     logits: jax.Array
     boundary: Optional[jax.Array]       # what the adversary observes
     telemetry: SL.Telemetry
+    integrity: IG.IntegrityReport = dfield(
+        default_factory=IG.IntegrityReport.empty)
+    trusted: bool = False               # enclave-recompute trace (no device)
 
 
 class OrigamiExecutor:
@@ -46,7 +50,14 @@ class OrigamiExecutor:
     def __init__(self, cfg: ModelConfig, params, mode: str = "origami",
                  partition: Optional[int] = None,
                  spec: Optional[BlindingSpec] = None,
-                 impl: str = "fused", precompute: bool = False):
+                 impl: str = "fused", precompute: bool = False,
+                 integrity: Optional[IG.IntegrityPolicy] = None,
+                 fault: Optional[Any] = None):
+        """``integrity``: Freivalds verification policy over the offloaded
+        field matmuls (core/integrity.py; default off — trust the device).
+        ``fault``: a runtime/faults.DishonestDevice injected under the
+        device matmul. Both are static parts of the jit trace — pick them
+        at construction."""
         assert mode in MODES, mode
         assert impl in ("fused", "unfused"), impl
         self.cfg = cfg
@@ -57,11 +68,18 @@ class OrigamiExecutor:
         self.spec = spec or BlindingSpec()
         self.impl = impl
         self.precompute = precompute
+        self.integrity = integrity or IG.IntegrityPolicy.off()
+        self.fault = fault
         self.cache: Optional[BlindedLayerCache] = None
         self._caches: Dict[Any, BlindedLayerCache] = {}  # per batch-shape
         self._cache_batch_shapes = None
         self.telemetry = SL.Telemetry()
         self._jitted = jax.jit(self._traced)
+        # the recovery path: same math with the field matmuls run inside
+        # the enclave (no device, no blinding, no injector) — bit-identical
+        # logits, used after a failed Freivalds check or under quarantine
+        self._jitted_trusted = jax.jit(
+            functools.partial(self._traced, trusted=True))
 
     # -- layer count helpers -------------------------------------------------
     @property
@@ -80,11 +98,21 @@ class OrigamiExecutor:
         return p, p                                   # split / origami
 
     # -- traced computation --------------------------------------------------
-    def _traced(self, batch, session_key, factors=None):
-        ctx = SL.SlalomContext(session_key, self.spec,
-                               telemetry=self.telemetry,
-                               impl=self.impl, factors=factors)
-        return self._run(batch, ctx)
+    def _traced(self, batch, session_key, factors=None, trusted=False):
+        ctx = SL.SlalomContext(
+            session_key, self.spec, telemetry=self.telemetry,
+            impl=self.impl, factors=factors,
+            integrity=(IG.IntegrityPolicy.off() if trusted
+                       else self.integrity),
+            fault=None if trusted else self.fault, trusted=trusted)
+        logits, boundary = self._run(batch, ctx)
+        if ctx.integrity_log:
+            rep = tuple(jnp.stack([entry[i] for entry in ctx.integrity_log])
+                        for i in range(3))
+        else:
+            z = jnp.zeros((0,), jnp.bool_)
+            rep = (z, z, z)
+        return logits, boundary, rep
 
     def _run(self, batch, ctx):
         cfg = self.cfg
@@ -118,7 +146,8 @@ class OrigamiExecutor:
             self.precompute = False
             self.cache = None
             return None
-        self.cache = BlindedLayerCache.from_records(records, self.spec)
+        self.cache = BlindedLayerCache.from_records(records, self.spec,
+                                                    integrity=self.integrity)
         self._cache_batch_shapes = tuple(sorted(
             (k, tuple(jnp.shape(v))) for k, v in batch.items()))
         # copy-on-write: the SessionPool's refill thread snapshots this
@@ -197,14 +226,24 @@ class OrigamiExecutor:
     # -- public API ----------------------------------------------------------
     def infer(self, batch: Dict[str, jax.Array],
               session_key: Optional[jax.Array] = None,
-              jit: bool = True) -> OrigamiResult:
+              jit: bool = True, trusted: bool = False) -> OrigamiResult:
+        """``trusted=True`` runs the enclave-recompute trace: the linear
+        ops execute inside the enclave (field matmuls of the enclave's own
+        quantized operands), skipping blinding, the untrusted device, the
+        fault injector and verification. Bit-identical logits to the honest
+        blinded path — the integrity layer's recovery primitive."""
         key = (session_key if session_key is not None
                else jax.random.PRNGKey(0))
-        factors = self._session_factors(batch, key)
-        fn = self._jitted if jit else self._traced
-        logits, boundary = fn(batch, key, factors)
+        if trusted:
+            logits, boundary, rep = self._jitted_trusted(batch, key, None)
+        else:
+            factors = self._session_factors(batch, key)
+            fn = self._jitted if jit else self._traced
+            logits, boundary, rep = fn(batch, key, factors)
         return OrigamiResult(logits=logits, boundary=boundary,
-                             telemetry=self.telemetry)
+                             telemetry=self.telemetry,
+                             integrity=IG.IntegrityReport(*rep),
+                             trusted=trusted)
 
     def reference(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Plain fp forward — the correctness oracle for all modes."""

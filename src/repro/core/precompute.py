@@ -25,17 +25,25 @@ Factor keying is ``stream_key(session_key, layer_index, step)`` — exactly
 the stream the on-the-fly path draws, so cached and uncached traces are
 bit-identical (tests/test_precompute.py), and distinct (session, layer,
 step) triples never reuse a pad.
+
+Integrity (PR 3): when the owning executor runs a Freivalds policy
+(``integrity.enabled``), each factor set also carries the fold vectors
+``s`` (uniform over Z_p^(d_out × k)) and ``ws = (W_q @ s) mod p`` — the
+per-(session, layer) material of the verification layer (core/integrity.py,
+DESIGN.md §9). They ride the same prefetch ring, so with the SessionPool
+active the skinny fold matmuls are off the request path too.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core import blinding as B
+from repro.core import integrity as IG
 from repro.kernels.limb_matmul.ops import encode_weight_planes, field_matmul
 
 
@@ -53,10 +61,13 @@ class CachedLayer:
 class BlindedLayerCache:
     """Quantize-once weight cache + per-session blinding-factor store."""
 
-    def __init__(self, layers: List[CachedLayer], spec: B.BlindingSpec):
+    def __init__(self, layers: List[CachedLayer], spec: B.BlindingSpec,
+                 integrity: Optional[IG.IntegrityPolicy] = None):
         self.layers = layers
         self.spec = spec
+        self.integrity = integrity or IG.IntegrityPolicy.off()
         self.factor_matmuls = 0          # r@W_q matmuls issued off-path
+        self.fold_matmuls = 0            # W_q@s fold matmuls issued off-path
         self._ready: Dict[Tuple[bytes, int], List[Dict[str, Any]]] = {}
         # prefetch/take race under the serving engine: the SessionPool's
         # refill thread inserts while the batcher thread pops
@@ -64,7 +75,9 @@ class BlindedLayerCache:
 
     @classmethod
     def from_records(cls, records: List[Dict[str, Any]],
-                     spec: B.BlindingSpec) -> "BlindedLayerCache":
+                     spec: B.BlindingSpec,
+                     integrity: Optional[IG.IntegrityPolicy] = None
+                     ) -> "BlindedLayerCache":
         """records: the SlalomContext.recorder output of a cache-builder
         trace — one {"kind", "w", "t", "d_in", "d_out"} per blinded op, in
         call order. Conv records carry the raw (kh, kw, cin, cout) weight;
@@ -79,7 +92,7 @@ class BlindedLayerCache:
                 t=rec["t"], d_in=rec["d_in"], d_out=rec["d_out"],
                 w_q=w_q, w_limbs=encode_weight_planes(w_q),
                 w_scale=w_scale))
-        return cls(layers, spec)
+        return cls(layers, spec, integrity=integrity)
 
     # -- per-session factors -----------------------------------------------
     @staticmethod
@@ -87,7 +100,8 @@ class BlindedLayerCache:
         return np.asarray(session_key).tobytes(), step
 
     def session_factors(self, session_key, step: int = 0) -> List[Dict]:
-        """Generate (r, u) for every cached layer — the enclave's offline
+        """Generate (r, u) — and, under an integrity policy, the Freivalds
+        fold vectors (s, ws) — for every cached layer: the enclave's offline
         work. Returned as a jit-passable pytree (list of dicts of arrays)
         consumed positionally by SlalomContext."""
         factors = []
@@ -96,8 +110,16 @@ class BlindedLayerCache:
             r = B.blinding_stream(key, (lyr.t, lyr.d_in))
             u = field_matmul(r, lyr.w_q)
             self.factor_matmuls += 1
-            factors.append({"r": r, "u": u, "w_q": lyr.w_q,
-                            "w_limbs": lyr.w_limbs, "w_scale": lyr.w_scale})
+            entry = {"r": r, "u": u, "w_q": lyr.w_q,
+                     "w_limbs": lyr.w_limbs, "w_scale": lyr.w_scale}
+            if self.integrity.enabled:
+                # same key derivation as the on-the-fly path in
+                # core/slalom.py — cached and live verification bit-match
+                entry["s"] = IG.fold_stream(session_key, i, step,
+                                            lyr.d_out, self.integrity.k)
+                entry["ws"] = field_matmul(lyr.w_q, entry["s"])
+                self.fold_matmuls += 1
+            factors.append(entry)
         return factors
 
     # prefetched sets a session's r tensors can pin ~100s of MB for large

@@ -6,13 +6,20 @@ over float bit-patterns plus a polynomial MAC — *not* production AES-GCM,
 but a faithful functional stand-in with the same interface and the same
 cost shape (one pass to decrypt, one to authenticate), suitable for the
 serving pipeline and its tests.
+
+MAC verification compares canonical byte encodings with
+``hmac.compare_digest`` — a data-dependent early-exit ``==`` would hand a
+network attacker a timing oracle over the tag (and the jnp comparison it
+replaced also forced a device sync per word).
 """
 from __future__ import annotations
 
+import hmac
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SealedBox(NamedTuple):
@@ -66,10 +73,18 @@ def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
 
 
 def unseal(key: jax.Array, box: SealedBox,
-           shape: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
-    """Returns (plaintext, mac_ok). Enclave-side."""
+           shape: Tuple[int, ...]) -> Tuple[jax.Array, bool]:
+    """Returns (plaintext, mac_ok). Enclave-side.
+
+    ``mac_ok`` is a Python bool from a constant-time compare over the
+    canonical little-endian uint32 encodings of the two tags (unseal is an
+    eager trust-boundary decision, never traced).
+    """
     ct = box.ciphertext.reshape(-1)
-    ok = _mac(key, _authenticated_words(box.nonce, ct)) == box.mac
+    want = _mac(key, _authenticated_words(box.nonce, ct))
+    ok = hmac.compare_digest(
+        np.asarray(want, np.uint32).tobytes(),
+        np.asarray(box.mac, np.uint32).tobytes())
     ks = _keystream(key, box.nonce, ct.size)
     pt = jax.lax.bitcast_convert_type(ct ^ ks, jnp.float32)
     return pt.reshape(shape), ok

@@ -27,6 +27,13 @@ one device field-matmul per blinded op, mirroring the paper's offline
 enclave precomputation. ``Telemetry.device_matmuls``/``enclave_matmuls``
 count both kinds so tests can verify the claim.
 
+Integrity (PR 3, DESIGN.md §9): the device result is *verified*, not just
+trusted — ``ctx.integrity`` threads a Freivalds policy (core/integrity.py)
+through every blinded op, ``ctx.fault`` injects a dishonest device
+(runtime/faults.py) underneath it, and ``ctx.trusted`` switches the op to
+an enclave-resident field matmul (the recovery path: bit-identical output,
+no device, no blinding needed).
+
 A trace-time ``Telemetry`` recorder accumulates blinded bytes / offloaded
 FLOPs / enclave FLOPs per protocol call — shapes are static under jit, so
 this is exact and free; core/trust.py turns it into the paper's cost model.
@@ -40,8 +47,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import blinding as B
+from repro.core import integrity as IG
+from repro.kernels.blind.ref import quantize as quantize_act
 from repro.kernels.limb_matmul.ops import (encode_weight_planes, field_matmul,
                                            fused_blinded_matmul)
+from repro.kernels.limb_matmul.ref import from_signed, to_signed
+
+# fault keys live in their own fold_in domain, disjoint from both the
+# blinding streams and the verify keys (core/integrity.py)
+FAULT_DOMAIN = 0xFA17
 
 
 @dataclass
@@ -56,6 +70,19 @@ class Telemetry:
     device_matmuls: int = 0         # field matmuls in the request trace
     enclave_matmuls: int = 0        # r@W_q factor matmuls in the trace
                                     # (0 when the precompute cache is active)
+    verify_ops: int = 0             # blinded ops with verification in-trace
+    verify_flops: int = 0           # fold-check work (enclave-side)
+    fold_matmuls: int = 0           # on-request W_q@s folds (0 when the
+                                    # precompute cache carries the vectors)
+    trusted_matmuls: int = 0        # enclave-recompute field matmuls
+
+    def record_verify(self, t: int, d_in: int, d_out: int, k: int):
+        self.verify_ops += 1
+        self.verify_flops += 2 * k * t * (d_in + d_out)
+
+    def record_trusted(self, t: int, d_in: int, d_out: int):
+        self.trusted_matmuls += 1
+        self.enclave_flops += 2 * t * d_in * d_out
 
     def record_offload(self, t: int, d_in: int, d_out: int):
         self.blinded_bytes += t * d_in * 4
@@ -76,6 +103,10 @@ class SlalomContext:
     ``BlindedLayerCache.session_factors`` (consumed positionally, in call
     order). ``recorder``: when set, blinded ops record their (weight, shape)
     instead of blinding — used by the cache builder under ``jax.eval_shape``.
+    ``integrity``/``fault``: Freivalds policy and dishonest-device injector
+    (core/integrity.py, runtime/faults.py); ``integrity_log`` collects one
+    (checked, failed, corrupted) bool triple per blinded op. ``trusted``:
+    enclave-recompute mode — no device, no blinding, no verification.
     """
     session_key: jax.Array
     spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
@@ -84,6 +115,11 @@ class SlalomContext:
     impl: str = "fused"                       # "fused" | "unfused"
     factors: Optional[List[Any]] = None
     recorder: Optional[List[Any]] = None
+    integrity: IG.IntegrityPolicy = dfield(
+        default_factory=IG.IntegrityPolicy.off)
+    fault: Optional[Any] = None               # runtime/faults.DishonestDevice
+    trusted: bool = False
+    integrity_log: List[Any] = dfield(default_factory=list)
     _layer_counter: int = 0
 
     def next_layer_key(self) -> jax.Array:
@@ -91,37 +127,61 @@ class SlalomContext:
         self._layer_counter += 1
         return k
 
-    def next_layer_factors(self, t: int, d_in: int, w):
-        """Blinding material for the next blinded op, cached or on-the-fly.
+    def fault_key(self, op_index: int) -> jax.Array:
+        return B.stream_key(
+            jax.random.fold_in(self.session_key, FAULT_DOMAIN),
+            op_index, self.step)
 
-        Returns (w_q, w_scale, w_limbs_or_None, r, u). The cached branch
-        issues no field matmul; the on-the-fly branch issues one (counted in
-        telemetry.enclave_matmuls).
+    def next_layer_factors(self, t: int, d_in: int, d_out: int, w):
+        """Blinding + verification material for the next blinded op.
+
+        Returns (w_q, w_scale, w_limbs_or_None, r, u, s, ws). The cached
+        branch issues no field matmul; the on-the-fly branch issues one for
+        ``u`` (telemetry.enclave_matmuls) and, when verification is on and
+        the cache carries no fold vectors, one skinny ``W_q @ s`` fold.
         """
+        op = self._layer_counter
         if self.factors is not None:
-            i = self._layer_counter
-            assert i < len(self.factors), (
+            assert op < len(self.factors), (
                 f"precompute cache has {len(self.factors)} layers but the "
-                f"trace reached blinded op #{i} — rebuild the cache for "
+                f"trace reached blinded op #{op} — rebuild the cache for "
                 f"this batch shape/partition")
             self._layer_counter += 1
-            e = self.factors[i]
+            e = self.factors[op]
             assert e["r"].shape == (t, d_in), (
                 f"cached stream shape {e['r'].shape} != ({t}, {d_in}) — "
                 f"cache was built for a different batch shape")
-            return e["w_q"], e["w_scale"], e.get("w_limbs"), e["r"], e["u"]
-        key = self.next_layer_key()
-        w_q, w_scale = B.quantize_weight(w, self.spec)
-        r = B.blinding_stream(key, (t, d_in))
-        u = B.unblinding_factor(r, w_q)       # on-request (Slalom does this
-        self.telemetry.enclave_matmuls += 1   # offline; see precompute.py)
-        return w_q, w_scale, None, r, u
+            w_q, w_scale = e["w_q"], e["w_scale"]
+            w_limbs, r, u = e.get("w_limbs"), e["r"], e["u"]
+            s, ws = e.get("s"), e.get("ws")
+        else:
+            key = self.next_layer_key()
+            w_q, w_scale = B.quantize_weight(w, self.spec)
+            r = B.blinding_stream(key, (t, d_in))
+            u = B.unblinding_factor(r, w_q)     # on-request (Slalom does this
+            self.telemetry.enclave_matmuls += 1  # offline; see precompute.py)
+            w_limbs = s = ws = None
+        if self.integrity.enabled and s is None:
+            # same derivation as BlindedLayerCache.session_factors, so the
+            # cached and live verification traces are bit-identical
+            s = IG.fold_stream(self.session_key, op, self.step,
+                               d_out, self.integrity.k)
+            ws = field_matmul(w_q, s)
+            self.telemetry.fold_matmuls += 1    # on the request path — the
+            self.telemetry.verify_flops += (    # cache moves these offline
+                2 * d_in * d_out * self.integrity.k)
+        return w_q, w_scale, w_limbs, r, u, s, ws
 
 
-def blinded_dense(ctx: SlalomContext, p, x):
+def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
     """Drop-in for layers.dense running the Slalom protocol.
 
     p: {"w": (d_in, d_out) float [, "b": (d_out,)]}; x: (..., d_in).
+    ``scanned``: whether this op's weight leaf is a lax.scan tracer (one
+    traced call standing for many runtime layers); None = infer from ``w``
+    itself — callers that transform the weight first (blinded_conv2d's
+    im2col reorder turns a concrete leaf into a tracer) must pass the
+    verdict on the RAW leaf.
     """
     w = p["w"]
     d_in, d_out = w.shape
@@ -146,12 +206,48 @@ def blinded_dense(ctx: SlalomContext, p, x):
         return y.reshape(lead + (d_out,)).astype(x.dtype)
 
     spec = ctx.spec
+    k_out = spec.k_act + spec.k_w
+    op_index = ctx._layer_counter
+
+    if ctx.trusted:
+        # --- enclave recompute (integrity recovery / quarantined backend):
+        # the enclave performs the field matmul itself. Blinding would
+        # cancel exactly ((x_b@W − r@W) mod p == (x_q@W) mod p), so it is
+        # skipped; the quantized math and float op order match the blinded
+        # data path bit-for-bit, which is what makes a recovered response
+        # indistinguishable from an honest device's (tests/test_integrity).
+        ctx._layer_counter += 1
+        w_q, w_scale = B.quantize_weight(w, spec)
+        x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
+        # fused blinds with multiply-by-reciprocal, unfused with division —
+        # replicate the active impl so the recompute stays bit-identical
+        xs = (xt.astype(jnp.float32) * (1.0 / x_scale) if ctx.impl == "fused"
+              else xt.astype(jnp.float32) / x_scale)
+        y_field = field_matmul(from_signed(quantize_act(xs, spec.k_act)), w_q)
+        y = (to_signed(y_field).astype(jnp.float32)
+             * (x_scale * w_scale)) * (2.0 ** -k_out)
+        ctx.telemetry.record_trusted(t, d_in, d_out)
+        if "b" in p:
+            y = y + p["b"].astype(jnp.float32)
+        return y.reshape(lead + (d_out,)).astype(x.dtype)
+
     # --- enclave: weight quantization + blinding material (precomputed when
     # the cache is active, otherwise derived on the request path) ---
-    w_q, w_scale, w_limbs, r, u = ctx.next_layer_factors(t, d_in, w)
+    w_q, w_scale, w_limbs, r, u, s, ws = ctx.next_layer_factors(
+        t, d_in, d_out, w)
+    # verification/injection cannot bind per-op state for ops traced inside
+    # lax.scan (one traced call stands for many runtime layers, and traced
+    # values appended to integrity_log would leak out of the scan) — same
+    # restriction as the precompute cache; such ops stay unverified.
+    if scanned is None:
+        scanned = isinstance(w, jax.core.Tracer)
+    verify = ctx.integrity.enabled and not scanned
+    inject = ctx.fault is not None and not scanned
+    will_check = (IG.decide(ctx.integrity, ctx.session_key, op_index,
+                            ctx.step) if verify or inject else None)
     # --- enclave: per-request absmax activation scale ---
     x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
-    k_out = spec.k_act + spec.k_w
+    checked = failed = corrupted = None
     if ctx.impl == "fused":
         if w_limbs is None:
             w_limbs = encode_weight_planes(w_q)
@@ -159,12 +255,50 @@ def blinded_dense(ctx: SlalomContext, p, x):
         y = fused_blinded_matmul(
             xt.astype(jnp.float32), r, w_limbs, u, 1.0 / x_scale, out_scale,
             k_bits=spec.k_act, k_out_bits=k_out)
+        if verify or inject:
+            # the fused kernel unblinds+dequantizes in-register; recover the
+            # signed field result exactly (|y_q| ≤ HALF < 2^22 and the only
+            # inexact step is one f32 multiply, so round() inverts it)
+            y_q = jnp.round(y / out_scale).astype(jnp.int32)
+            y_field = from_signed(y_q)
+            if inject:
+                y_field, corrupted = ctx.fault.corrupt(
+                    y_field, op_index=op_index, key=ctx.fault_key(op_index),
+                    will_verify=will_check)
+            if verify:
+                # post-unblind identity: y_q @ s ≡ x_q @ ws (mod p); x_q is
+                # the enclave's own quantization of its own activations
+                # (bit-identical to the kernel's: same reciprocal, same
+                # round/clip — kernels/blind/ref.py is the kernel oracle)
+                x_field = from_signed(quantize_act(
+                    xt.astype(jnp.float32) * (1.0 / x_scale), spec.k_act))
+                checked, failed = IG.checked_pair(
+                    y_field, x_field, s, ws, will_check,
+                    always=ctx.integrity.mode == "full")
+            y = to_signed(y_field).astype(jnp.float32) * out_scale
     else:
         # --- seed path: blind, device field-matmul, unblind (3 HBM trips) ---
         x_b = B.blind_activations(xt.astype(jnp.float32) / x_scale, r, spec)
         y_b = field_matmul(x_b, w_q)
+        if inject:
+            y_b, corrupted = ctx.fault.corrupt(
+                y_b, op_index=op_index, key=ctx.fault_key(op_index),
+                will_verify=will_check)
+        if verify:
+            # blinded-domain identity: y_b @ s ≡ x_b @ ws (mod p)
+            checked, failed = IG.checked_pair(
+                y_b, x_b, s, ws, will_check,
+                always=ctx.integrity.mode == "full")
         y = B.unblind_result(y_b, u, spec, out_dtype=jnp.float32)
         y = y * (x_scale * w_scale)
+    if verify or inject:
+        false = jnp.bool_(False)
+        ctx.integrity_log.append((
+            checked if checked is not None else false,
+            failed if failed is not None else false,
+            corrupted if corrupted is not None else false))
+        if verify:
+            ctx.telemetry.record_verify(t, d_in, d_out, ctx.integrity.k)
     ctx.telemetry.device_matmuls += 1
     if "b" in p:
         y = y + p["b"].astype(jnp.float32)
@@ -210,5 +344,6 @@ def blinded_conv2d(ctx: SlalomContext, p, x, stride: int = 1):
         y = xcol.astype(jnp.float32) @ conv_weight_cols(w).astype(jnp.float32)
         y = y + p["b"].astype(jnp.float32)
         return y.reshape(out_hw + (cout,)).astype(x.dtype)
-    y = blinded_dense(ctx, {"w": conv_weight_cols(w), "b": p["b"]}, xcol)
+    y = blinded_dense(ctx, {"w": conv_weight_cols(w), "b": p["b"]}, xcol,
+                      scanned=isinstance(w, jax.core.Tracer))
     return y.reshape(out_hw + (cout,))

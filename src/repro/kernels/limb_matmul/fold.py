@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: Freivalds fold ``(Y @ S) mod p`` over int8 limb planes.
+
+The integrity check (core/integrity.py, DESIGN.md §9) folds a (M, K) field
+matrix against a skinny (K, k) fold matrix, k ∈ {1, 2}. Reuses the limb
+representation and nine-matmul step of limb_matmul.py, but with the fold
+columns lane-padded to one 128-wide block held resident in VMEM — the grid
+is (M/bm, K/bk) with no n dimension, so a fold costs one pass over Y
+instead of a full matmul grid.
+
+VMEM per step (bm=256, bk=1024): 3×256×1024 int8 Y block (0.75 MiB) +
+3×1024×128 int8 fold block (0.375 MiB) + 256×128 int32 out (128 KiB).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.limb_matmul.limb_matmul import _step_partial
+from repro.kernels.limb_matmul.ref import P
+
+FOLD_LANES = 128
+
+
+def _kernel(x_ref, s_ref, o_ref):
+    """x_ref: (3, bm, bk) int8; s_ref: (3, bk, 128) int8; o_ref: (bm, 128)."""
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = _step_partial(x_ref, s_ref, o_ref[...])
+    o_ref[...] = jnp.mod(o_ref[...] + acc, P)
+
+
+def limb_fold_planes(x_limbs, s_limbs, *, bm=256, bk=1024, interpret=False):
+    """x_limbs: (3, M, K) int8; s_limbs: (3, K, 128) int8 (fold columns
+    zero-padded to one lane block) -> (M, 128) int32 in [0, p).
+
+    M and K must be multiples of the block sizes (ops.py pads).
+    """
+    _, M, K = x_limbs.shape
+    _, _, nf = s_limbs.shape
+    assert nf == FOLD_LANES, s_limbs.shape
+    bm, bk = min(bm, M), min(bk, K)
+    assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
+    assert bk <= 43000, bk           # same int32 exactness bound as matmul
+    grid = (M // bm, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, bm, bk), lambda m, k: (0, m, k)),
+            pl.BlockSpec((3, bk, FOLD_LANES), lambda m, k: (0, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, FOLD_LANES), lambda m, k: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, FOLD_LANES), jnp.int32),
+        interpret=interpret,
+    )(x_limbs, s_limbs)

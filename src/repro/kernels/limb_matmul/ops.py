@@ -153,6 +153,32 @@ def fused_blinded_matmul(x, r, w_limbs, u, inv_scale, out_scale, *,
     return y[:M, :N]
 
 
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bk"))
+def field_fold(x_field, s_field, *, impl: str = "auto", bm=256, bk=1024):
+    """Freivalds fold ``(X @ S) mod p`` for a skinny fold matrix.
+
+    x_field: (M, K) int32 in [0, p); s_field: (K, k) int32 in [0, p) with
+    k ≤ 128 (the integrity layer uses k ∈ {1, 2}). Enclave-side cost of
+    verifying a device matmul: one pass over X instead of a matmul grid
+    (kernels/limb_matmul/fold.py); off-TPU the pure-jnp reference is both
+    exact and faster than interpreted Pallas for these shapes.
+    """
+    from repro.kernels.limb_matmul.fold import FOLD_LANES, limb_fold_planes
+    M, K = x_field.shape
+    K2, kf = s_field.shape
+    assert K == K2 and kf <= FOLD_LANES, (x_field.shape, s_field.shape)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.field_matmul_ref(x_field, s_field)
+    bm_, _, bk_, _, _, _ = block_plan(M, K, FOLD_LANES, bm=bm, bk=bk)
+    xl = jnp.moveaxis(ref.to_limbs(ref.to_signed(x_field)), -1, 0)  # (3,M,K)
+    sl = jnp.moveaxis(ref.to_limbs(ref.to_signed(s_field)), -1, 0)  # (3,K,kf)
+    xl = _pad_to(_pad_to(xl, bm_, 1), bk_, 2)
+    sl = _pad_to(_pad_to(sl, bk_, 1), FOLD_LANES, 2)
+    out = limb_fold_planes(xl, sl, bm=bm_, bk=bk_,
+                           interpret=(impl == "interpret"))
+    return out[:M, :kf]
+
+
 def blinded_matmul(x_blinded, w_field, **kw):
     """Alias with protocol-level naming: the untrusted-device operation."""
     return field_matmul(x_blinded, w_field, **kw)

@@ -7,6 +7,13 @@ Usage:
     # async engine over a mixed vgg16/vgg19 fleet, partition from the
     # cost-model planner, logits cross-checked against the legacy server:
     PYTHONPATH=src python -m repro.launch.serve --smoke --engine
+
+    # integrity drill: Freivalds-verify every offloaded op while a
+    # dishonest device flips bits — every corruption must be detected,
+    # recovered (still bit-exact vs the honest legacy server) and the
+    # backend quarantined:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
+        --models vgg16 --verify full --inject bit_flip
 """
 from __future__ import annotations
 
@@ -17,9 +24,26 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.core.integrity import IntegrityPolicy
 from repro.models import model as M
 from repro.privacy.data import make_batch
+from repro.runtime.faults import DishonestDevice, FaultSpec
 from repro.runtime.serving import PrivateInferenceServer, Request
+
+
+def _integrity_args(args):
+    """(policy, fault_factory) from the --verify / --inject flags."""
+    policy = None
+    if args.verify != "off":
+        policy = (IntegrityPolicy.full(args.verify_k)
+                  if args.verify == "full"
+                  else IntegrityPolicy.sampled(args.verify_rate,
+                                               args.verify_k))
+    def fault():
+        if args.inject == "none":
+            return None
+        return DishonestDevice(FaultSpec(args.inject))
+    return policy, fault
 
 
 def _sealed_requests(cfg, n, rid0=0, rng=None):
@@ -44,6 +68,7 @@ def run_engine(args) -> None:
 
     get = get_smoke if args.smoke else get_config
     names = [m.strip() for m in args.models.split(",") if m.strip()]
+    policy, fault = _integrity_args(args)
     engine = ServingEngine(EngineConfig(max_batch=args.batch,
                                         max_wait_ms=args.max_wait_ms))
     legacy, per_model = {}, {}
@@ -51,7 +76,8 @@ def run_engine(args) -> None:
         cfg = get(name)
         params = M.init_params(cfg, jax.random.PRNGKey(i))
         entry = engine.register_model(name, cfg, params, mode=args.mode,
-                                      privacy_floor=args.privacy_floor)
+                                      privacy_floor=args.privacy_floor,
+                                      integrity=policy, fault=fault())
         print(f"[engine] registered {entry.plan.summary()} "
               f"quote={entry.quote.measurement[:12]}…")
         legacy[name] = PrivateInferenceServer(cfg, params, mode=args.mode,
@@ -108,9 +134,35 @@ def run_engine(args) -> None:
           f"sessions={stats['sessions']}")
     print(f"[engine] bit-identical vs legacy: "
           f"{'OK' if mismatches == 0 else f'{mismatches} MISMATCHES'}")
+    integ = stats["integrity"]
+    if args.verify != "off":
+        print(f"[engine] integrity: checks={integ['verify_checks']} "
+              f"failures={integ['verify_failures']} "
+              f"retries={integ['device_retries']} "
+              f"recomputes={integ['recomputes']} "
+              f"quarantines={integ['quarantines']} "
+              f"flagged={sum(r.flagged for _, _, r in responses)}")
     engine.close()
     if mismatches or ok != len(responses):
         raise SystemExit(1)
+    if args.verify != "off" and integ["verify_checks"] == 0:
+        print("[engine] FAIL: verification enabled but no checks ran")
+        raise SystemExit(1)
+    if args.inject == "adaptive" and args.verify != "off":
+        # the adaptive adversary corrupts only unchecked ops: under full
+        # (or sampled at rate 1.0) it is neutralized — zero corruptions,
+        # zero failures IS the success condition (the bit-exact cross-check
+        # above already proved no corruption slipped through); under a
+        # sparser sampled policy it evades by design, so detection cannot
+        # be asserted either way.
+        print("[engine] adaptive drill: evasion bounded by policy "
+              f"(failures={integ['verify_failures']}), responses bit-exact")
+    elif args.inject != "none" and args.verify != "off":
+        # the drill contract: the injected faults were caught (nonzero
+        # failed checks) AND every response above was still bit-exact
+        if integ["verify_failures"] == 0 or integ["recomputes"] == 0:
+            print("[engine] FAIL: injected faults were not detected")
+            raise SystemExit(1)
 
 
 def main():
@@ -131,6 +183,19 @@ def main():
     ap.add_argument("--privacy-floor", type=float, default=None,
                     help="SSIM leakage floor for the partition planner "
                          "(default: use the config's declared partition)")
+    ap.add_argument("--verify", default="off",
+                    choices=("off", "sampled", "full"),
+                    help="Freivalds verification policy over offloaded "
+                         "field matmuls (DESIGN.md §9)")
+    ap.add_argument("--verify-rate", type=float, default=0.25,
+                    help="per-op check probability under --verify sampled")
+    ap.add_argument("--verify-k", type=int, default=1,
+                    help="Freivalds repetitions (soundness 1-p^-k)")
+    ap.add_argument("--inject", default="none",
+                    choices=("none", "bit_flip", "row_swap", "stale",
+                             "adaptive"),
+                    help="dishonest-device drill: corrupt every offloaded "
+                         "op with this fault class (runtime/faults.py)")
     args = ap.parse_args()
 
     if args.requests is None:
@@ -141,8 +206,10 @@ def main():
 
     cfg = get_smoke(args.model) if args.smoke else get_config(args.model)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    policy, fault = _integrity_args(args)
     server = PrivateInferenceServer(cfg, params, mode=args.mode,
-                                    max_batch=args.batch)
+                                    max_batch=args.batch,
+                                    integrity=policy, fault=fault())
 
     # client: attest, then send sealed requests
     quote = server.attest()
@@ -164,6 +231,11 @@ def main():
     print(f"[serve] telemetry: blinded={tele.blinded_bytes/1e6:.2f}MB "
           f"offloaded={tele.offloaded_flops/1e9:.2f}GFLOP "
           f"calls={tele.calls}")
+    if args.verify != "off":
+        it = server.integrity_totals
+        print(f"[serve] integrity: checks={it.checks} "
+              f"failures={it.failures} retries={it.retries} "
+              f"recomputes={it.recomputes}")
 
 
 if __name__ == "__main__":

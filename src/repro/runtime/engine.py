@@ -50,6 +50,12 @@ class EngineConfig:
     max_queue: int = 256                # admission-control bound (in-flight)
     default_deadline_s: Optional[float] = None
     session_pool_depth: int = 4
+    # integrity (DESIGN.md §9): grant one fresh-session device retry after
+    # a failed Freivalds check before the enclave recomputes, and after
+    # ``quarantine_after`` consecutive failing batches stop offloading to
+    # that model's backend at all (every dispatch runs trusted).
+    integrity_retry: bool = True
+    quarantine_after: int = 3
 
 
 @dataclasses.dataclass
@@ -71,6 +77,10 @@ class _ModelEntry:
     plan: PartitionPlan
     input_key: str = "images"
     input_dtype: Optional[str] = None    # cast unsealed floats (LM tokens)
+    # integrity bookkeeping (batcher thread only — no locking needed)
+    integrity_failures: int = 0          # total failed-check batches
+    consec_failures: int = 0             # consecutive (resets on clean)
+    quarantined: bool = False            # offload disabled, enclave serves
 
 
 class EngineStats:
@@ -88,6 +98,13 @@ class EngineStats:
         self.batches = 0
         self.padded_slots = 0
         self.batched_requests = 0
+        # integrity counters (DESIGN.md §9)
+        self.verify_checks = 0           # Freivalds checks run
+        self.verify_failures = 0         # checks that mismatched
+        self.device_retries = 0          # fresh-session re-offloads
+        self.recomputes = 0              # enclave recomputed a batch
+        self.trusted_batches = 0         # dispatched under quarantine
+        self.quarantines = 0             # backends quarantined
         self.start_t = time.monotonic()
         self.first_batch_t: Optional[float] = None
         self.latencies: Deque[float] = deque(maxlen=self.LAT_WINDOW)
@@ -139,12 +156,30 @@ class EngineStats:
         out["time_to_first_batch_s"] = self.time_to_first_batch_s
         out["p50_latency_s"] = self.p50_latency_s()
         out["p95_latency_s"] = self.p95_latency_s()
+        with self.lock:
+            out["integrity"] = {
+                "verify_checks": self.verify_checks,
+                "verify_failures": self.verify_failures,
+                "device_retries": self.device_retries,
+                "recomputes": self.recomputes,
+                "trusted_batches": self.trusted_batches,
+                "quarantines": self.quarantines,
+            }
         out["sessions"] = {name: e.pool.stats()
                            for name, e in engine.models.items()}
         out["matmuls"] = {
             name: {"mode": e.executor.mode,
                    "device": e.executor.telemetry.device_matmuls,
                    "enclave": e.executor.telemetry.enclave_matmuls}
+            for name, e in engine.models.items()}
+        out["models"] = {
+            name: {"policy": e.executor.integrity.mode,
+                   "verify_ops": e.executor.telemetry.verify_ops,
+                   "verify_flops": e.executor.telemetry.verify_flops,
+                   "fold_matmuls": e.executor.telemetry.fold_matmuls,
+                   "trusted_matmuls": e.executor.telemetry.trusted_matmuls,
+                   "integrity_failures": e.integrity_failures,
+                   "quarantined": e.quarantined}
             for name, e in engine.models.items()}
         return out
 
@@ -178,14 +213,17 @@ class ServingEngine:
                        partition: Optional[int] = None,
                        privacy_floor: Optional[float] = None,
                        planner: Optional[PartitionPlanner] = None,
-                       leakage: Optional[Dict[int, float]] = None
-                       ) -> _ModelEntry:
+                       leakage: Optional[Dict[int, float]] = None,
+                       integrity=None, fault=None) -> _ModelEntry:
         """Build an executor for ``name`` and admit it to the registry.
 
         The partition point comes from, in order: the explicit ``partition``
         argument, the cost-model planner (when ``privacy_floor`` or
         ``planner`` is given), or the config's declared
-        ``origami.tier1_layers``.
+        ``origami.tier1_layers``. ``integrity``/``fault``: Freivalds
+        verification policy and (for tests/chaos drills) a dishonest-device
+        injector, forwarded to the executor (core/integrity.py,
+        runtime/faults.py).
         """
         if planner is None and privacy_floor is not None:
             planner = PartitionPlanner(privacy_floor=privacy_floor)
@@ -198,7 +236,8 @@ class ServingEngine:
                                  "config", None, {}, {}, ())
         executor = OrigamiExecutor(cfg, params, mode=mode,
                                    partition=plan.partition, impl=impl,
-                                   precompute=precompute)
+                                   precompute=precompute,
+                                   integrity=integrity, fault=fault)
         return self.register_executor(name, executor, input_key=input_key,
                                       input_dtype=input_dtype, plan=plan)
 
@@ -365,19 +404,42 @@ class ServingEngine:
         the engine bit-identical to its legacy oracle."""
         from repro.runtime.serving import Response, execute_sealed_batch
         self.watchdog.start_step()
-        boxes, n_valid, pad = execute_sealed_batch(
+        boxes, n_valid, pad, integ = execute_sealed_batch(
             entry.executor, [p.req for p in batch],
             input_key=entry.input_key, max_batch=self.cfg.max_batch,
             session_key=entry.pool.acquire,   # lazy: only consumed if a
-            input_dtype=entry.input_dtype)    # valid request reaches infer
+            input_dtype=entry.input_dtype,    # valid request reaches infer
+            trusted=entry.quarantined,
+            retry_device=self.cfg.integrity_retry)
         if n_valid:
             self.stats.record_batch(n_valid, pad)
         with self.stats.lock:
             self.stats.mac_failures += sum(b is None for b in boxes)
+            self.stats.verify_checks += integ.checks
+            self.stats.verify_failures += integ.failures
+            self.stats.device_retries += integ.retried
+            self.stats.recomputes += integ.recomputed
+            self.stats.trusted_batches += integ.trusted
+        if n_valid and not entry.quarantined:
+            # quarantine bookkeeping (batcher thread owns entry state): a
+            # backend that keeps failing its Freivalds checks stops being
+            # offloaded to at all — the enclave serves its traffic until an
+            # operator re-admits it (register a fresh entry).
+            if integ.flagged:
+                entry.integrity_failures += 1
+                entry.consec_failures += 1
+                if entry.consec_failures >= self.cfg.quarantine_after:
+                    entry.quarantined = True
+                    with self.stats.lock:
+                        self.stats.quarantines += 1
+            elif integ.checks:
+                entry.consec_failures = 0
         self.watchdog.end_step()
         for p, box in zip(batch, boxes):
             self._finish(p, Response(p.req.rid, box, box is not None,
-                                     time.monotonic() - p.submit_t))
+                                     time.monotonic() - p.submit_t,
+                                     flagged=integ.flagged
+                                     and box is not None))
 
     def _finish(self, p: _Pending, resp) -> None:
         if resp.ok:

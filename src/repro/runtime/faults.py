@@ -1,0 +1,126 @@
+"""Dishonest-device simulator: fault injection under the device matmul.
+
+The threat model (DESIGN.md §2, §9) makes the accelerator untrusted for
+*integrity* as well as privacy: a malicious or faulty device can return any
+``y_b`` it likes for the offloaded field matmul. ``DishonestDevice`` sits
+exactly at that boundary — core/slalom.py hands it the device's field-domain
+result and it returns a (possibly) corrupted one, all inside the jit trace,
+so the enclave-side Freivalds layer (core/integrity.py) sees precisely what
+a byzantine backend would feed it.
+
+Fault classes (``FaultSpec.kind``):
+
+- ``bit_flip``     one bit of one field element flips (SEU / marginal
+                   hardware) — the minimal corruption Freivalds must catch;
+- ``row_swap``     two result rows exchanged (batch-order bug or targeted
+                   misattribution between users in a batch);
+- ``stale``        the device replays a stale result; after unblinding with
+                   the current factors a replay differs by a uniform-looking
+                   field offset ``(r_old − r_now) @ W_q``, which is how it
+                   is emulated here (dense corruption, every element);
+- ``adaptive``     a rational adversary that knows the sampling schedule
+                   (worst case: timing side channels) and corrupts — with a
+                   bit flip — only ops that will NOT be verified. Defeats
+                   ``sampled(rate)`` completely, is completely neutralized
+                   by ``full`` — the policy/threat table DESIGN.md §9
+                   tabulates and BENCH_integrity.json measures.
+
+All decisions are pure functions of the fault key the protocol layer
+derives per (session, op, step), so a given session replays identically —
+which is what lets the engine's device-retry distinguish transient faults
+(fresh session → fresh key → possibly clean) from persistent ones.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blinding as B
+from repro.kernels.limb_matmul.ref import P
+
+KINDS = ("bit_flip", "row_swap", "stale", "adaptive")
+
+# fold_in sub-domains of the per-op fault key
+_SUB_GATE = 0
+_SUB_PICK = 1
+_SUB_STALE = 2
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Static corruption plan (part of the executor's jit trace).
+
+    ``ops``: blinded-op indices to target (None = every op); ``prob``:
+    per-(op, session) corruption probability — 1.0 models a persistent
+    adversary, < 1 a flaky part.
+    """
+    kind: str
+    prob: float = 1.0
+    ops: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert 0.0 < self.prob <= 1.0, self.prob
+
+
+class DishonestDevice:
+    """Corrupts field-domain matmul results inside the trace."""
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.targeted_ops = 0          # static per-trace accounting
+
+    def _bit_flip(self, y: jax.Array, key: jax.Array) -> jax.Array:
+        t, d = y.shape
+        ki, kj, kb = jax.random.split(jax.random.fold_in(key, _SUB_PICK), 3)
+        i = jax.random.randint(ki, (), 0, t)
+        j = jax.random.randint(kj, (), 0, d)
+        b = jax.random.randint(kb, (), 0, 23)      # p < 2^23
+        flipped = jnp.mod(y[i, j] ^ jnp.left_shift(jnp.int32(1), b), P)
+        return y.at[i, j].set(flipped)
+
+    def _row_swap(self, y: jax.Array, key: jax.Array) -> jax.Array:
+        t = y.shape[0]
+        if t < 2:
+            return y
+        ka, ko = jax.random.split(jax.random.fold_in(key, _SUB_PICK))
+        a = jax.random.randint(ka, (), 0, t)
+        bb = jnp.mod(a + jax.random.randint(ko, (), 1, t), t)
+        idx = jnp.arange(t).at[a].set(bb).at[bb].set(a)
+        return jnp.take(y, idx, axis=0)
+
+    def _stale(self, y: jax.Array, key: jax.Array) -> jax.Array:
+        off = B.blinding_stream(jax.random.fold_in(key, _SUB_STALE), y.shape)
+        return jnp.mod(y + off, P)
+
+    def corrupt(self, y_field: jax.Array, *, op_index: int, key: jax.Array,
+                will_verify: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(possibly) corrupt one device result.
+
+        y_field: (t, d_out) int32 in [0, p); key: per-(session, op, step)
+        fault key; will_verify: the integrity layer's (traced) check/skip
+        decision for this op — only the ``adaptive`` class reads it.
+        Returns (y', changed) with ``changed`` the ground-truth scalar bool
+        the IntegrityReport exposes for detection-rate accounting.
+        """
+        spec = self.spec
+        if spec.ops is not None and op_index not in spec.ops:
+            return y_field, jnp.bool_(False)
+        self.targeted_ops += 1
+        if spec.kind in ("bit_flip", "adaptive"):
+            y_new = self._bit_flip(y_field, key)
+        elif spec.kind == "row_swap":
+            y_new = self._row_swap(y_field, key)
+        else:
+            y_new = self._stale(y_field, key)
+        gate = jnp.bool_(True)
+        if spec.prob < 1.0:
+            gate = (jax.random.uniform(jax.random.fold_in(key, _SUB_GATE))
+                    < spec.prob)
+        if spec.kind == "adaptive":
+            gate = gate & ~will_verify
+        y_out = jnp.where(gate, y_new, y_field)
+        return y_out, jnp.any(y_out != y_field)

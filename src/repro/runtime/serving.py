@@ -40,6 +40,11 @@ from repro.runtime.straggler import StepWatchdog
 # sealing._keystream folds nonce words sequentially, so the domains differ)
 DIRECTION_RESPONSE = 0xEE
 
+# fold_in tag deriving a fresh blinding session for an integrity retry /
+# enclave recompute when the caller supplied a fixed key instead of a pool
+# (a re-run must never reuse the failed attempt's one-time pads)
+_RETRY_DOMAIN = 0x0E7B1
+
 
 def request_nonce(rid: int) -> jax.Array:
     return jnp.asarray([rid & 0xFFFFFFFF, (rid >> 32) & 0xFFFFFFFF],
@@ -68,16 +73,79 @@ class Response:
     box: Optional[SealedBox]
     ok: bool
     latency_s: float
+    # integrity mark (DESIGN.md §9): True when a Freivalds check failed on
+    # this request's batch and the logits were recovered (device retry or
+    # enclave recompute) before sealing — served correctly, but the client
+    # / operator can see the device misbehaved.
+    flagged: bool = False
+
+
+@dataclasses.dataclass
+class BatchIntegrity:
+    """Verification outcome of one sealed-batch dispatch (all requests in
+    a batch share the blinded trace, so detection and recovery are
+    batch-granular)."""
+    checks: int = 0              # Freivalds checks that ran (all attempts)
+    failures: int = 0            # checks that mismatched
+    corrupted: int = 0           # injector ground truth (tests/benchmarks)
+    retried: bool = False        # one fresh-session device retry happened
+    recomputed: bool = False     # enclave recompute produced the response
+    trusted: bool = False        # dispatched straight to the enclave
+                                 # (quarantined backend — no checks to run)
+
+    @property
+    def flagged(self) -> bool:
+        return self.failures > 0
+
+
+@dataclasses.dataclass
+class IntegrityTotals:
+    """Running sums over many dispatches (per-batch bools become counts —
+    a sticky ``or`` would report 'recomputed=True' whether 1 or 50 batches
+    needed the enclave)."""
+    checks: int = 0
+    failures: int = 0
+    corrupted: int = 0
+    retries: int = 0
+    recomputes: int = 0
+    trusted_batches: int = 0
+
+    def add(self, integ: BatchIntegrity) -> None:
+        self.checks += integ.checks
+        self.failures += integ.failures
+        self.corrupted += integ.corrupted
+        self.retries += integ.retried
+        self.recomputes += integ.recomputed
+        self.trusted_batches += integ.trusted
+
+
+def _fresh_session(session_key, used: jax.Array) -> jax.Array:
+    """A never-used blinding session for a device retry: next pool key
+    when the caller gave us a pool, else a tagged derivation of the used
+    key (one-time pads must not repeat across attempts)."""
+    if callable(session_key):
+        return session_key()
+    return jax.random.fold_in(used, _RETRY_DOMAIN)
+
+
+def _trusted_key() -> jax.Array:
+    """The enclave-recompute trace draws no blinding streams, no verify
+    keys and no fault keys — its session key is semantically unused, so a
+    constant keeps trusted dispatches from burning pool sessions."""
+    return jax.random.PRNGKey(0)
 
 
 def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
                          *, input_key: str, max_batch: int,
-                         session_key, input_dtype: Optional[str] = None
-                         ) -> Tuple[List[Optional[SealedBox]], int, int]:
+                         session_key, input_dtype: Optional[str] = None,
+                         trusted: bool = False, retry_device: bool = True
+                         ) -> Tuple[List[Optional[SealedBox]], int, int,
+                                    BatchIntegrity]:
     """The one sealed-batch primitive both serving paths share:
-    unseal -> filter failed MACs -> pad -> blinded infer -> seal responses.
+    unseal -> filter failed MACs -> pad -> blinded infer (Freivalds-verified
+    per the executor's policy) -> recover on failure -> seal responses.
 
-    Returns ``(boxes, n_valid, pad)`` with ``boxes`` positional —
+    Returns ``(boxes, n_valid, pad, integrity)`` with ``boxes`` positional —
     ``boxes[i] is None`` iff request i failed its MAC (it never reached
     the executor: no inference slot, no blinding, no telemetry skew).
     ``session_key`` may be a zero-arg callable (e.g. ``SessionPool.
@@ -85,31 +153,63 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
     the executor — an all-invalid batch must not burn a blinding session.
     Keeping this in one place is what keeps the async engine bit-identical
     to the legacy server it is cross-checked against.
+
+    Integrity flow (DESIGN.md §9): a failed check discards the device's
+    answer; ``retry_device`` grants one re-offload under a fresh blinding
+    session (a transient fault clears, a persistent adversary fails
+    again), after which the enclave recomputes the batch itself —
+    ``trusted=True`` (engine quarantine) skips the device entirely. The
+    blinded result is session-independent, so every recovery path is
+    bit-identical to an honest device's response.
     """
     valid_idx: List[int] = []
     inputs: List[np.ndarray] = []
     for i, r in enumerate(requests):
         pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
                         r.shape)
-        if bool(ok):
+        if ok:
             valid_idx.append(i)
             inputs.append(np.asarray(pt))
     boxes: List[Optional[SealedBox]] = [None] * len(requests)
+    integ = BatchIntegrity()
     if not inputs:
-        return boxes, 0, 0
+        return boxes, 0, 0, integ
     # pad to max_batch so one compiled executable serves all sizes
     pad = max_batch - len(inputs)
     x = jnp.asarray(np.stack(inputs + [np.zeros_like(inputs[0])] * pad))
     if input_dtype is not None:          # LM tokens ride as f32 payloads
         x = x.astype(input_dtype)
-    sk = session_key() if callable(session_key) else session_key
-    result = executor.infer({input_key: x}, session_key=sk)
+    batch = {input_key: x}
+    if trusted:
+        # the trusted trace neither blinds nor verifies, so it consumes no
+        # session material — do NOT pop a pool key (its prefetched factor
+        # set would be generated and never taken)
+        integ.trusted = True
+        result = executor.infer(batch, session_key=_trusted_key(),
+                                trusted=True)
+    else:
+        sk = session_key() if callable(session_key) else session_key
+        result = executor.infer(batch, session_key=sk)
+        integ.checks = result.integrity.n_checked
+        integ.failures = result.integrity.n_failed
+        integ.corrupted = result.integrity.n_corrupted
+        if not result.integrity.ok and retry_device:
+            sk = _fresh_session(session_key, sk)
+            result = executor.infer(batch, session_key=sk)
+            integ.retried = True
+            integ.checks += result.integrity.n_checked
+            integ.failures += result.integrity.n_failed
+            integ.corrupted += result.integrity.n_corrupted
+        if not result.integrity.ok:
+            result = executor.infer(batch, session_key=_trusted_key(),
+                                    trusted=True)
+            integ.recomputed = True
     logits = np.asarray(result.logits, np.float32)[:len(inputs)]
     for row, i in enumerate(valid_idx):
         r = requests[i]
         boxes[i] = seal(jnp.asarray(r.session_key, jnp.uint32),
                         jnp.asarray(logits[row]), response_nonce(r.rid))
-    return boxes, len(inputs), pad
+    return boxes, len(inputs), pad, integ
 
 
 class PrivateInferenceServer:
@@ -117,10 +217,12 @@ class PrivateInferenceServer:
 
     def __init__(self, cfg: ModelConfig, params, *, mode: str = "origami",
                  max_batch: int = 8, input_key: str = "images",
-                 impl: str = "fused", precompute: bool = True):
+                 impl: str = "fused", precompute: bool = True,
+                 integrity=None, fault=None):
         self.cfg = cfg
         self.executor = OrigamiExecutor(cfg, params, mode=mode, impl=impl,
-                                        precompute=precompute)
+                                        precompute=precompute,
+                                        integrity=integrity, fault=fault)
         self.quote = measure_enclave(cfg, params,
                                      self.executor.partition)
         self.max_batch = max_batch
@@ -128,6 +230,7 @@ class PrivateInferenceServer:
         self.watchdog = StepWatchdog()
         self.processed = 0
         self.batches = 0
+        self.integrity_totals = IntegrityTotals()  # running serve_batch sums
         self._engine = None              # lazy ServingEngine (serve())
         # server-side root for per-batch blinding sessions (distinct from the
         # clients' sealing keys): batch k runs under fold_in(root, k). MUST
@@ -169,10 +272,11 @@ class PrivateInferenceServer:
                 f"{self.max_batch}; use serve() to micro-batch")
         self.watchdog.start_step()
         t0 = time.monotonic()
-        boxes, n_valid, _ = execute_sealed_batch(
+        boxes, n_valid, _, integ = execute_sealed_batch(
             self.executor, requests, input_key=self.input_key,
             max_batch=self.max_batch,
             session_key=self._blind_session(self.batches))
+        self.integrity_totals.add(integ)
         if n_valid:
             self.batches += 1
             # double-buffer: enqueue the NEXT session's unblinding factors
@@ -183,7 +287,8 @@ class PrivateInferenceServer:
         self.watchdog.end_step()
         dt = time.monotonic() - t0
         # positional assembly (not keyed by rid — rids may repeat)
-        return [Response(r.rid, box, box is not None, dt)
+        return [Response(r.rid, box, box is not None, dt,
+                         flagged=integ.flagged and box is not None)
                 for r, box in zip(requests, boxes)]
 
     def serve(self, requests: List[Request]) -> List[Response]:

@@ -117,3 +117,23 @@ def test_extreme_field_values():
     got = np.asarray(field_matmul(x, w, impl="ref"))
     want = _int64_oracle(np.asarray(x), np.asarray(w))
     np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [
+    (16, 8, 1),              # Freivalds fold, k=1 (tiny)
+    (256, 1024, 2),          # one kernel tile, k=2
+    (300, 1100, 1),          # padding on both dims
+])
+def test_fold_kernel_matches_oracle(shape, rng):
+    """The Pallas fold kernel (y @ s) mod p — the integrity layer's check
+    primitive — must bit-match the int64 oracle, including the zero-padded
+    fold lanes being stripped."""
+    from repro.kernels.limb_matmul.ops import field_fold
+    m, k, nf = shape
+    y = rng.integers(0, ref.P, size=(m, k), dtype=np.int32)
+    s = rng.integers(0, ref.P, size=(k, nf), dtype=np.int32)
+    want = _int64_oracle(y, s)
+    for impl in ("ref", "interpret"):
+        got = np.asarray(field_fold(jnp.asarray(y), jnp.asarray(s),
+                                    impl=impl))
+        np.testing.assert_array_equal(got, want, err_msg=impl)
