@@ -1,0 +1,94 @@
+"""Plan-placement benchmark: prefix cuts vs mixed placements.
+
+``--suite plans`` (benchmarks/run.py) measures, on the smoke VGG-16, the
+end-to-end executor latency of a spread of PlacementPlans — the five
+legacy prefix shapes plus plans only the IR can express (mixed
+enclave/blinded tier-1, verified-open tier-2) — alongside their
+fail-closed proxy leakage (core/planner.py:plan_leakage) and the
+paper-calibrated modeled runtime (core/trust.py:plan_runtime on the full
+config). The table lands in BENCH_plans.json so successive PRs accumulate
+a latency/leakage trajectory per placement shape.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.core import plan as PL
+from repro.core.integrity import IntegrityPolicy
+from repro.core.origami import OrigamiExecutor
+from repro.core.planner import leakage_profile, plan_leakage
+from repro.core.trust import EnclaveSim
+from repro.models import model as M
+
+
+def _bench_plans(cfg):
+    """The measured spread: every legacy shape + IR-only placements
+    (mixed enclave/blinded tier-1, verified-open tier-2)."""
+    return ([PL.compile_mode(cfg, m) for m in PL.LEGACY_MODES]
+            + [PL.make_mixed(cfg), PL.make_vopen(cfg)])
+
+
+def run_suite(record, iters: int = 5) -> dict:
+    cfg = get_smoke("vgg16")
+    full = get_config("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jax.random.normal(
+        jax.random.PRNGKey(1),
+        (2, cfg.image_size, cfg.image_size, 3)) * 0.5}
+    profile = leakage_profile(params, cfg, n_images=2)
+    sim = EnclaveSim(full, device="gpu")
+    results = {}
+    for plan in _bench_plans(cfg):
+        ex = OrigamiExecutor(cfg, params, plan=plan, precompute=True,
+                             integrity=IntegrityPolicy.full(1)
+                             if any(s.integrity for s in plan.steps)
+                             else None)
+        keys = [jax.random.PRNGKey(100 + i) for i in range(iters + 1)]
+        jax.block_until_ready(ex.infer(batch, session_key=keys[0]).logits)
+        t0 = time.perf_counter()
+        for i in range(iters):
+            jax.block_until_ready(
+                ex.infer(batch, session_key=keys[1 + i]).logits)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        leak = plan_leakage(profile, plan)
+        # model the FULL config's plan with the same placement shape
+        full_plan = _scale_plan(plan, full)
+        modeled_ms = (sim.plan_runtime(full_plan).runtime_s * 1e3
+                      if full_plan is not None else float("nan"))
+        derived = (f"leakage={leak:.3f} modeled_full_ms={modeled_ms:.1f} "
+                   f"placements={plan.placement_string}")
+        record(f"plan_{plan.mode_label}", us, derived)
+        results[plan.mode_label] = {
+            "us": round(us, 1), "leakage": round(leak, 4),
+            "modeled_full_ms": round(modeled_ms, 2),
+            "placements": plan.placement_string,
+            "boundary": plan.boundary, "digest": plan.digest[:12],
+        }
+    return results
+
+
+def _scale_plan(smoke_plan, full_cfg):
+    """Re-express a smoke plan's shape on the full config (same prefix
+    fractions) so the cost model prices the paper-scale network."""
+    n_full = len(full_cfg.cnn_layers)
+    n_smoke = smoke_plan.n_layers
+    placements, integrity = [], {}
+    for i in range(n_full):
+        st = smoke_plan.steps[min(i * n_smoke // n_full, n_smoke - 1)]
+        placements.append(st.placement)
+        if st.integrity is not None:
+            integrity[i] = st.integrity
+    boundary = min(smoke_plan.boundary * n_full // n_smoke, n_full)
+    try:
+        return PL.make_plan(full_cfg, placements, integrity=integrity,
+                            boundary=boundary, label=smoke_plan.mode_label)
+    except AssertionError:
+        return None
+
+
+def run(emit):
+    run_suite(emit, iters=3)

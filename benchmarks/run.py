@@ -50,20 +50,30 @@ def run_integrity_suite(out_path: pathlib.Path) -> None:
     print(f"wrote {out_path}", file=sys.stderr)
 
 
+def run_plans_suite(out_path: pathlib.Path) -> None:
+    from benchmarks import plans_bench
+    results = plans_bench.run_suite(emit)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the c-GAN SSIM layer sweep (slow)")
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--suite",
-                    choices=["all", "blinding", "serving", "integrity"],
+                    choices=["all", "blinding", "serving", "integrity",
+                             "plans"],
                     default="all",
                     help="'blinding' runs the fused/precompute matrix into "
                          "BENCH_blinding.json; 'serving' sweeps the engine "
                          "over offered loads into BENCH_serving.json; "
                          "'integrity' measures Freivalds verify overhead "
                          "and fault detection rates into "
-                         "BENCH_integrity.json")
+                         "BENCH_integrity.json; 'plans' compares prefix vs "
+                         "mixed PlacementPlans (latency/leakage) into "
+                         "BENCH_plans.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent
@@ -76,11 +86,16 @@ def main() -> None:
     if args.suite == "integrity":
         run_integrity_suite(root / "BENCH_integrity.json")
         return
+    if args.suite == "plans":
+        run_plans_suite(root / "BENCH_plans.json")
+        return
 
     from benchmarks import (blinding_micro, exec_micro, integrity_bench,
-                            paper_fig2_4_11, paper_fig9_10, paper_table1_2)
+                            paper_fig2_4_11, paper_fig9_10, paper_table1_2,
+                            plans_bench)
     suites = [paper_fig9_10.run, paper_table1_2.run, paper_fig2_4_11.run,
-              blinding_micro.run, exec_micro.run, integrity_bench.run]
+              blinding_micro.run, exec_micro.run, integrity_bench.run,
+              plans_bench.run]
     if args.full:
         from benchmarks import paper_fig8
         suites.append(lambda e: paper_fig8.run(e, steps=150))

@@ -17,3 +17,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --requests 16 --verify sampled --verify-rate 1.0 --inject bit_flip
+# plan-equivalence smoke: a mixed enclave/blinded tier-1 PlacementPlan
+# (inexpressible as any legacy mode string) through the async engine,
+# cross-checked bit-exactly against the synchronous path on the same plan
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --requests 8 --plan mixed

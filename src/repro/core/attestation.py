@@ -39,9 +39,15 @@ class Quote:
     partition: int
     field_p: int
     protocol_version: str = "origami-1"
+    # PlacementPlan digest (core/plan.py): binds the quote to the exact
+    # per-layer placement the enclave will execute, not just the prefix
+    # cut ("" for pre-plan callers — folded into the measurement only
+    # when set, so their measurements are unchanged).
+    plan_digest: str = ""
 
 
-def measure_enclave(cfg: ModelConfig, params, partition: int) -> Quote:
+def measure_enclave(cfg: ModelConfig, params, partition: int,
+                    plan_digest: str = "") -> Quote:
     from repro.kernels.limb_matmul.ref import P
     ident = {
         "config": cfg.to_json(),
@@ -49,9 +55,11 @@ def measure_enclave(cfg: ModelConfig, params, partition: int) -> Quote:
         "field_p": P,
         "weights": _digest_params(params),
     }
+    if plan_digest:
+        ident["plan"] = plan_digest
     m = hashlib.sha256(json.dumps(ident, sort_keys=True).encode()).hexdigest()
     return Quote(measurement=m, config_name=cfg.name, partition=partition,
-                 field_p=P)
+                 field_p=P, plan_digest=plan_digest)
 
 
 def _canonical(quote: Quote) -> bytes:

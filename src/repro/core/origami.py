@@ -1,6 +1,10 @@
-"""Origami executor: two-tier trust-partitioned inference (the paper).
+"""Origami executor: plan-driven trust-partitioned inference (the paper).
 
-Execution modes (paper §VI baselines):
+The executor interprets a ``PlacementPlan`` (core/plan.py): an explicit
+per-layer placement IR — ``open`` | ``enclave`` | ``blinded`` plus optional
+per-step Freivalds policies — compiled once and walked by ONE ``_traced``
+for every model family (the per-family layer iterators live in
+models/vgg.py / models/model.py). The five legacy mode strings
 
     "open"         everything on the untrusted device, no privacy
     "enclave"      everything inside the enclave (paper baseline 2)
@@ -8,22 +12,29 @@ Execution modes (paper §VI baselines):
     "slalom"       blinded offload for EVERY layer (Slalom/Privacy)
     "origami"      blinded offload for tier-1 only, tier-2 open (the paper)
 
-All modes compute the *same function* (up to tier-1 quantization error in
-blinded modes) — tests assert allclose against the open reference. Modes
+remain as thin compatibility constructors over ``plan.compile_mode`` —
+there is no mode-string branching in the executor itself, and plans the
+mode strings cannot express (mixed enclave/blinded tier-1, verified-open
+tier-2 offload) execute through the same interpreter (DESIGN.md §10).
+
+All plans compute the *same function* (up to tier-1 quantization error on
+offloaded steps) — tests assert allclose against the open reference. Plans
 differ in where work lands, which the trace-time telemetry records and
 core/trust.py prices with the paper-calibrated cost model.
 """
 from __future__ import annotations
 
 import functools
+from contextlib import ExitStack
 from dataclasses import dataclass, field as dfield
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import integrity as IG
+from repro.core import plan as PL
 from repro.core import slalom as SL
 from repro.core.blinding import BlindingSpec
 from repro.core.precompute import BlindedLayerCache
@@ -31,7 +42,7 @@ from repro.models import layers as L
 from repro.models import model as M
 from repro.models import vgg as V
 
-MODES = ("open", "enclave", "split", "slalom", "origami")
+MODES = PL.LEGACY_MODES
 
 
 @dataclass
@@ -45,35 +56,47 @@ class OrigamiResult:
 
 
 class OrigamiExecutor:
-    """Partitioned private inference over any repro model."""
+    """Plan-interpreting private inference over any repro model."""
 
     def __init__(self, cfg: ModelConfig, params, mode: str = "origami",
                  partition: Optional[int] = None,
                  spec: Optional[BlindingSpec] = None,
                  impl: str = "fused", precompute: bool = False,
                  integrity: Optional[IG.IntegrityPolicy] = None,
-                 fault: Optional[Any] = None):
-        """``integrity``: Freivalds verification policy over the offloaded
-        field matmuls (core/integrity.py; default off — trust the device).
+                 fault: Optional[Any] = None,
+                 plan: Optional[PL.PlacementPlan] = None):
+        """``plan``: an explicit PlacementPlan; when omitted, the legacy
+        ``mode``/``partition`` kwargs compile one (``plan.compile_mode``).
+        ``integrity``: Freivalds verification policy inherited by blinded
+        steps without their own (core/integrity.py; default off).
         ``fault``: a runtime/faults.DishonestDevice injected under the
-        device matmul. Both are static parts of the jit trace — pick them
+        device matmul. All are static parts of the jit trace — pick them
         at construction."""
-        assert mode in MODES, mode
         assert impl in ("fused", "unfused"), impl
+        if plan is None:
+            plan = PL.compile_mode(cfg, mode, partition)
+        assert plan.n_layers == PL.num_blocks(cfg), \
+            (plan.n_layers, PL.num_blocks(cfg))
         self.cfg = cfg
         self.params = params
-        self.mode = mode
-        self.partition = (partition if partition is not None
-                          else cfg.origami.tier1_layers)
+        self.plan = plan
+        self.mode = plan.mode_label          # compat: legacy name or spec
+        self.partition = plan.boundary       # compat: revealed boundary
         self.spec = spec or BlindingSpec()
         self.impl = impl
         self.precompute = precompute
         self.integrity = integrity or IG.IntegrityPolicy.off()
         self.fault = fault
         self.cache: Optional[BlindedLayerCache] = None
-        self._caches: Dict[Any, BlindedLayerCache] = {}  # per batch-shape
-        self._cache_batch_shapes = None
-        self.telemetry = SL.Telemetry()
+        self._caches: Dict[Any, BlindedLayerCache] = {}  # (digest, shape)
+        self._cache_key = None
+        self._program = PL.program_for(cfg)
+        # per-trace telemetry (each trace gets its OWN recorder; the shared
+        # object the seed used let the trusted-recovery trace corrupt the
+        # offload counters). ``telemetry`` is the last-trace snapshot.
+        self._tele_last = SL.Telemetry()
+        self._tele_blinded = SL.Telemetry()
+        self._tele_trusted = SL.Telemetry()
         self._jitted = jax.jit(self._traced)
         # the recovery path: same math with the field matmuls run inside
         # the enclave (no device, no blinding, no injector) — bit-identical
@@ -81,29 +104,34 @@ class OrigamiExecutor:
         self._jitted_trusted = jax.jit(
             functools.partial(self._traced, trusted=True))
 
+    # -- telemetry snapshots -------------------------------------------------
+    @property
+    def telemetry(self) -> SL.Telemetry:
+        """Snapshot of the most recent trace (blinded or trusted)."""
+        return self._tele_last
+
+    @property
+    def telemetry_blinded(self) -> SL.Telemetry:
+        """Last untrusted (offload) trace — unpolluted by recovery traces."""
+        return self._tele_blinded
+
+    @property
+    def telemetry_trusted(self) -> SL.Telemetry:
+        """Last enclave-recompute trace."""
+        return self._tele_trusted
+
     # -- layer count helpers -------------------------------------------------
     @property
     def num_blocks(self) -> int:
-        return (len(self.cfg.cnn_layers) if self.cfg.family == "cnn"
-                else self.cfg.num_layers)
-
-    def _tier_bounds(self) -> Tuple[int, int]:
-        p = self.partition
-        if self.mode == "slalom":
-            return self.num_blocks, self.num_blocks   # blind everything
-        if self.mode == "open":
-            return 0, 0
-        if self.mode == "enclave":
-            return self.num_blocks, 0                 # all enclave, no blind
-        return p, p                                   # split / origami
+        return self.plan.n_layers
 
     # -- traced computation --------------------------------------------------
     def _traced(self, batch, session_key, factors=None, trusted=False):
+        tele = SL.Telemetry()
         ctx = SL.SlalomContext(
-            session_key, self.spec, telemetry=self.telemetry,
+            session_key, self.spec, telemetry=tele,
             impl=self.impl, factors=factors,
-            integrity=(IG.IntegrityPolicy.off() if trusted
-                       else self.integrity),
+            integrity=IG.IntegrityPolicy.off(),  # set per plan segment
             fault=None if trusted else self.fault, trusted=trusted)
         logits, boundary = self._run(batch, ctx)
         if ctx.integrity_log:
@@ -112,49 +140,71 @@ class OrigamiExecutor:
         else:
             z = jnp.zeros((0,), jnp.bool_)
             rep = (z, z, z)
+        # runs at trace time: expose this trace's counters without letting
+        # one trace kind pollute the other's
+        if trusted:
+            self._tele_trusted = tele
+        else:
+            self._tele_blinded = tele
         return logits, boundary, rep
 
     def _run(self, batch, ctx):
-        cfg = self.cfg
-        blinded = self.mode in ("slalom", "origami")
-        tier1_end, _ = self._tier_bounds()
-
-        if cfg.family == "cnn":
-            return self._traced_cnn(batch, ctx, blinded, tier1_end)
-        return self._traced_lm(batch, ctx, blinded, tier1_end)
+        """Walk the plan segments — the ONE interpreter for all families
+        and all placements (no mode strings, no family forks)."""
+        params, prog, plan = self.params, self._program, self.plan
+        x, memory = prog.prologue(params, batch)
+        boundary = x if plan.boundary == 0 else None
+        for seg in plan.segments:
+            if seg.regime == "plain":
+                x = prog.segment(params, x, seg.lo, seg.hi, memory)
+            else:
+                policy = (seg.policy if seg.policy is not None
+                          else self.integrity)
+                with ExitStack() as stack:
+                    stack.enter_context(ctx.segment_overrides(
+                        policy, unblinded=(seg.regime == "verified")))
+                    stack.enter_context(L.dense_impl(
+                        functools.partial(SL.blinded_dense, ctx)))
+                    if prog.blind_convs:
+                        stack.enter_context(L.conv_impl(
+                            functools.partial(SL.blinded_conv2d, ctx)))
+                    x = prog.segment(params, x, seg.lo, seg.hi, memory)
+            if seg.hi == plan.boundary:
+                boundary = x
+        return prog.epilogue(params, x, batch, memory), boundary
 
     # -- precompute pipeline -------------------------------------------------
     def build_cache(self, batch) -> Optional[BlindedLayerCache]:
-        """Quantize/limb-encode every blinded layer's weights once and set up
-        the per-session factor store (DESIGN.md §4).
+        """Quantize/limb-encode every offloaded layer's weights once and
+        set up the per-session factor store (DESIGN.md §4).
 
-        Discovers the blinded ops by re-tracing the executor under
-        ``jax.eval_shape`` with a recording context — no FLOPs, but the
-        exact call order, im2col weight views and activation row counts of
-        the real trace.
+        The blinded-op records come straight from the plan's static layer
+        shapes (``plan.cache_ops`` slots + models/vgg.py shape algebra) —
+        no eval_shape re-trace. Families whose offloaded ops trace under
+        ``lax.scan`` have no cache slots (per-layer factors can't be bound
+        positionally) and stay on the on-the-fly path.
         """
-        records = []
-        ctx = SL.SlalomContext(jax.random.PRNGKey(0), self.spec,
-                               telemetry=SL.Telemetry(), recorder=records)
-        shapes = {k: jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
-                  for k, v in batch.items()}
-        jax.eval_shape(lambda b: self._run(b, ctx), shapes)
-        if any(r["kind"] == "scanned" for r in records):
-            # blinded ops under lax.scan: one traced call covers many runtime
-            # layers, so per-layer factors can't be bound positionally —
-            # stay on the on-the-fly path (future: stacked factors as scan xs)
+        ops = self.plan.cache_ops
+        if not ops:
             self.precompute = False
             self.cache = None
             return None
+        batch_size = int(jnp.shape(batch["images"])[0])
+        records = V.blinded_op_records(self.params, self.cfg,
+                                       [s.layer_id for s in ops], batch_size)
+        for rec, step in zip(records, ops):
+            rec["unblinded"] = step.verified_open
+            rec["policy"] = (step.integrity if step.integrity is not None
+                             else self.integrity)
         self.cache = BlindedLayerCache.from_records(records, self.spec,
                                                     integrity=self.integrity)
-        self._cache_batch_shapes = tuple(sorted(
+        shapes = tuple(sorted(
             (k, tuple(jnp.shape(v))) for k, v in batch.items()))
+        self._cache_key = (self.plan.digest, shapes)
         # copy-on-write: the SessionPool's refill thread snapshots this
         # dict concurrently; rebinding (vs. in-place insert) keeps any
         # iteration over the old dict safe without a lock
-        self._caches = {**self._caches,
-                        self._cache_batch_shapes: self.cache}
+        self._caches = {**self._caches, self._cache_key: self.cache}
         return self.cache
 
     def prepare_session(self, session_key, step: int = 0) -> None:
@@ -164,64 +214,20 @@ class OrigamiExecutor:
             self.cache.prefetch(session_key, step)
 
     def _session_factors(self, batch, session_key):
-        if not (self.precompute and self.mode in ("slalom", "origami")):
+        if not (self.precompute and self.plan.has_offload):
             return None
         shapes = tuple(sorted((k, tuple(jnp.shape(v)))
                               for k, v in batch.items()))
-        if self.cache is None or shapes != self._cache_batch_shapes:
-            if shapes in self._caches:   # recurring shape (padding buckets):
-                self.cache = self._caches[shapes]    # no rebuild thrash
-                self._cache_batch_shapes = shapes
+        key = (self.plan.digest, shapes)
+        if self.cache is None or key != self._cache_key:
+            if key in self._caches:     # recurring shape (padding buckets):
+                self.cache = self._caches[key]       # no rebuild thrash
+                self._cache_key = key
             else:
                 self.build_cache(batch)
         if self.cache is None:          # precompute unsupported (scanned)
             return None
         return self.cache.take(session_key)
-
-    def _traced_cnn(self, batch, ctx, blinded, tier1_end):
-        cfg, params = self.cfg, self.params
-        x = batch["images"]
-        if blinded and tier1_end > 0:
-            with L.dense_impl(functools.partial(SL.blinded_dense, ctx)), \
-                 L.conv_impl(functools.partial(SL.blinded_conv2d, ctx)):
-                x = V.apply_layer_range(params, x, cfg, 0, tier1_end)
-        elif tier1_end > 0:
-            x = V.apply_layer_range(params, x, cfg, 0, tier1_end)
-        boundary = x
-        x = V.apply_layer_range(params, x, cfg, tier1_end,
-                                len(cfg.cnn_layers))
-        return x, boundary
-
-    def _traced_lm(self, batch, ctx, blinded, tier1_end):
-        cfg, params = self.cfg, self.params
-        memory = batch.get("patches") if cfg.family == "vlm" else None
-        if cfg.family == "audio":
-            # tier-1 ⊆ encoder (the private input is the audio); see DESIGN §5
-            frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
-            x = frames + L.sinusoidal_positions(
-                frames.shape[1], cfg.d_model).astype(frames.dtype)
-            if blinded and tier1_end > 0:
-                with L.dense_impl(functools.partial(SL.blinded_dense, ctx)):
-                    x, _ = M.apply_range(params, x, cfg, 0, tier1_end)
-            elif tier1_end > 0:
-                x, _ = M.apply_range(params, x, cfg, 0, tier1_end)
-            boundary = x
-            x, _ = M.apply_range(params, x, cfg, tier1_end, cfg.num_layers)
-            mem = L.apply_norm(params["enc_norm"], x, cfg.norm)
-            out = M.forward_audio_decoder(params, batch, mem, cfg)
-            return out, boundary
-
-        x = M.embed_tokens(params, batch["tokens"], cfg)   # enclave
-        if blinded and tier1_end > 0:
-            with L.dense_impl(functools.partial(SL.blinded_dense, ctx)):
-                x, _ = M.apply_range(params, x, cfg, 0, tier1_end,
-                                     memory=memory)
-        elif tier1_end > 0:
-            x, _ = M.apply_range(params, x, cfg, 0, tier1_end, memory=memory)
-        boundary = x
-        x, _ = M.apply_range(params, x, cfg, tier1_end, cfg.num_layers,
-                             memory=memory)
-        return M.head(params, x, cfg), boundary
 
     # -- public API ----------------------------------------------------------
     def infer(self, batch: Dict[str, jax.Array],
@@ -231,7 +237,7 @@ class OrigamiExecutor:
         ops execute inside the enclave (field matmuls of the enclave's own
         quantized operands), skipping blinding, the untrusted device, the
         fault injector and verification. Bit-identical logits to the honest
-        blinded path — the integrity layer's recovery primitive."""
+        offloaded path — the integrity layer's recovery primitive."""
         key = (session_key if session_key is not None
                else jax.random.PRNGKey(0))
         if trusted:
@@ -240,13 +246,18 @@ class OrigamiExecutor:
             factors = self._session_factors(batch, key)
             fn = self._jitted if jit else self._traced
             logits, boundary, rep = fn(batch, key, factors)
+        # the jit cache may skip re-tracing; point the public snapshot at
+        # the last trace of THIS kind so a recovery trace never masquerades
+        # as an offload trace (or vice versa)
+        self._tele_last = (self._tele_trusted if trusted
+                           else self._tele_blinded)
         return OrigamiResult(logits=logits, boundary=boundary,
                              telemetry=self.telemetry,
                              integrity=IG.IntegrityReport(*rep),
                              trusted=trusted)
 
     def reference(self, batch: Dict[str, jax.Array]) -> jax.Array:
-        """Plain fp forward — the correctness oracle for all modes."""
+        """Plain fp forward — the correctness oracle for all plans."""
         if self.cfg.family == "cnn":
             return V.vgg_forward(self.params, batch["images"], self.cfg)
         return M.forward(self.params, batch, self.cfg).logits

@@ -1,0 +1,418 @@
+"""PlacementPlan IR: per-layer placement compiled once, interpreted once.
+
+The paper's Origami/Slalom spectrum is a *per-layer placement decision* —
+each block either runs on the untrusted device in the clear (``open``),
+inside the enclave (``enclave``), or blinded-offloaded to the device
+(``blinded``). The seed encoded that spectrum as five mode strings plus a
+single prefix-partition integer, and re-derived the decision logic in four
+places (the executor's tier bounds, the planner, the precompute recorder,
+the cost model). This module makes the decision an explicit artifact,
+YerbaBuena-style (Gu et al.: ternary model partitioning) with
+Privado-style declarative per-model compilation:
+
+- ``LayerStep(layer_id, placement, integrity, precompute_slot)`` — one
+  decision per block. ``integrity`` is an optional per-step Freivalds
+  policy override (``None`` inherits the executor's policy); an *open*
+  step with an enabled policy is a **verified-open offload**: the device
+  computes the field matmul unblinded (zero pad, no privacy) but the
+  enclave still Freivalds-checks the result — the Slalom/Integrity point
+  of the design space, previously inexpressible. ``precompute_slot`` is
+  the op's index into the BlindedLayerCache (assigned statically for CNNs;
+  ``None`` for ops traced under ``lax.scan``, which stay uncacheable).
+- ``PlacementPlan`` — the ordered steps plus the ``boundary`` index: the
+  layer count after which the activation is revealed to the adversary
+  (what ``OrigamiResult.boundary`` captures). ``compile_mode`` compiles
+  every legacy mode string; ``make_plan``/``from_string`` build arbitrary
+  custom placements (e.g. mixed enclave/blinded tier-1).
+- ``segments()`` — maximal runs of equal execution regime
+  (``plain`` | ``blinded`` | ``verified``), split at the boundary; the
+  executor walks these with one loop for every model family
+  (``program_for`` dispatches to the per-family layer iterators in
+  models/vgg.py / models/model.py).
+- ``digest`` — a stable hash of the whole plan; the serving layer keys
+  layer caches and prefetch rings on it (DESIGN.md §10).
+
+Execution-regime note: non-linear layers (pools) inside a blinded segment
+simply never hit the dense/conv intercept — they run enclave-resident, as
+in the paper. The cost model (core/trust.py) prices them with the
+EPC-bandwidth formula whenever the plan has blinded steps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import integrity as IG
+
+PLACEMENTS = ("open", "enclave", "blinded")
+LEGACY_MODES = ("open", "enclave", "split", "slalom", "origami")
+
+# placement-string alphabet (``from_string`` / ``placement_string``):
+# o = open, e = enclave, b = blinded, v = verified-open (open + Freivalds)
+_CHAR_PLACEMENT = {"o": "open", "e": "enclave", "b": "blinded", "v": "open"}
+_PLACEMENT_CHAR = {"open": "o", "enclave": "e", "blinded": "b"}
+
+
+def num_blocks(cfg: ModelConfig) -> int:
+    """Plan length for a config: CNN layer specs or transformer blocks."""
+    return len(cfg.cnn_layers) if cfg.family == "cnn" else cfg.num_layers
+
+
+@dataclass(frozen=True)
+class LayerStep:
+    """One per-layer placement decision.
+
+    ``integrity``: per-step Freivalds policy. ``None`` inherits the
+    executor's policy (for blinded steps) / means unverified (for open
+    steps); an explicit ``IntegrityPolicy.off()`` on a blinded step opts
+    that step out of an executor-wide policy. ``precompute_slot``: index
+    of this step's blinded op in the BlindedLayerCache (``None``:
+    uncacheable — non-linear layer, non-offloaded, or scanned family).
+    """
+    layer_id: int
+    placement: str
+    integrity: Optional[IG.IntegrityPolicy] = None
+    precompute_slot: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.placement in PLACEMENTS, self.placement
+
+    @property
+    def verified_open(self) -> bool:
+        return (self.placement == "open" and self.integrity is not None
+                and self.integrity.enabled)
+
+    @property
+    def offloaded(self) -> bool:
+        """Does the untrusted device execute this step's linear ops?"""
+        return self.placement == "blinded" or self.verified_open
+
+
+@dataclass(frozen=True)
+class Segment:
+    """A maximal run of plan steps sharing one execution regime.
+
+    ``regime``: "plain" (fp, no device protocol — open or enclave),
+    "blinded" (Slalom protocol), "verified" (unblinded offload +
+    Freivalds). ``policy`` is the per-segment IntegrityPolicy override
+    (``None`` = inherit the executor's)."""
+    lo: int
+    hi: int
+    regime: str
+    policy: Optional[IG.IntegrityPolicy] = None
+
+
+def _policy_key(p: Optional[IG.IntegrityPolicy]):
+    return None if p is None else (p.mode, p.rate, p.k)
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    """Ordered per-layer placements + the revealed-boundary index."""
+    model: str
+    family: str
+    steps: Tuple[LayerStep, ...]
+    boundary: int
+    mode_label: str = "custom"
+
+    def __post_init__(self):
+        n = len(self.steps)
+        assert 0 <= self.boundary <= n, (self.boundary, n)
+        for i, st in enumerate(self.steps):
+            assert st.layer_id == i, (st.layer_id, i)
+
+    # -- derived structure ---------------------------------------------------
+    def _regime(self, st: LayerStep):
+        if st.placement == "blinded":
+            return "blinded", st.integrity
+        if st.verified_open:
+            return "verified", st.integrity
+        return "plain", None
+
+    @cached_property
+    def segments(self) -> Tuple[Segment, ...]:
+        """Maximal equal-regime runs, always split at ``boundary`` so the
+        executor can capture the revealed activation between segments."""
+        segs = []
+        for i, st in enumerate(self.steps):
+            regime, policy = self._regime(st)
+            if (segs and segs[-1].regime == regime
+                    and _policy_key(segs[-1].policy) == _policy_key(policy)
+                    and i != self.boundary):
+                segs[-1] = Segment(segs[-1].lo, i + 1, regime, policy)
+            else:
+                segs.append(Segment(i, i + 1, regime, policy))
+        return tuple(segs)
+
+    @cached_property
+    def digest(self) -> str:
+        body = {
+            "model": self.model, "family": self.family,
+            "boundary": self.boundary,
+            "steps": [(s.layer_id, s.placement, _policy_key(s.integrity))
+                      for s in self.steps],
+        }
+        return hashlib.sha256(
+            json.dumps(body, sort_keys=True).encode()).hexdigest()
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.steps)
+
+    @property
+    def num_blinded(self) -> int:
+        return sum(s.placement == "blinded" for s in self.steps)
+
+    @property
+    def has_blinded(self) -> bool:
+        return any(s.placement == "blinded" for s in self.steps)
+
+    @property
+    def has_offload(self) -> bool:
+        """Any step running the device protocol (blinded or verified-open):
+        gates the precompute pipeline and the session-factor machinery."""
+        return any(s.offloaded for s in self.steps)
+
+    @property
+    def has_step_policies(self) -> bool:
+        """Any step carrying its own enabled Freivalds policy (verified
+        even when the executor-wide policy is off)."""
+        return any(s.integrity is not None and s.integrity.enabled
+                   for s in self.steps)
+
+    @property
+    def cache_ops(self) -> Tuple[LayerStep, ...]:
+        """Steps with a static precompute slot, in slot (= trace) order."""
+        ops = [s for s in self.steps if s.precompute_slot is not None]
+        return tuple(sorted(ops, key=lambda s: s.precompute_slot))
+
+    @property
+    def placement_string(self) -> str:
+        return "".join("v" if s.verified_open
+                       else _PLACEMENT_CHAR[s.placement] for s in self.steps)
+
+    def exposed_boundaries(self) -> Tuple[int, ...]:
+        """Every boundary index the untrusted device observes in the
+        clear: the declared ``boundary`` plus the input and output of
+        every open step (open layers compute on device in plain fp, so
+        both sides of them leak). Index 0 is the RAW INPUT — exposed when
+        the first layer is open (or the boundary is 0); core/planner.py's
+        fail-closed rule scores it as total leakage (1.0). The final
+        index n (the logits) is inherently public and never listed."""
+        n = len(self.steps)
+        exposed = set()
+        if self.boundary <= n - 1:
+            exposed.add(self.boundary)
+        if self.steps and self.steps[0].placement == "open":
+            exposed.add(0)
+        for p in range(1, n):
+            if (self.steps[p - 1].placement == "open"
+                    or self.steps[p].placement == "open"):
+                exposed.add(p)
+        return tuple(sorted(exposed))
+
+    def summary(self) -> str:
+        return (f"{self.model}[{self.mode_label}] "
+                f"{self.placement_string} boundary={self.boundary} "
+                f"plan={self.digest[:12]}")
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def linear_layers(cfg: ModelConfig) -> Optional[Tuple[bool, ...]]:
+    """Per-layer "carries an individually-addressable linear op" mask.
+
+    ``None`` for families whose blinded ops trace under ``lax.scan`` (one
+    traced call stands for many runtime layers): those ops can be blinded
+    but neither positionally cached NOR per-op verified — the DESIGN.md
+    §4/§9 restriction. This is the single source of truth both the slot
+    assigner and the verified-open constructors consult."""
+    if cfg.family != "cnn":
+        return None
+    from repro.models import vgg as V
+    return tuple(V.layer_kind(cfg, i)[0] in ("conv", "fc", "logits")
+                 for i in range(len(cfg.cnn_layers)))
+
+
+def _assign_slots(cfg: ModelConfig,
+                  steps: Sequence[LayerStep]) -> Tuple[LayerStep, ...]:
+    linear = linear_layers(cfg)
+    out, slot = [], 0
+    for st in steps:
+        ps = None
+        if linear is not None and st.offloaded and linear[st.layer_id]:
+            ps, slot = slot, slot + 1
+        out.append(LayerStep(st.layer_id, st.placement, st.integrity, ps))
+    return tuple(out)
+
+
+def make_plan(cfg: ModelConfig, placements: Sequence[str], *,
+              integrity: Optional[Dict[int, IG.IntegrityPolicy]] = None,
+              boundary: Optional[int] = None,
+              label: str = "custom") -> PlacementPlan:
+    """Build a plan from per-layer placement names.
+
+    ``integrity``: {layer_id: policy} per-step overrides. ``boundary``
+    defaults to the start of the trailing open suffix — the deepest
+    activation the plan actually reveals wholesale (0 for an all-open
+    plan, n when the last layer is protected)."""
+    n = num_blocks(cfg)
+    placements = list(placements)
+    assert len(placements) == n, (len(placements), n)
+    integrity = integrity or {}
+    if linear_layers(cfg) is None and any(
+            p is not None and p.enabled for p in integrity.values()):
+        # scanned families (LM/audio/vlm) trace many runtime layers
+        # through one call — per-op verification cannot bind there, so an
+        # enabled per-step policy would be silently unenforced. For an
+        # open step that is catastrophic: the op would run UNBLINDED and
+        # UNCHECKED while the plan digest (and the attestation quote)
+        # advertises verified offload. Fail at compile time instead.
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}): per-step integrity policies "
+            "(verified-open 'v' placements) need per-op verification, "
+            "which is unavailable for families whose ops trace under "
+            "lax.scan — use 'blinded' placements and an executor-wide "
+            "policy instead (DESIGN.md §9/§10)")
+    if boundary is None:
+        boundary = n
+        while boundary > 0 and placements[boundary - 1] == "open":
+            boundary -= 1
+    steps = [LayerStep(i, p, integrity.get(i))
+             for i, p in enumerate(placements)]
+    return PlacementPlan(cfg.name, cfg.family, _assign_slots(cfg, steps),
+                         boundary, label)
+
+
+def compile_mode(cfg: ModelConfig, mode: str,
+                 partition: Optional[int] = None) -> PlacementPlan:
+    """Compile a legacy mode string (+ prefix partition) to a plan.
+
+        open     all open                     boundary 0
+        enclave  all enclave                  boundary n
+        split    enclave^p + open^(n-p)       boundary p
+        slalom   blinded everywhere           boundary n
+        origami  blinded^p + open^(n-p)       boundary p
+    """
+    assert mode in LEGACY_MODES, mode
+    n = num_blocks(cfg)
+    p = partition if partition is not None else cfg.origami.tier1_layers
+    if mode == "open":
+        placements, boundary = ["open"] * n, 0
+    elif mode == "enclave":
+        placements, boundary = ["enclave"] * n, n
+    elif mode == "slalom":
+        placements, boundary = ["blinded"] * n, n
+    elif mode == "split":
+        placements, boundary = ["enclave"] * p + ["open"] * (n - p), p
+    else:                                   # origami
+        placements, boundary = ["blinded"] * p + ["open"] * (n - p), p
+    return make_plan(cfg, placements, boundary=boundary, label=mode)
+
+
+def from_string(cfg: ModelConfig, spec: str, *,
+                verify: Optional[IG.IntegrityPolicy] = None,
+                boundary: Optional[int] = None,
+                label: Optional[str] = None) -> PlacementPlan:
+    """Compact per-layer spec: one char per layer from ``oebv``
+    (v = verified-open; its policy is ``verify`` or full(k=1))."""
+    spec = spec.strip().lower()
+    n = num_blocks(cfg)
+    assert len(spec) == n, f"spec {spec!r} has {len(spec)} chars, want {n}"
+    placements, integrity = [], {}
+    for i, ch in enumerate(spec):
+        assert ch in _CHAR_PLACEMENT, ch
+        placements.append(_CHAR_PLACEMENT[ch])
+        if ch == "v":
+            integrity[i] = verify or IG.IntegrityPolicy.full(1)
+    return make_plan(cfg, placements, integrity=integrity, boundary=boundary,
+                     label=label or spec)
+
+
+def make_mixed(cfg: ModelConfig, boundary: Optional[int] = None,
+               blinded_prefix: Optional[int] = None,
+               label: str = "mixed") -> PlacementPlan:
+    """Mixed enclave/blinded tier-1 (inexpressible as a mode string):
+    layers [0, blinded_prefix) blinded, [blinded_prefix, boundary)
+    enclave-resident, the rest open. Default splits tier-1 in half."""
+    n = num_blocks(cfg)
+    p = boundary if boundary is not None else cfg.origami.tier1_layers
+    b = blinded_prefix if blinded_prefix is not None else max(p // 2, 1)
+    assert 0 <= b <= p <= n, (b, p, n)
+    return make_plan(cfg, ["blinded"] * b + ["enclave"] * (p - b)
+                     + ["open"] * (n - p), boundary=p, label=label)
+
+
+def make_vopen(cfg: ModelConfig, boundary: Optional[int] = None,
+               verify: Optional[IG.IntegrityPolicy] = None,
+               label: str = "vopen") -> PlacementPlan:
+    """Verified-open tier-2 (inexpressible as a mode string): blinded
+    prefix up to ``boundary``, then every linear layer offloads unblinded
+    under the ``verify`` Freivalds policy (default full(k=1)). Raises for
+    scanned families — per-op verification cannot bind there
+    (``linear_layers``), and unverified + unblinded is the worst of both
+    worlds."""
+    n = num_blocks(cfg)
+    p = boundary if boundary is not None else cfg.origami.tier1_layers
+    pol = verify or IG.IntegrityPolicy.full(1)
+    linear = linear_layers(cfg)
+    if linear is None:
+        raise ValueError(f"{cfg.name}: verified-open needs per-op "
+                         "verification (see linear_layers)")
+    integ = {i: pol for i in range(p, n) if linear[i]}
+    return make_plan(cfg, ["blinded"] * p + ["open"] * (n - p),
+                     integrity=integ, boundary=p, label=label)
+
+
+def classify_legacy(plan: PlacementPlan) -> Optional[Tuple[str, int]]:
+    """(mode, partition) iff the plan is exactly a legacy prefix shape
+    with no per-step integrity overrides — lets the cost model delegate
+    to the paper-calibrated per-mode formulas bit-for-bit."""
+    if any(s.integrity is not None for s in plan.steps):
+        return None
+    ps = [s.placement for s in plan.steps]
+    n, b = len(ps), plan.boundary
+    if ps == ["open"] * n and b == 0:
+        return "open", 0
+    if ps == ["enclave"] * n and b == n:
+        return "enclave", n
+    if ps == ["blinded"] * n and b == n:
+        return "slalom", n
+    if ps == ["enclave"] * b + ["open"] * (n - b):
+        return "split", b
+    if ps == ["blinded"] * b + ["open"] * (n - b):
+        return "origami", b
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-family layer programs (the iterators the plan interpreter walks)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlanProgram:
+    """Family-specific walk: ``prologue(params, batch) -> (x, memory)``,
+    ``segment(params, x, lo, hi, memory) -> x`` over blocks [lo, hi),
+    ``epilogue(params, x, batch, memory) -> logits``. ``blind_convs``:
+    whether the conv intercept applies inside blinded segments (CNNs)."""
+    n_layers: int
+    blind_convs: bool
+    prologue: Callable
+    segment: Callable
+    epilogue: Callable
+
+
+def program_for(cfg: ModelConfig) -> PlanProgram:
+    if cfg.family == "cnn":
+        from repro.models import vgg as V
+        pro, seg, epi = V.layer_program(cfg)
+        return PlanProgram(len(cfg.cnn_layers), True, pro, seg, epi)
+    from repro.models import model as M
+    pro, seg, epi = M.layer_program(cfg)
+    return PlanProgram(cfg.num_layers, False, pro, seg, epi)

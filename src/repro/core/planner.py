@@ -31,11 +31,13 @@ honours the config's declared partition and marks the plan's ``source``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as PL
+from repro.core.integrity import IntegrityPolicy
 from repro.core.trust import EnclaveSim
 from repro.privacy.data import make_batch
 from repro.privacy.ssim import ssim
@@ -60,6 +62,11 @@ class PartitionPlan:
         return (f"{self.model}: p={self.partition} ({self.source}) "
                 f"leakage={leak_s} floor={self.privacy_floor} "
                 f"modeled_runtime={rt_s}")
+
+    def to_placement(self, cfg: ModelConfig) -> PL.PlacementPlan:
+        """Compile this prefix decision to the per-layer PlacementPlan IR
+        (core/plan.py) — what the executor and serving layer consume."""
+        return PL.compile_mode(cfg, self.mode, self.partition)
 
 
 def _grayscale_unit(x: jnp.ndarray) -> jnp.ndarray:
@@ -120,6 +127,51 @@ def leakage_profile(params, cfg: ModelConfig, *,
     return profile
 
 
+def plan_leakage(profile: Dict[int, float], plan: PL.PlacementPlan) -> float:
+    """Fail-closed proxy leakage of an arbitrary PlacementPlan.
+
+    The device observes every boundary in ``plan.exposed_boundaries()``
+    (the declared boundary plus both sides of every open layer). Exposing
+    boundary 0 — the raw input, i.e. the first layer runs open — is total
+    leakage (1.0) by definition. Each other exposed boundary scores its
+    measured proxy leakage; a boundary the proxy could not measure
+    **inherits the worst upstream measured leakage** (1.0 if nothing
+    upstream was measured) — so a custom or non-contiguous plan can never
+    report lower leakage than the layers feeding its open steps. The
+    plan's leakage is the max over all exposed boundaries; a plan
+    exposing nothing (all layers protected, boundary at the logits —
+    e.g. slalom/enclave) scores 0.0.
+    """
+    exposed = plan.exposed_boundaries()
+    if not exposed:
+        return 0.0
+    if 0 in exposed:
+        return 1.0
+    worst = 0.0
+    carry: Optional[float] = None            # max of measured boundaries
+    n = plan.n_layers
+    for p in range(1, n):
+        v = profile.get(p)
+        if v is not None:
+            carry = v if carry is None else max(carry, v)
+        if p in exposed:
+            worst = max(worst, v if v is not None
+                        else (1.0 if carry is None else carry))
+    return worst
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementChoice:
+    """One scored candidate from the per-layer placement sweep."""
+    plan: PL.PlacementPlan
+    leakage: float
+    runtime_s: float
+
+    def summary(self) -> str:
+        return (f"{self.plan.summary()} leakage={self.leakage:.3f} "
+                f"modeled_runtime={self.runtime_s * 1e3:.1f}ms")
+
+
 class PartitionPlanner:
     """Sweeps ``EnclaveSim.runtime(mode, p)`` under a privacy floor."""
 
@@ -177,3 +229,55 @@ class PartitionPlanner:
         return PartitionPlan(cfg.name, mode, chosen, "planner",
                              self.privacy_floor, dict(leakage), runtime_s,
                              feasible)
+
+    # -- per-layer placement sweep (beyond prefix cuts) ----------------------
+    def placement_candidates(self, cfg: ModelConfig, boundary: int, *,
+                             verify: Optional[IntegrityPolicy] = None
+                             ) -> List[PL.PlacementPlan]:
+        """Candidate plans for one boundary, beyond the pure blinded
+        prefix: every mixed enclave/blinded tier-1 split (an enclave
+        suffix of tier-1 is cheaper when its blind/unblind traffic
+        outweighs SGX compute) and, when ``verify`` is set, a
+        verified-open tier-2 variant (tier-2 linear layers offload
+        unblinded under a Freivalds policy). All candidates expose
+        exactly the same boundaries, so leakage is shared."""
+        cands = [PL.compile_mode(cfg, "origami", boundary)]
+        for b in range(boundary):            # blinded prefix length
+            cands.append(PL.make_mixed(cfg, boundary, b,
+                                       label=f"mixed@{boundary}-b{b}"))
+        if verify is not None and boundary < PL.num_blocks(cfg):
+            cands.append(PL.make_vopen(cfg, boundary, verify,
+                                       label=f"vopen@{boundary}"))
+        return cands
+
+    def placement_plan(self, cfg: ModelConfig, params=None, *,
+                       leakage: Optional[Dict[int, float]] = None,
+                       verify: Optional[IntegrityPolicy] = None
+                       ) -> PlacementChoice:
+        """Per-layer sweep under the privacy floor: every feasible prefix
+        boundary spawns ``placement_candidates``; each candidate is scored
+        fail-closed (``plan_leakage``) and priced per-step
+        (``EnclaveSim.plan_runtime``); the cheapest feasible plan wins
+        (ties: fewer blinded layers). Falls back to all-blinded (Slalom)
+        when no boundary is safe — same fail-closed rule as ``plan``."""
+        assert cfg.family == "cnn", "placement sweep needs the SSIM proxy"
+        if leakage is None:
+            assert params is not None, "planner needs params for the proxy"
+            leakage = leakage_profile(params, cfg, n_images=self.n_images)
+        n = len(cfg.cnn_layers)
+        sim = EnclaveSim(cfg, device=self.device)
+        scored: List[PlacementChoice] = []
+        for boundary in sorted(leakage):
+            for cand in self.placement_candidates(cfg, boundary,
+                                                  verify=verify):
+                leak = plan_leakage(leakage, cand)
+                if leak > self.privacy_floor:
+                    continue
+                scored.append(PlacementChoice(
+                    cand, leak, sim.plan_runtime(cand).runtime_s))
+        if not scored:
+            slalom = PL.compile_mode(cfg, "slalom", n)
+            return PlacementChoice(slalom, 0.0,
+                                   sim.plan_runtime(slalom).runtime_s)
+        return min(scored, key=lambda c: (c.runtime_s,
+                                          c.plan.num_blinded))

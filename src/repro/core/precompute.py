@@ -49,13 +49,20 @@ from repro.kernels.limb_matmul.ops import encode_weight_planes, field_matmul
 
 @dataclass(frozen=True)
 class CachedLayer:
-    """Per-blinded-op static material (weights are static across requests)."""
+    """Per-blinded-op static material (weights are static across requests).
+
+    ``unblinded``: verified-open offload slot (core/plan.py) — the pad is
+    identically zero (no privacy, no factor matmul), fold vectors still
+    apply. ``policy``: this op's Freivalds policy (``None`` inherits the
+    cache-wide one), the plan's per-step integrity override."""
     t: int                      # activation rows (batch-shape dependent)
     d_in: int
     d_out: int
     w_q: jax.Array              # (d_in, d_out) int32 field
     w_limbs: jax.Array          # (3, Kp, Np) int8, padded to the block plan
     w_scale: jax.Array          # () float32 absmax scale
+    unblinded: bool = False
+    policy: Optional[IG.IntegrityPolicy] = None
 
 
 class BlindedLayerCache:
@@ -78,10 +85,14 @@ class BlindedLayerCache:
                      spec: B.BlindingSpec,
                      integrity: Optional[IG.IntegrityPolicy] = None
                      ) -> "BlindedLayerCache":
-        """records: the SlalomContext.recorder output of a cache-builder
-        trace — one {"kind", "w", "t", "d_in", "d_out"} per blinded op, in
-        call order. Conv records carry the raw (kh, kw, cin, cout) weight;
-        the im2col column reorder happens here, outside any trace."""
+        """records: static per-op descriptors in trace order — one
+        {"kind", "w", "t", "d_in", "d_out"} per offloaded op (derived from
+        the PlacementPlan's cache slots by models/vgg.py:
+        blinded_op_records; the eval_shape recorder re-trace is gone).
+        Optional keys: "unblinded" (verified-open slot) and "policy"
+        (per-step Freivalds override). Conv records carry the raw
+        (kh, kw, cin, cout) weight; the im2col column reorder happens
+        here, outside any trace."""
         from repro.core.slalom import conv_weight_cols
         layers = []
         for rec in records:
@@ -91,7 +102,9 @@ class BlindedLayerCache:
             layers.append(CachedLayer(
                 t=rec["t"], d_in=rec["d_in"], d_out=rec["d_out"],
                 w_q=w_q, w_limbs=encode_weight_planes(w_q),
-                w_scale=w_scale))
+                w_scale=w_scale,
+                unblinded=bool(rec.get("unblinded", False)),
+                policy=rec.get("policy")))
         return cls(layers, spec, integrity=integrity)
 
     # -- per-session factors -----------------------------------------------
@@ -106,17 +119,26 @@ class BlindedLayerCache:
         consumed positionally by SlalomContext."""
         factors = []
         for i, lyr in enumerate(self.layers):
-            key = B.stream_key(session_key, i, step)
-            r = B.blinding_stream(key, (lyr.t, lyr.d_in))
-            u = field_matmul(r, lyr.w_q)
-            self.factor_matmuls += 1
+            if lyr.unblinded:
+                # verified-open slot: zero pad, u = (0 @ W) = 0 — nothing
+                # to matmul or store. The entry keeps its positional slot
+                # with r/u = None; the consumer synthesizes the zeros
+                # inside the trace (core/slalom.py), so a prefetch ring
+                # never pins full-size constant-zero arrays per session.
+                r = u = None
+            else:
+                key = B.stream_key(session_key, i, step)
+                r = B.blinding_stream(key, (lyr.t, lyr.d_in))
+                u = field_matmul(r, lyr.w_q)
+                self.factor_matmuls += 1
             entry = {"r": r, "u": u, "w_q": lyr.w_q,
                      "w_limbs": lyr.w_limbs, "w_scale": lyr.w_scale}
-            if self.integrity.enabled:
+            pol = lyr.policy if lyr.policy is not None else self.integrity
+            if pol.enabled:
                 # same key derivation as the on-the-fly path in
                 # core/slalom.py — cached and live verification bit-match
                 entry["s"] = IG.fold_stream(session_key, i, step,
-                                            lyr.d_out, self.integrity.k)
+                                            lyr.d_out, pol.k)
                 entry["ws"] = field_matmul(lyr.w_q, entry["s"])
                 self.fold_matmuls += 1
             factors.append(entry)

@@ -40,6 +40,7 @@ this is exact and free; core/trust.py turns it into the paper's cost model.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass, field as dfield
 from typing import Any, List, Optional
 
@@ -101,12 +102,15 @@ class SlalomContext:
 
     ``factors``: per-layer precomputed blinding material from
     ``BlindedLayerCache.session_factors`` (consumed positionally, in call
-    order). ``recorder``: when set, blinded ops record their (weight, shape)
-    instead of blinding — used by the cache builder under ``jax.eval_shape``.
-    ``integrity``/``fault``: Freivalds policy and dishonest-device injector
-    (core/integrity.py, runtime/faults.py); ``integrity_log`` collects one
-    (checked, failed, corrupted) bool triple per blinded op. ``trusted``:
-    enclave-recompute mode — no device, no blinding, no verification.
+    order). ``integrity``/``fault``: Freivalds policy and dishonest-device
+    injector (core/integrity.py, runtime/faults.py); ``integrity_log``
+    collects one (checked, failed, corrupted) bool triple per blinded op.
+    ``trusted``: enclave-recompute mode — no device, no blinding, no
+    verification. ``unblinded``: verified-open offload (core/plan.py) —
+    the device gets the quantized operand with a ZERO pad (no privacy) and
+    the factor matmul vanishes (u = 0·W); verification still applies.
+    ``integrity``/``unblinded`` are per-plan-segment state: the plan
+    interpreter scopes them with ``segment_overrides`` while tracing.
     """
     session_key: jax.Array
     spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
@@ -114,13 +118,27 @@ class SlalomContext:
     step: int = 0
     impl: str = "fused"                       # "fused" | "unfused"
     factors: Optional[List[Any]] = None
-    recorder: Optional[List[Any]] = None
     integrity: IG.IntegrityPolicy = dfield(
         default_factory=IG.IntegrityPolicy.off)
     fault: Optional[Any] = None               # runtime/faults.DishonestDevice
     trusted: bool = False
+    unblinded: bool = False
     integrity_log: List[Any] = dfield(default_factory=list)
     _layer_counter: int = 0
+
+    @contextmanager
+    def segment_overrides(self, integrity: Optional[IG.IntegrityPolicy],
+                          unblinded: bool = False):
+        """Scope the effective verification policy / unblinded flag to one
+        plan segment (trace-time Python state, static under jit)."""
+        prev = self.integrity, self.unblinded
+        if integrity is not None:
+            self.integrity = integrity
+        self.unblinded = unblinded
+        try:
+            yield self
+        finally:
+            self.integrity, self.unblinded = prev
 
     def next_layer_key(self) -> jax.Array:
         k = B.stream_key(self.session_key, self._layer_counter, self.step)
@@ -148,12 +166,27 @@ class SlalomContext:
                 f"this batch shape/partition")
             self._layer_counter += 1
             e = self.factors[op]
-            assert e["r"].shape == (t, d_in), (
-                f"cached stream shape {e['r'].shape} != ({t}, {d_in}) — "
-                f"cache was built for a different batch shape")
             w_q, w_scale = e["w_q"], e["w_scale"]
             w_limbs, r, u = e.get("w_limbs"), e["r"], e["u"]
+            if r is None:
+                # verified-open slot (precompute.py stores no arrays for
+                # the zero pad): synthesize it in-trace — a jit constant,
+                # not per-session device memory
+                r = jnp.zeros((t, d_in), jnp.int32)
+                u = jnp.zeros((t, d_out), jnp.int32)
+            else:
+                assert e["r"].shape == (t, d_in), (
+                    f"cached stream shape {e['r'].shape} != ({t}, {d_in}) — "
+                    f"cache was built for a different batch shape")
             s, ws = e.get("s"), e.get("ws")
+        elif self.unblinded:
+            # verified-open offload: zero pad, so u = (0 @ W) = 0 — no
+            # factor matmul exists to pay for (or precompute)
+            self._layer_counter += 1
+            w_q, w_scale = B.quantize_weight(w, self.spec)
+            r = jnp.zeros((t, d_in), jnp.int32)
+            u = jnp.zeros((t, d_out), jnp.int32)
+            w_limbs = s = ws = None
         else:
             key = self.next_layer_key()
             w_q, w_scale = B.quantize_weight(w, self.spec)
@@ -190,20 +223,6 @@ def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
     for s in lead:
         t *= s
     xt = x.reshape(t, d_in)
-
-    if ctx.recorder is not None:
-        # cache-builder trace: record the concrete weight leaf (a transform
-        # of it would be a tracer and leak out of eval_shape), run plain fp.
-        # Weights seen through lax.scan are tracers — one traced call stands
-        # for many runtime layers, so positional caching can't apply; mark
-        # the record and let the executor fall back to on-the-fly factors.
-        kind = "scanned" if isinstance(w, jax.core.Tracer) else "dense"
-        ctx.recorder.append({"kind": kind, "w": None if kind == "scanned"
-                             else w, "t": t, "d_in": d_in, "d_out": d_out})
-        y = xt.astype(jnp.float32) @ w.astype(jnp.float32)
-        if "b" in p:
-            y = y + p["b"].astype(jnp.float32)
-        return y.reshape(lead + (d_out,)).astype(x.dtype)
 
     spec = ctx.spec
     k_out = spec.k_act + spec.k_w
@@ -336,14 +355,6 @@ def blinded_conv2d(ctx: SlalomContext, p, x, stride: int = 1):
     w = p["w"]                                # (kh, kw, cin, cout)
     kh, kw, cin, cout = w.shape
     xcol, out_hw = extract_patches(x, kh, kw, stride)
-    if ctx.recorder is not None:
-        # record the raw (kh,kw,cin,cout) param leaf; the cache builder
-        # reorders it to im2col columns outside the trace
-        ctx.recorder.append({"kind": "conv", "w": w, "t": xcol.shape[0],
-                             "d_in": kh * kw * cin, "d_out": cout})
-        y = xcol.astype(jnp.float32) @ conv_weight_cols(w).astype(jnp.float32)
-        y = y + p["b"].astype(jnp.float32)
-        return y.reshape(out_hw + (cout,)).astype(x.dtype)
     y = blinded_dense(ctx, {"w": conv_weight_cols(w), "b": p["b"]}, xcol,
                       scanned=isinstance(w, jax.core.Tracer))
     return y.reshape(out_hw + (cout,))

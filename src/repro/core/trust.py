@@ -179,3 +179,79 @@ class EnclaveSim:
     def all_strategies(self, partition: int) -> Dict[str, StrategyCost]:
         return {m: self.runtime(m, partition)
                 for m in ("open", "enclave", "split", "slalom", "origami")}
+
+    # -- PlacementPlan pricing (core/plan.py, DESIGN.md §10) -----------------
+    def plan_runtime(self, plan) -> StrategyCost:
+        """Price an arbitrary PlacementPlan per-step.
+
+        Plans that are exactly a legacy prefix shape delegate to
+        ``runtime(mode, p)`` — bit-identical to the paper-calibrated
+        per-mode formulas. Mixed plans walk the steps: open → device
+        FLOPs (+ quantize/fold elementwise when verified-open); enclave →
+        SGX FLOPs (paging for >8MB fc weights); blinded linear → device
+        FLOPs + blind traffic + EPC elementwise. Non-linear enclave steps
+        are EPC-bandwidth-bound whenever the plan offloads anything (the
+        enclave is then a thin elementwise stage between device matmuls),
+        FLOPs-bound in a pure-enclave deployment — matching the legacy
+        enclave/slalom formulas at both endpoints.
+        """
+        from repro.core.plan import classify_legacy
+        legacy = classify_legacy(plan)
+        if legacy is not None:
+            mode, p_cut = legacy
+            cost = self.runtime(mode, p_cut)
+            return StrategyCost(plan.mode_label, cost.runtime_s,
+                                cost.enclave_resident_mb, cost.recovery_s,
+                                cost.breakdown)
+        p = self.p
+        L = self.layers
+        assert len(L) == plan.n_layers, (len(L), plan.n_layers)
+        epc_bound = plan.has_offload
+        t_enclave = t_device = t_blind = t_page = 0.0
+        for st, l in zip(plan.steps, L):
+            if st.placement == "blinded" and l.linear:
+                t_device += l.flops / self.device_flops
+                t_blind += 2 * l.out_bytes / p.blind_bytes_per_s
+                t_enclave += 2 * l.out_bytes / p.enclave_mem_bytes_per_s
+            elif st.placement == "enclave" or st.placement == "blinded":
+                # enclave-resident (incl. non-linear layers in a blinded
+                # tier — pools can't blind)
+                if epc_bound and not l.linear:
+                    t_enclave += l.out_bytes / p.enclave_mem_bytes_per_s
+                else:
+                    t_enclave += l.flops / p.sgx_flops
+                    if (l.name.startswith(("fc", "logits"))
+                            and l.param_bytes > 8 * 2 ** 20):
+                        t_page += l.param_bytes / p.paging_bytes_per_s
+            else:                                   # open
+                t_device += l.flops / self.device_flops
+                if st.verified_open:
+                    # quantize + Freivalds fold are enclave elementwise
+                    t_enclave += 2 * l.out_bytes / p.enclave_mem_bytes_per_s
+        resident = self.plan_residency(plan)
+        total = t_enclave + t_device + t_blind + t_page
+        return StrategyCost(
+            name=plan.mode_label, runtime_s=total,
+            enclave_resident_mb=resident / 2 ** 20,
+            recovery_s=self.recovery_s(resident),
+            breakdown={"enclave": t_enclave, "device": t_device,
+                       "blind": t_blind, "paging": t_page})
+
+    def plan_residency(self, plan) -> float:
+        """EPC residency of a mixed plan: enclave-placed weights (fc
+        lazy-loads in 8MB slices), the blinding-factor buffer + widest
+        offloaded feature when anything offloads, working activations and
+        runtime overhead."""
+        p = self.p
+        L = self.layers
+        act = max(l.out_bytes for l in L)
+        total = act + p.runtime_overhead_mb * 2 ** 20
+        enclave_params = sum(
+            min(l.param_bytes, 8 * 2 ** 20)
+            if l.name.startswith(("fc", "logits")) else l.param_bytes
+            for st, l in zip(plan.steps, L) if st.placement == "enclave")
+        total += enclave_params
+        offl = [l.out_bytes for st, l in zip(plan.steps, L) if st.offloaded]
+        if offl:
+            total += max(offl) + 12 * 2 ** 20
+        return total

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.core import plan as PL
 from repro.core.integrity import IntegrityPolicy
 from repro.models import model as M
 from repro.privacy.data import make_batch
@@ -44,6 +45,40 @@ def _integrity_args(args):
             return None
         return DishonestDevice(FaultSpec(args.inject))
     return policy, fault
+
+
+def _placement_for(cfg, args):
+    """Resolve --plan to a PlacementPlan (None = legacy --mode path).
+
+    Accepted specs: a legacy mode name ("origami", "slalom", ...); "mixed"
+    (blind the first half of tier-1, enclave-reside the rest — a plan no
+    mode string can express); "vopen" (origami prefix + verified-open
+    tier-2 linear layers under the --verify policy); or an explicit
+    per-layer string over the ``oebv`` alphabet (core/plan.py).
+    """
+    spec = args.plan
+    if spec is None:
+        return None
+    policy, _ = _integrity_args(args)
+    verify = policy or IntegrityPolicy.full(1)
+    if spec in PL.LEGACY_MODES:
+        return PL.compile_mode(cfg, spec)
+    if spec == "mixed":
+        return PL.make_mixed(cfg)
+    if spec == "vopen":
+        return PL.make_vopen(cfg, verify=verify)
+    return PL.from_string(cfg, spec, verify=verify)
+
+
+def _print_plans(names, get) -> None:
+    """--plan print: the compiled legacy plans + digests per model."""
+    for name in names:
+        cfg = get(name)
+        print(f"[plan] {name} ({cfg.family}, "
+              f"{PL.num_blocks(cfg)} blocks, tier1="
+              f"{cfg.origami.tier1_layers}):")
+        for mode in PL.LEGACY_MODES:
+            print(f"  {mode:8s} {PL.compile_mode(cfg, mode).summary()}")
 
 
 def _sealed_requests(cfg, n, rid0=0, rng=None):
@@ -77,8 +112,10 @@ def run_engine(args) -> None:
         params = M.init_params(cfg, jax.random.PRNGKey(i))
         entry = engine.register_model(name, cfg, params, mode=args.mode,
                                       privacy_floor=args.privacy_floor,
-                                      integrity=policy, fault=fault())
+                                      integrity=policy, fault=fault(),
+                                      placement=_placement_for(cfg, args))
         print(f"[engine] registered {entry.plan.summary()} "
+              f"plan={entry.placement.summary()} "
               f"quote={entry.quote.measurement[:12]}…")
         legacy[name] = PrivateInferenceServer(cfg, params, mode=args.mode,
                                               max_batch=args.batch)
@@ -180,6 +217,12 @@ def main():
     ap.add_argument("--models", default="vgg16,vgg19",
                     help="comma list for --engine (mixed traffic)")
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--plan", default=None,
+                    help="per-layer PlacementPlan (core/plan.py): 'print' "
+                         "lists compiled plans; a legacy mode name; "
+                         "'mixed' (enclave/blinded tier-1); 'vopen' "
+                         "(verified-open tier-2); or an explicit oebv "
+                         "per-layer string. Overrides --mode.")
     ap.add_argument("--privacy-floor", type=float, default=None,
                     help="SSIM leakage floor for the partition planner "
                          "(default: use the config's declared partition)")
@@ -200,6 +243,12 @@ def main():
 
     if args.requests is None:
         args.requests = 32 if args.engine else 16
+    if args.plan == "print":
+        get = get_smoke if args.smoke else get_config
+        names = ([m.strip() for m in args.models.split(",") if m.strip()]
+                 if args.engine else [args.model])
+        _print_plans(names, get)
+        return
     if args.engine:
         run_engine(args)
         return
@@ -209,7 +258,8 @@ def main():
     policy, fault = _integrity_args(args)
     server = PrivateInferenceServer(cfg, params, mode=args.mode,
                                     max_batch=args.batch,
-                                    integrity=policy, fault=fault())
+                                    integrity=policy, fault=fault(),
+                                    plan=_placement_for(cfg, args))
 
     # client: attest, then send sealed requests
     quote = server.attest()

@@ -208,6 +208,44 @@ def apply_range(params, x, cfg: ModelConfig, lo: int, hi: int, *,
     raise ValueError(fam)
 
 
+def layer_program(cfg: ModelConfig):
+    """(prologue, segment, epilogue) — the LM/audio/vlm layer iterator the
+    plan interpreter walks (core/plan.py:program_for).
+
+    Audio plans range over the *encoder* blocks (tier-1 ⊆ encoder — the
+    private input is the audio, DESIGN.md §5); the decoder runs in the
+    epilogue, always in the clear like the LM head."""
+    if cfg.family == "audio":
+        def prologue(params, batch):
+            frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+            x = frames + L.sinusoidal_positions(
+                frames.shape[1], cfg.d_model).astype(frames.dtype)
+            return x, None
+
+        def segment(params, x, lo, hi, memory=None):
+            x, _ = apply_range(params, x, cfg, lo, hi)
+            return x
+
+        def epilogue(params, x, batch, memory=None):
+            mem = L.apply_norm(params["enc_norm"], x, cfg.norm)
+            return forward_audio_decoder(params, batch, mem, cfg)
+
+        return prologue, segment, epilogue
+
+    def prologue(params, batch):
+        memory = batch.get("patches") if cfg.family == "vlm" else None
+        return embed_tokens(params, batch["tokens"], cfg), memory
+
+    def segment(params, x, lo, hi, memory=None):
+        x, _ = apply_range(params, x, cfg, lo, hi, memory=memory)
+        return x
+
+    def epilogue(params, x, batch, memory=None):
+        return head(params, x, cfg)
+
+    return prologue, segment, epilogue
+
+
 # ----------------------------------------------------------------------------
 # forward (teacher-forced) per family
 # ----------------------------------------------------------------------------

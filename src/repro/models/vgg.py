@@ -24,7 +24,12 @@ def _parse(spec: str) -> Tuple[str, int]:
     return spec, 0
 
 
-def _feature_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+def layer_kind(cfg: ModelConfig, i: int) -> Tuple[str, int]:
+    """(kind, width) of layer ``i`` — "conv" | "pool" | "fc" | "logits"."""
+    return _parse(cfg.cnn_layers[i])
+
+
+def feature_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
     """Shape (H, W, C) entering each layer."""
     h = w = cfg.image_size
     c = cfg.image_channels
@@ -94,6 +99,52 @@ def apply_layer_range(params, x, cfg: ModelConfig, lo: int, hi: int):
     for i in range(lo, hi):
         x = apply_layer(params, x, cfg, i)
     return x
+
+
+def layer_program(cfg: ModelConfig):
+    """(prologue, segment, epilogue) — the CNN layer iterator the plan
+    interpreter walks (core/plan.py:program_for). The logits ARE the last
+    layer's output, so the epilogue is the identity."""
+    def prologue(params, batch):
+        return batch["images"], None
+
+    def segment(params, x, lo, hi, memory=None):
+        return apply_layer_range(params, x, cfg, lo, hi)
+
+    def epilogue(params, x, batch, memory=None):
+        return x
+
+    return prologue, segment, epilogue
+
+
+def blinded_op_records(params, cfg: ModelConfig, layer_ids, batch_size: int):
+    """Static blinded-op records for BlindedLayerCache.from_records —
+    derived from the config's layer specs alone, no eval_shape re-trace.
+
+    One record per linear layer in ``layer_ids`` (plan order): conv layers
+    contribute their im2col shape (t = B·H·W rows since tier-1 convs are
+    stride-1 SAME, d_in = kh·kw·cin) with the RAW (kh, kw, cin, cout)
+    weight leaf (the cache builder reorders it to im2col columns outside
+    any trace); fc/logits layers contribute (t = B, d_in, d_out).
+    """
+    shapes = feature_shapes(cfg)
+    records = []
+    for i in layer_ids:
+        kind, _ = _parse(cfg.cnn_layers[i])
+        w = params[f"l{i}"]["w"]
+        if kind == "conv":
+            h, wd, _c = shapes[i]
+            kh, kw, cin, cout = w.shape
+            records.append({"kind": "conv", "w": w,
+                            "t": batch_size * h * wd,
+                            "d_in": kh * kw * cin, "d_out": cout})
+        elif kind in ("fc", "logits"):
+            d_in, d_out = w.shape
+            records.append({"kind": "dense", "w": w, "t": batch_size,
+                            "d_in": d_in, "d_out": d_out})
+        else:
+            raise ValueError(f"layer {i} ({kind}) has no blinded op")
+    return records
 
 
 def vgg_forward(params, images, cfg: ModelConfig,

@@ -38,6 +38,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.attestation import Quote, measure_enclave
 from repro.core.origami import OrigamiExecutor
+from repro.core.plan import PlacementPlan
 from repro.core.planner import PartitionPlan, PartitionPlanner
 from repro.runtime.sessions import SessionPool
 from repro.runtime.straggler import StepWatchdog
@@ -74,7 +75,8 @@ class _ModelEntry:
     executor: OrigamiExecutor
     quote: Quote
     pool: SessionPool
-    plan: PartitionPlan
+    plan: PartitionPlan                  # prefix-decision provenance
+    placement: PlacementPlan = None      # the per-layer IR actually executed
     input_key: str = "images"
     input_dtype: Optional[str] = None    # cast unsealed floats (LM tokens)
     # integrity bookkeeping (batcher thread only — no locking needed)
@@ -167,17 +169,31 @@ class EngineStats:
             }
         out["sessions"] = {name: e.pool.stats()
                            for name, e in engine.models.items()}
+        # offload counters read the *blinded*-trace snapshot so a recovery
+        # (trusted) trace can never pollute them; trusted_matmuls reads the
+        # trusted-trace snapshot for the same reason
         out["matmuls"] = {
             name: {"mode": e.executor.mode,
-                   "device": e.executor.telemetry.device_matmuls,
-                   "enclave": e.executor.telemetry.enclave_matmuls}
+                   "plan": e.executor.plan.digest[:12],
+                   "device": e.executor.telemetry_blinded.device_matmuls,
+                   "enclave": e.executor.telemetry_blinded.enclave_matmuls}
             for name, e in engine.models.items()}
+        # the effective policy is the executor-wide one OR the plan's
+        # per-step policies (a vopen plan verifies with integrity=None —
+        # reporting "off" for it would contradict the nonzero
+        # verify_checks above)
         out["models"] = {
-            name: {"policy": e.executor.integrity.mode,
-                   "verify_ops": e.executor.telemetry.verify_ops,
-                   "verify_flops": e.executor.telemetry.verify_flops,
-                   "fold_matmuls": e.executor.telemetry.fold_matmuls,
-                   "trusted_matmuls": e.executor.telemetry.trusted_matmuls,
+            name: {"policy": (e.executor.integrity.mode
+                              if e.executor.integrity.enabled else
+                              "per-step" if e.executor.plan.has_step_policies
+                              else "off"),
+                   "plan": e.executor.plan.digest[:12],
+                   "placements": e.executor.plan.placement_string,
+                   "verify_ops": e.executor.telemetry_blinded.verify_ops,
+                   "verify_flops": e.executor.telemetry_blinded.verify_flops,
+                   "fold_matmuls": e.executor.telemetry_blinded.fold_matmuls,
+                   "trusted_matmuls":
+                       e.executor.telemetry_trusted.trusted_matmuls,
                    "integrity_failures": e.integrity_failures,
                    "quarantined": e.quarantined}
             for name, e in engine.models.items()}
@@ -214,17 +230,32 @@ class ServingEngine:
                        privacy_floor: Optional[float] = None,
                        planner: Optional[PartitionPlanner] = None,
                        leakage: Optional[Dict[int, float]] = None,
-                       integrity=None, fault=None) -> _ModelEntry:
+                       integrity=None, fault=None,
+                       placement: Optional[PlacementPlan] = None
+                       ) -> _ModelEntry:
         """Build an executor for ``name`` and admit it to the registry.
 
-        The partition point comes from, in order: the explicit ``partition``
+        ``placement``: an explicit per-layer PlacementPlan (core/plan.py)
+        — overrides the mode/partition path entirely. Otherwise the
+        partition point comes from, in order: the explicit ``partition``
         argument, the cost-model planner (when ``privacy_floor`` or
         ``planner`` is given), or the config's declared
-        ``origami.tier1_layers``. ``integrity``/``fault``: Freivalds
-        verification policy and (for tests/chaos drills) a dishonest-device
-        injector, forwarded to the executor (core/integrity.py,
-        runtime/faults.py).
+        ``origami.tier1_layers``, and is compiled to a prefix plan.
+        ``integrity``/``fault``: Freivalds verification policy and (for
+        tests/chaos drills) a dishonest-device injector, forwarded to the
+        executor (core/integrity.py, runtime/faults.py).
         """
+        if placement is not None:
+            plan = PartitionPlan(cfg.name, placement.mode_label,
+                                 placement.boundary, "explicit",
+                                 None, {}, {}, ())
+            executor = OrigamiExecutor(cfg, params, impl=impl,
+                                       precompute=precompute,
+                                       integrity=integrity, fault=fault,
+                                       plan=placement)
+            return self.register_executor(name, executor,
+                                          input_key=input_key,
+                                          input_dtype=input_dtype, plan=plan)
         if planner is None and privacy_floor is not None:
             planner = PartitionPlanner(privacy_floor=privacy_floor)
         if planner is not None or partition is not None:
@@ -254,10 +285,12 @@ class ServingEngine:
         entry = _ModelEntry(
             name=name, cfg=executor.cfg, executor=executor,
             quote=measure_enclave(executor.cfg, executor.params,
-                                  executor.partition),
+                                  executor.partition,
+                                  plan_digest=executor.plan.digest),
             pool=pool or SessionPool(executor,
                                      depth=self.cfg.session_pool_depth),
-            plan=plan, input_key=input_key, input_dtype=input_dtype)
+            plan=plan, placement=executor.plan,
+            input_key=input_key, input_dtype=input_dtype)
         with self._lock:
             self.models[name] = entry
         return entry

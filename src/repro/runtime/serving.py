@@ -218,13 +218,16 @@ class PrivateInferenceServer:
     def __init__(self, cfg: ModelConfig, params, *, mode: str = "origami",
                  max_batch: int = 8, input_key: str = "images",
                  impl: str = "fused", precompute: bool = True,
-                 integrity=None, fault=None):
+                 integrity=None, fault=None, plan=None):
+        """``plan``: an explicit core/plan.PlacementPlan; when omitted the
+        legacy ``mode`` kwarg compiles one (OrigamiExecutor compat)."""
         self.cfg = cfg
         self.executor = OrigamiExecutor(cfg, params, mode=mode, impl=impl,
                                         precompute=precompute,
-                                        integrity=integrity, fault=fault)
-        self.quote = measure_enclave(cfg, params,
-                                     self.executor.partition)
+                                        integrity=integrity, fault=fault,
+                                        plan=plan)
+        self.quote = measure_enclave(cfg, params, self.executor.partition,
+                                     plan_digest=self.executor.plan.digest)
         self.max_batch = max_batch
         self.input_key = input_key
         self.watchdog = StepWatchdog()

@@ -85,7 +85,9 @@ class SessionPool:
         return getattr(self.executor, "cache", None) if self.executor else None
 
     def _caches(self):
-        """Every layer cache the executor has built — one per batch shape.
+        """Every layer cache the executor has built — keyed by
+        (plan digest, batch shape) since PR 4, so a re-planned executor
+        never aliases another plan's prefetch ring.
 
         The executor swaps ``cache`` per input shape ((model, shape)
         buckets each get their own), so prefetching only into the current
