@@ -1,0 +1,114 @@
+"""Sharded-offload suite (BENCH_offload.json): wall time vs. pool width.
+
+Measures the offloaded field matmul through the multi-device plane
+(parallel/offload_sharding.py) over 1/2/4 simulated devices, rows vs.
+additive shares, and straggler hedging on vs. off:
+
+- **scaling**: each simulated slot models a fixed-throughput accelerator
+  (``sim_gflops``: the slot sleeps out its shard's modeled compute time, on
+  top of the real CPU matmul), so the measured wall time is the modeled
+  multi-device wall clock — rows sharding must DECREASE from 1 -> 2
+  devices (the acceptance bar), while shares replicate the full matmul per
+  device (the non-collusion guarantee costs n× work, documented in
+  DESIGN.md §11) and hold roughly flat.
+- **hedging**: one slot is a chronic straggler (large fixed
+  ``sim_delay_s``); with hedging on, its shard is duplicated to the fast
+  spare once the StepWatchdog deadline passes and the first verified
+  result wins — p50 wall time must beat the hedging-off run.
+
+Shard-local Freivalds checks stay ON throughout (they are structural to
+the plane), so every number includes verification cost.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+# modeled accelerator throughput: small enough that the modeled compute
+# (the slot's sleep) dominates the harness's real CPU matmul at the bench
+# shape ~10x — the CI box has 2 cores, so real compute cannot itself scale
+# past 2 threads and must not pollute the modeled wall clocks
+SIM_GFLOPS = 0.08
+SHAPE = (256, 128, 128)                     # (t, d_in, d_out)
+ITERS = 8
+
+
+def _operands(t: int, d_in: int, d_out: int):
+    from repro.core.blinding import blinding_stream
+    key = jax.random.PRNGKey(0)
+    x = blinding_stream(jax.random.fold_in(key, 1), (t, d_in))
+    w = blinding_stream(jax.random.fold_in(key, 2), (d_in, d_out))
+    return x, w
+
+
+def _time_plane(plane, x, w, iters: int = ITERS) -> float:
+    """Median wall seconds of one sharded offloaded matmul."""
+    laps = []
+    for i in range(iters):
+        key = jax.random.PRNGKey(100 + i)
+        t0 = time.perf_counter()
+        y = plane.matmul(x, w, session_key=key, op_index=0)
+        jax.block_until_ready(y)
+        laps.append(time.perf_counter() - t0)
+    return float(np.median(laps))
+
+
+def run_suite(emit, iters: int = ITERS) -> Dict:
+    from repro.parallel.offload_sharding import OffloadPlane
+    from repro.runtime.devices import DevicePool
+
+    t, d_in, d_out = SHAPE
+    x, w = _operands(t, d_in, d_out)
+    results: Dict[str, Dict] = {"shape": {"t": t, "d_in": d_in,
+                                          "d_out": d_out},
+                                "sim_gflops": SIM_GFLOPS,
+                                "scaling": {}, "hedging": {}}
+
+    # -- scaling: 1/2/4 devices × rows/shares ------------------------------
+    base_us = {}
+    for mode in ("rows", "shares"):
+        for n in (1, 2, 4):
+            pool = DevicePool(n, sim_gflops=SIM_GFLOPS)
+            plane = OffloadPlane(pool, mode=mode, hedging=False,
+                                 matmul_impl="ref")
+            # warm the jit caches off the clock
+            jax.block_until_ready(
+                plane.matmul(x, w, session_key=jax.random.PRNGKey(9),
+                             op_index=0))
+            us = _time_plane(plane, x, w, iters) * 1e6
+            pool.close()
+            base_us[(mode, n)] = us
+            speed = base_us[(mode, 1)] / us
+            emit(f"offload_{mode}_{n}dev", us, f"x{speed:.2f}_vs_1dev")
+            results["scaling"][f"{mode}_{n}dev"] = {
+                "us": round(us, 1), "speedup_vs_1dev": round(speed, 3)}
+    results["scaling"]["rows_speedup_1to2"] = round(
+        base_us[("rows", 1)] / base_us[("rows", 2)], 3)
+
+    # -- hedging: one chronic straggler ------------------------------------
+    straggle = 12 * base_us[("rows", 2)] / 2 / 1e6   # ~12x a fair shard
+    for hedging in (False, True):
+        pool = DevicePool(2, sim_gflops=SIM_GFLOPS,
+                          sim_delay_s={1: straggle})
+        plane = OffloadPlane(pool, mode="rows", hedging=hedging,
+                             matmul_impl="ref")
+        jax.block_until_ready(
+            plane.matmul(x, w, session_key=jax.random.PRNGKey(9),
+                         op_index=0))
+        us = _time_plane(plane, x, w, iters) * 1e6
+        tag = "on" if hedging else "off"
+        emit(f"offload_hedge_{tag}", us,
+             f"hedges={plane.totals.hedges}")
+        results["hedging"][tag] = {"us": round(us, 1),
+                                   "hedges": plane.totals.hedges}
+        pool.close()
+    results["hedging"]["speedup"] = round(
+        results["hedging"]["off"]["us"] / results["hedging"]["on"]["us"], 3)
+    return results
+
+
+def run(emit):
+    run_suite(emit, iters=4)

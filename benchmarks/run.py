@@ -57,6 +57,13 @@ def run_plans_suite(out_path: pathlib.Path) -> None:
     print(f"wrote {out_path}", file=sys.stderr)
 
 
+def run_offload_suite(out_path: pathlib.Path) -> None:
+    from benchmarks import offload_bench
+    results = offload_bench.run_suite(emit)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -64,7 +71,7 @@ def main() -> None:
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--suite",
                     choices=["all", "blinding", "serving", "integrity",
-                             "plans"],
+                             "plans", "offload"],
                     default="all",
                     help="'blinding' runs the fused/precompute matrix into "
                          "BENCH_blinding.json; 'serving' sweeps the engine "
@@ -73,7 +80,10 @@ def main() -> None:
                          "and fault detection rates into "
                          "BENCH_integrity.json; 'plans' compares prefix vs "
                          "mixed PlacementPlans (latency/leakage) into "
-                         "BENCH_plans.json")
+                         "BENCH_plans.json; 'offload' scales the sharded "
+                         "multi-device plane over 1/2/4 simulated devices "
+                         "(rows vs shares, hedging on/off) into "
+                         "BENCH_offload.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent
@@ -89,13 +99,16 @@ def main() -> None:
     if args.suite == "plans":
         run_plans_suite(root / "BENCH_plans.json")
         return
+    if args.suite == "offload":
+        run_offload_suite(root / "BENCH_offload.json")
+        return
 
     from benchmarks import (blinding_micro, exec_micro, integrity_bench,
-                            paper_fig2_4_11, paper_fig9_10, paper_table1_2,
-                            plans_bench)
+                            offload_bench, paper_fig2_4_11, paper_fig9_10,
+                            paper_table1_2, plans_bench)
     suites = [paper_fig9_10.run, paper_table1_2.run, paper_fig2_4_11.run,
               blinding_micro.run, exec_micro.run, integrity_bench.run,
-              plans_bench.run]
+              plans_bench.run, offload_bench.run]
     if args.full:
         from benchmarks import paper_fig8
         suites.append(lambda e: paper_fig8.run(e, steps=150))

@@ -23,3 +23,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --requests 8 --plan mixed
+# sharded-offload smoke: a mixed plan served over 2 simulated devices
+# with device 1 dishonest — the drill fails unless every corruption is
+# caught by the SHARD-local Freivalds check, only the bad shard is
+# re-dispatched, quarantine is per-DEVICE (device 0 keeps serving
+# blinded offload; the model is never quarantined), and responses stay
+# bit-exact vs the single-device legacy server (DESIGN.md §11)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --requests 8 --plan mixed --devices 2 --shard rows --inject bit_flip

@@ -47,6 +47,7 @@ from repro.kernels.limb_matmul.ops import field_fold
 VERIFY_DOMAIN = 0x5ECC
 _SUB_FOLD = 0      # -> fold-vector draw
 _SUB_DECIDE = 1    # -> sampled-mode check/skip decision
+_SUB_SHARD = 2     # -> per-shard fold-vector draws (offload sharding)
 
 MODES = ("off", "sampled", "full")
 
@@ -100,6 +101,19 @@ def fold_stream(session_key: jax.Array, layer_id: int, step: int,
     derivation in the precompute cache and the on-the-fly trace, so cached
     and live verification are bit-identical."""
     key = jax.random.fold_in(op_key(session_key, layer_id, step), _SUB_FOLD)
+    return B.blinding_stream(key, (d_out, k))
+
+
+def shard_fold_stream(session_key: jax.Array, layer_id: int, step: int,
+                      shard: int, d_out: int, k: int) -> jax.Array:
+    """Per-shard fold vectors for the multi-device plane
+    (parallel/offload_sharding.py): each shard of one offloaded matmul is
+    checked with its OWN (d_out, k) draw, so a device can learn nothing
+    about another shard's check from its retry/hedge traffic. Same
+    derivation in core/precompute.py's prefetch ring and the live path —
+    cached and live shard verification are bit-identical."""
+    key = jax.random.fold_in(jax.random.fold_in(
+        op_key(session_key, layer_id, step), _SUB_SHARD), shard)
     return B.blinding_stream(key, (d_out, k))
 
 

@@ -53,6 +53,7 @@ class OrigamiResult:
     integrity: IG.IntegrityReport = dfield(
         default_factory=IG.IntegrityReport.empty)
     trusted: bool = False               # enclave-recompute trace (no device)
+    sharding: Optional[Any] = None      # offload_sharding.ShardReport
 
 
 class OrigamiExecutor:
@@ -64,14 +65,22 @@ class OrigamiExecutor:
                  impl: str = "fused", precompute: bool = False,
                  integrity: Optional[IG.IntegrityPolicy] = None,
                  fault: Optional[Any] = None,
-                 plan: Optional[PL.PlacementPlan] = None):
+                 plan: Optional[PL.PlacementPlan] = None,
+                 devices: Optional[Any] = None, shard: str = "rows",
+                 hedging: bool = True):
         """``plan``: an explicit PlacementPlan; when omitted, the legacy
         ``mode``/``partition`` kwargs compile one (``plan.compile_mode``).
         ``integrity``: Freivalds verification policy inherited by blinded
         steps without their own (core/integrity.py; default off).
         ``fault``: a runtime/faults.DishonestDevice injected under the
-        device matmul. All are static parts of the jit trace — pick them
-        at construction."""
+        device matmul (single-device path; a pool carries per-slot
+        injectors instead). ``devices``: a runtime/devices.DevicePool —
+        attaches a sharded multi-device offload plane
+        (parallel/offload_sharding.py) with default shard ``shard``
+        ("rows" | "shares") and straggler ``hedging``; the plane's
+        host-side retry/health control flow makes the executor run its
+        trace eagerly (bit-identical to the jitted trace). All are static
+        — pick them at construction."""
         assert impl in ("fused", "unfused"), impl
         if plan is None:
             plan = PL.compile_mode(cfg, mode, partition)
@@ -87,6 +96,17 @@ class OrigamiExecutor:
         self.precompute = precompute
         self.integrity = integrity or IG.IntegrityPolicy.off()
         self.fault = fault
+        self.plane = None
+        self._plane_live = False
+        if devices is not None:
+            from repro.parallel.offload_sharding import OffloadPlane
+            self.plane = OffloadPlane(devices, mode=shard, hedging=hedging)
+            # the plane only ever fires on per-op-addressable offloaded
+            # steps (scanned families and offload-free plans have none) —
+            # keep jit for executors whose pool can never shard anything,
+            # instead of paying op-by-op eager dispatch for zero benefit
+            self._plane_live = (PL.linear_layers(cfg) is not None
+                                and plan.has_offload)
         self.cache: Optional[BlindedLayerCache] = None
         self._caches: Dict[Any, BlindedLayerCache] = {}  # (digest, shape)
         self._cache_key = None
@@ -132,7 +152,8 @@ class OrigamiExecutor:
             session_key, self.spec, telemetry=tele,
             impl=self.impl, factors=factors,
             integrity=IG.IntegrityPolicy.off(),  # set per plan segment
-            fault=None if trusted else self.fault, trusted=trusted)
+            fault=None if trusted else self.fault, trusted=trusted,
+            plane=self.plane if self._plane_live and not trusted else None)
         logits, boundary = self._run(batch, ctx)
         if ctx.integrity_log:
             rep = tuple(jnp.stack([entry[i] for entry in ctx.integrity_log])
@@ -162,7 +183,8 @@ class OrigamiExecutor:
                           else self.integrity)
                 with ExitStack() as stack:
                     stack.enter_context(ctx.segment_overrides(
-                        policy, unblinded=(seg.regime == "verified")))
+                        policy, unblinded=(seg.regime == "verified"),
+                        shard=seg.shard))
                     stack.enter_context(L.dense_impl(
                         functools.partial(SL.blinded_dense, ctx)))
                     if prog.blind_convs:
@@ -198,6 +220,11 @@ class OrigamiExecutor:
                              else self.integrity)
         self.cache = BlindedLayerCache.from_records(records, self.spec,
                                                     integrity=self.integrity)
+        if self._plane_live:
+            # prefetch per-shard fold vectors alongside (r, u): the
+            # SessionPool ring then keeps shard-local verification material
+            # off the request path too
+            self.cache.shards = self.plane.n_shards
         shapes = tuple(sorted(
             (k, tuple(jnp.shape(v))) for k, v in batch.items()))
         self._cache_key = (self.plan.digest, shapes)
@@ -240,12 +267,21 @@ class OrigamiExecutor:
         offloaded path — the integrity layer's recovery primitive."""
         key = (session_key if session_key is not None
                else jax.random.PRNGKey(0))
+        shard_report = None
         if trusted:
             logits, boundary, rep = self._jitted_trusted(batch, key, None)
         else:
             factors = self._session_factors(batch, key)
-            fn = self._jitted if jit else self._traced
+            # the plane's host-side dispatch (retry, hedging, per-device
+            # health) cannot live inside a jit trace — run eagerly, which
+            # the kernels keep bit-identical to the jitted trace
+            fn = (self._jitted if jit and not self._plane_live
+                  else self._traced)
+            if self._plane_live:
+                self.plane.begin_infer()
             logits, boundary, rep = fn(batch, key, factors)
+            if self._plane_live:
+                shard_report = self.plane.report
         # the jit cache may skip re-tracing; point the public snapshot at
         # the last trace of THIS kind so a recovery trace never masquerades
         # as an offload trace (or vice versa)
@@ -254,7 +290,7 @@ class OrigamiExecutor:
         return OrigamiResult(logits=logits, boundary=boundary,
                              telemetry=self.telemetry,
                              integrity=IG.IntegrityReport(*rep),
-                             trusted=trusted)
+                             trusted=trusted, sharding=shard_report)
 
     def reference(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Plain fp forward — the correctness oracle for all plans."""

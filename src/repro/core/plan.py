@@ -50,6 +50,7 @@ from repro.core import integrity as IG
 
 PLACEMENTS = ("open", "enclave", "blinded")
 LEGACY_MODES = ("open", "enclave", "split", "slalom", "origami")
+SHARD_MODES = ("rows", "shares")
 
 # placement-string alphabet (``from_string`` / ``placement_string``):
 # o = open, e = enclave, b = blinded, v = verified-open (open + Freivalds)
@@ -63,6 +64,28 @@ def num_blocks(cfg: ModelConfig) -> int:
 
 
 @dataclass(frozen=True)
+class ShardPolicy:
+    """Per-step multi-device offload policy (parallel/offload_sharding.py).
+
+    ``mode``: "rows" (row-shard the blinded operand over the batch/token
+    dim) | "shares" (additive secret shares — no single device holds the
+    full blinded tensor). ``devices``: optional device-group restriction —
+    slot indices of the executor's DevicePool this step may dispatch to
+    (``None`` = the whole pool). ``None`` on a step inherits the
+    executor-wide plane default; a ShardPolicy on a step without a plane
+    is inert (the plan stays executable on a single device)."""
+    mode: str = "rows"
+    devices: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        assert self.mode in SHARD_MODES, self.mode
+
+
+def _shard_key(s: Optional[ShardPolicy]):
+    return None if s is None else (s.mode, s.devices)
+
+
+@dataclass(frozen=True)
 class LayerStep:
     """One per-layer placement decision.
 
@@ -72,11 +95,14 @@ class LayerStep:
     that step out of an executor-wide policy. ``precompute_slot``: index
     of this step's blinded op in the BlindedLayerCache (``None``:
     uncacheable — non-linear layer, non-offloaded, or scanned family).
+    ``shard``: per-step multi-device ShardPolicy (``None`` inherits the
+    executor's offload plane default).
     """
     layer_id: int
     placement: str
     integrity: Optional[IG.IntegrityPolicy] = None
     precompute_slot: Optional[int] = None
+    shard: Optional[ShardPolicy] = None
 
     def __post_init__(self):
         assert self.placement in PLACEMENTS, self.placement
@@ -98,12 +124,14 @@ class Segment:
 
     ``regime``: "plain" (fp, no device protocol — open or enclave),
     "blinded" (Slalom protocol), "verified" (unblinded offload +
-    Freivalds). ``policy`` is the per-segment IntegrityPolicy override
-    (``None`` = inherit the executor's)."""
+    Freivalds). ``policy``/``shard`` are the per-segment
+    IntegrityPolicy/ShardPolicy overrides (``None`` = inherit the
+    executor's)."""
     lo: int
     hi: int
     regime: str
     policy: Optional[IG.IntegrityPolicy] = None
+    shard: Optional[ShardPolicy] = None
 
 
 def _policy_key(p: Optional[IG.IntegrityPolicy]):
@@ -140,12 +168,14 @@ class PlacementPlan:
         segs = []
         for i, st in enumerate(self.steps):
             regime, policy = self._regime(st)
+            shard = st.shard if regime != "plain" else None
             if (segs and segs[-1].regime == regime
                     and _policy_key(segs[-1].policy) == _policy_key(policy)
+                    and _shard_key(segs[-1].shard) == _shard_key(shard)
                     and i != self.boundary):
-                segs[-1] = Segment(segs[-1].lo, i + 1, regime, policy)
+                segs[-1] = Segment(segs[-1].lo, i + 1, regime, policy, shard)
             else:
-                segs.append(Segment(i, i + 1, regime, policy))
+                segs.append(Segment(i, i + 1, regime, policy, shard))
         return tuple(segs)
 
     @cached_property
@@ -156,6 +186,11 @@ class PlacementPlan:
             "steps": [(s.layer_id, s.placement, _policy_key(s.integrity))
                       for s in self.steps],
         }
+        if any(s.shard is not None for s in self.steps):
+            # appended only when present so shard-free plans keep their
+            # pre-sharding digests (cache keys, attested measurements)
+            body["shards"] = [(s.layer_id, _shard_key(s.shard))
+                              for s in self.steps if s.shard is not None]
         return hashlib.sha256(
             json.dumps(body, sort_keys=True).encode()).hexdigest()
 
@@ -248,17 +283,20 @@ def _assign_slots(cfg: ModelConfig,
         ps = None
         if linear is not None and st.offloaded and linear[st.layer_id]:
             ps, slot = slot, slot + 1
-        out.append(LayerStep(st.layer_id, st.placement, st.integrity, ps))
+        out.append(LayerStep(st.layer_id, st.placement, st.integrity, ps,
+                             st.shard))
     return tuple(out)
 
 
 def make_plan(cfg: ModelConfig, placements: Sequence[str], *,
               integrity: Optional[Dict[int, IG.IntegrityPolicy]] = None,
               boundary: Optional[int] = None,
+              shard: Optional[Dict[int, ShardPolicy]] = None,
               label: str = "custom") -> PlacementPlan:
     """Build a plan from per-layer placement names.
 
-    ``integrity``: {layer_id: policy} per-step overrides. ``boundary``
+    ``integrity``: {layer_id: policy} per-step overrides. ``shard``:
+    {layer_id: ShardPolicy} per-step multi-device overrides. ``boundary``
     defaults to the start of the trailing open suffix — the deepest
     activation the plan actually reveals wholesale (0 for an all-open
     plan, n when the last layer is protected)."""
@@ -266,6 +304,7 @@ def make_plan(cfg: ModelConfig, placements: Sequence[str], *,
     placements = list(placements)
     assert len(placements) == n, (len(placements), n)
     integrity = integrity or {}
+    shard = shard or {}
     if linear_layers(cfg) is None and any(
             p is not None and p.enabled for p in integrity.values()):
         # scanned families (LM/audio/vlm) trace many runtime layers
@@ -284,7 +323,7 @@ def make_plan(cfg: ModelConfig, placements: Sequence[str], *,
         boundary = n
         while boundary > 0 and placements[boundary - 1] == "open":
             boundary -= 1
-    steps = [LayerStep(i, p, integrity.get(i))
+    steps = [LayerStep(i, p, integrity.get(i), shard=shard.get(i))
              for i, p in enumerate(placements)]
     return PlacementPlan(cfg.name, cfg.family, _assign_slots(cfg, steps),
                          boundary, label)

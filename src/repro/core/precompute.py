@@ -73,6 +73,12 @@ class BlindedLayerCache:
         self.layers = layers
         self.spec = spec
         self.integrity = integrity or IG.IntegrityPolicy.off()
+        # > 1 when the owning executor runs a multi-device offload plane
+        # (core/origami.py sets it to the plane's shard count): each factor
+        # set then also carries per-shard Freivalds fold vectors, so the
+        # SessionPool ring keeps shard-local verification material off the
+        # request path alongside (r, u)
+        self.shards = 1
         self.factor_matmuls = 0          # r@W_q matmuls issued off-path
         self.fold_matmuls = 0            # W_q@s fold matmuls issued off-path
         self._ready: Dict[Tuple[bytes, int], List[Dict[str, Any]]] = {}
@@ -141,6 +147,19 @@ class BlindedLayerCache:
                                             lyr.d_out, pol.k)
                 entry["ws"] = field_matmul(lyr.w_q, entry["s"])
                 self.fold_matmuls += 1
+            if self.shards > 1:
+                # per-shard fold vectors for the offload plane — shards are
+                # ALWAYS checked (k falls back to 1 with the policy off);
+                # derivation matches integrity.shard_fold_stream so cached
+                # and live shard verification are bit-identical
+                k = pol.k if pol.enabled else 1
+                folds = []
+                for j in range(self.shards):
+                    s_j = IG.shard_fold_stream(session_key, i, step, j,
+                                               lyr.d_out, k)
+                    folds.append((s_j, field_matmul(lyr.w_q, s_j)))
+                    self.fold_matmuls += 1
+                entry["shard_folds"] = folds
             factors.append(entry)
         return factors
 

@@ -52,7 +52,7 @@ from repro.core import integrity as IG
 from repro.kernels.blind.ref import quantize as quantize_act
 from repro.kernels.limb_matmul.ops import (encode_weight_planes, field_matmul,
                                            fused_blinded_matmul)
-from repro.kernels.limb_matmul.ref import from_signed, to_signed
+from repro.kernels.limb_matmul.ref import P, from_signed, to_signed
 
 # fault keys live in their own fold_in domain, disjoint from both the
 # blinding streams and the verify keys (core/integrity.py)
@@ -109,8 +109,12 @@ class SlalomContext:
     verification. ``unblinded``: verified-open offload (core/plan.py) —
     the device gets the quantized operand with a ZERO pad (no privacy) and
     the factor matmul vanishes (u = 0·W); verification still applies.
-    ``integrity``/``unblinded`` are per-plan-segment state: the plan
-    interpreter scopes them with ``segment_overrides`` while tracing.
+    ``plane``: a parallel/offload_sharding.OffloadPlane — when set, the
+    device field matmul of every per-op-addressable blinded op shards
+    across the plane's DevicePool (shard-local Freivalds, per-device
+    health); ``shard`` is the per-segment ShardPolicy override.
+    ``integrity``/``unblinded``/``shard`` are per-plan-segment state: the
+    plan interpreter scopes them with ``segment_overrides`` while tracing.
     """
     session_key: jax.Array
     spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
@@ -123,22 +127,27 @@ class SlalomContext:
     fault: Optional[Any] = None               # runtime/faults.DishonestDevice
     trusted: bool = False
     unblinded: bool = False
+    plane: Optional[Any] = None               # offload_sharding.OffloadPlane
+    shard: Optional[Any] = None               # plan.ShardPolicy override
     integrity_log: List[Any] = dfield(default_factory=list)
     _layer_counter: int = 0
 
     @contextmanager
     def segment_overrides(self, integrity: Optional[IG.IntegrityPolicy],
-                          unblinded: bool = False):
-        """Scope the effective verification policy / unblinded flag to one
-        plan segment (trace-time Python state, static under jit)."""
-        prev = self.integrity, self.unblinded
+                          unblinded: bool = False, shard: Optional[Any] = None):
+        """Scope the effective verification policy / unblinded flag /
+        shard policy to one plan segment (trace-time Python state, static
+        under jit)."""
+        prev = self.integrity, self.unblinded, self.shard
         if integrity is not None:
             self.integrity = integrity
         self.unblinded = unblinded
+        if shard is not None:
+            self.shard = shard
         try:
             yield self
         finally:
-            self.integrity, self.unblinded = prev
+            self.integrity, self.unblinded, self.shard = prev
 
     def next_layer_key(self) -> jax.Array:
         k = B.stream_key(self.session_key, self._layer_counter, self.step)
@@ -153,12 +162,16 @@ class SlalomContext:
     def next_layer_factors(self, t: int, d_in: int, d_out: int, w):
         """Blinding + verification material for the next blinded op.
 
-        Returns (w_q, w_scale, w_limbs_or_None, r, u, s, ws). The cached
-        branch issues no field matmul; the on-the-fly branch issues one for
-        ``u`` (telemetry.enclave_matmuls) and, when verification is on and
-        the cache carries no fold vectors, one skinny ``W_q @ s`` fold.
+        Returns (w_q, w_scale, w_limbs_or_None, r, u, s, ws, shard_folds).
+        The cached branch issues no field matmul; the on-the-fly branch
+        issues one for ``u`` (telemetry.enclave_matmuls) and, when
+        verification is on and the cache carries no fold vectors, one
+        skinny ``W_q @ s`` fold. ``shard_folds`` is the per-shard
+        (s_j, ws_j) list the offload plane consumes (prefetched by the
+        cache when its ``shards`` > 1; the plane derives it live otherwise).
         """
         op = self._layer_counter
+        sf = None
         if self.factors is not None:
             assert op < len(self.factors), (
                 f"precompute cache has {len(self.factors)} layers but the "
@@ -179,6 +192,7 @@ class SlalomContext:
                     f"cached stream shape {e['r'].shape} != ({t}, {d_in}) — "
                     f"cache was built for a different batch shape")
             s, ws = e.get("s"), e.get("ws")
+            sf = e.get("shard_folds")
         elif self.unblinded:
             # verified-open offload: zero pad, so u = (0 @ W) = 0 — no
             # factor matmul exists to pay for (or precompute)
@@ -203,7 +217,7 @@ class SlalomContext:
             self.telemetry.fold_matmuls += 1    # on the request path — the
             self.telemetry.verify_flops += (    # cache moves these offline
                 2 * d_in * d_out * self.integrity.k)
-        return w_q, w_scale, w_limbs, r, u, s, ws
+        return w_q, w_scale, w_limbs, r, u, s, ws, sf
 
 
 def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
@@ -252,7 +266,7 @@ def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
 
     # --- enclave: weight quantization + blinding material (precomputed when
     # the cache is active, otherwise derived on the request path) ---
-    w_q, w_scale, w_limbs, r, u, s, ws = ctx.next_layer_factors(
+    w_q, w_scale, w_limbs, r, u, s, ws, sf = ctx.next_layer_factors(
         t, d_in, d_out, w)
     # verification/injection cannot bind per-op state for ops traced inside
     # lax.scan (one traced call stands for many runtime layers, and traced
@@ -260,12 +274,54 @@ def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
     # restriction as the precompute cache; such ops stay unverified.
     if scanned is None:
         scanned = isinstance(w, jax.core.Tracer)
+    # --- enclave: per-request absmax activation scale ---
+    x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
+    if ctx.plane is not None and not scanned:
+        # --- multi-device plane: the device matmul shards across the pool
+        # (parallel/offload_sharding.py) with shard-local Freivalds checks,
+        # single-shard retry and straggler hedging — host-side control
+        # flow, so the executor runs this trace eagerly (core/origami.py).
+        # Faults are per-device (pool slots), not executor-wide, and every
+        # shard is checked, so the op-level log records a verified op with
+        # no *unrecovered* failure (the plane's ShardReport carries
+        # detection/retry counts and the pool the per-device health).
+        k_out = spec.k_act + spec.k_w
+        if ctx.impl == "fused":
+            # replicate the fused kernel's quantization exactly (multiply
+            # by reciprocal; kernels/blind/ref.py is the kernel oracle) so
+            # the sharded result is bit-identical to fused_blinded_matmul
+            xs = xt.astype(jnp.float32) * (1.0 / x_scale)
+        else:
+            xs = xt.astype(jnp.float32) / x_scale
+        x_b = jnp.mod(from_signed(quantize_act(xs, spec.k_act)) + r, P)
+        y_b = ctx.plane.matmul(
+            x_b, w_q, session_key=ctx.session_key, op_index=op_index,
+            step=ctx.step, k=ctx.integrity.k if ctx.integrity.enabled else 1,
+            folds=sf,
+            mode=ctx.shard.mode if ctx.shard is not None else None,
+            group=ctx.shard.devices if ctx.shard is not None else None)
+        if ctx.impl == "fused":
+            out_scale = x_scale * w_scale * (2.0 ** -k_out)
+            y = (to_signed(jnp.mod(y_b - u + P, P)).astype(jnp.float32)
+                 * out_scale)
+        else:
+            y = B.unblind_result(y_b, u, spec, out_dtype=jnp.float32)
+            y = y * (x_scale * w_scale)
+        ctx.integrity_log.append((jnp.bool_(True), jnp.bool_(False),
+                                  jnp.bool_(False)))
+        ctx.telemetry.record_verify(t, d_in, d_out,
+                                    ctx.integrity.k
+                                    if ctx.integrity.enabled else 1)
+        ctx.telemetry.device_matmuls += 1
+        if "b" in p:
+            y = y + p["b"].astype(jnp.float32)
+        ctx.telemetry.record_offload(t, d_in, d_out)
+        return y.reshape(lead + (d_out,)).astype(x.dtype)
+
     verify = ctx.integrity.enabled and not scanned
     inject = ctx.fault is not None and not scanned
     will_check = (IG.decide(ctx.integrity, ctx.session_key, op_index,
                             ctx.step) if verify or inject else None)
-    # --- enclave: per-request absmax activation scale ---
-    x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
     checked = failed = corrupted = None
     if ctx.impl == "fused":
         if w_limbs is None:

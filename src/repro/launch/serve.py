@@ -14,6 +14,14 @@ Usage:
     # backend quarantined:
     PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
         --models vgg16 --verify full --inject bit_flip
+
+    # sharded multi-device drill: blinded matmuls row-shard across 2
+    # simulated devices with device 1 dishonest — shard-local Freivalds
+    # must detect every corruption, retry ONLY the bad shard on the
+    # healthy device, and quarantine device 1 (per-device, the model
+    # keeps offloading on device 0):
+    PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
+        --models vgg16 --devices 2 --shard rows --inject bit_flip
 """
 from __future__ import annotations
 
@@ -45,6 +53,24 @@ def _integrity_args(args):
             return None
         return DishonestDevice(FaultSpec(args.inject))
     return policy, fault
+
+
+def _device_pool(args):
+    """A fresh DevicePool per model from --devices/--inject flags.
+
+    With a pool, --inject targets ONE device (--inject-device, default the
+    last slot) instead of the executor-wide injector — the "one dishonest
+    accelerator in the fleet" drill the tier-1 smoke runs."""
+    from repro.runtime.devices import DevicePool
+    if not args.devices:
+        return None
+    faults = {}
+    if args.inject != "none":
+        bad = (args.inject_device if args.inject_device is not None
+               else args.devices - 1)
+        assert 0 <= bad < args.devices, (bad, args.devices)
+        faults[bad] = DishonestDevice(FaultSpec(args.inject))
+    return DevicePool(args.devices, faults=faults)
 
 
 def _placement_for(cfg, args):
@@ -110,16 +136,28 @@ def run_engine(args) -> None:
     for i, name in enumerate(names):
         cfg = get(name)
         params = M.init_params(cfg, jax.random.PRNGKey(i))
+        pool = _device_pool(args)
         entry = engine.register_model(name, cfg, params, mode=args.mode,
                                       privacy_floor=args.privacy_floor,
-                                      integrity=policy, fault=fault(),
-                                      placement=_placement_for(cfg, args))
+                                      integrity=policy,
+                                      # with a pool the injector is
+                                      # per-DEVICE (pool slots), not
+                                      # executor-wide
+                                      fault=None if pool else fault(),
+                                      placement=_placement_for(cfg, args),
+                                      devices=pool, shard=args.shard)
         print(f"[engine] registered {entry.plan.summary()} "
               f"plan={entry.placement.summary()} "
-              f"quote={entry.quote.measurement[:12]}…")
+              f"quote={entry.quote.measurement[:12]}…"
+              + (f" devices={pool.size} shard={args.shard}" if pool else ""))
         legacy[name] = PrivateInferenceServer(cfg, params, mode=args.mode,
-                                              max_batch=args.batch)
-        legacy[name].executor = entry.executor    # same weights, same cache
+                                              max_batch=args.batch,
+                                              plan=_placement_for(cfg, args))
+        if pool is None:
+            # same weights, same cache — but NEVER for pooled runs: the
+            # cross-check oracle must stay a genuinely single-device
+            # executor, or a sharding bug would corrupt both sides alike
+            legacy[name].executor = entry.executor
         per_model[name] = cfg
 
     # interleave the models' request streams (worst case for a
@@ -179,9 +217,59 @@ def run_engine(args) -> None:
               f"recomputes={integ['recomputes']} "
               f"quarantines={integ['quarantines']} "
               f"flagged={sum(r.flagged for _, _, r in responses)}")
+    if args.devices:
+        print(f"[engine] offload plane: shard_checks={integ['shard_checks']} "
+              f"shard_failures={integ['shard_failures']} "
+              f"shard_retries={integ['shard_retries']} "
+              f"shard_hedges={integ['shard_hedges']}")
+        for name, snap in stats["devices"].items():
+            for s in snap["pool"]["slots"]:
+                print(f"[engine]   {name} {s['name']}: "
+                      f"dispatches={s['dispatches']} "
+                      f"failures={s['verify_failures']} "
+                      f"quarantined={s['quarantined']} "
+                      f"restores={s['restores']}")
     engine.close()
     if mismatches or ok != len(responses):
         raise SystemExit(1)
+    if args.devices:
+        # the sharded plane always verifies shard-locally
+        if integ["shard_checks"] == 0:
+            print("[engine] FAIL: sharded plane ran no shard checks")
+            raise SystemExit(1)
+        if args.inject not in ("none", "adaptive"):
+            # drill contract: the dishonest DEVICE was caught shard-locally
+            # and ONLY its shards were recovered — re-dispatched to a
+            # healthy device in rows mode, enclave-recomputed in shares
+            # mode (a share may never visit a second device) — it alone
+            # was quarantined, and the model kept offloading on the
+            # healthy devices (the bit-exact cross-check above already
+            # proved recovery)
+            bad = (args.inject_device if args.inject_device is not None
+                   else args.devices - 1)
+            recovered = (integ["shard_retries"] if args.shard == "rows"
+                         else integ["shard_enclave"])
+            if integ["shard_failures"] == 0 or recovered == 0:
+                print("[engine] FAIL: dishonest device not detected "
+                      "shard-locally")
+                raise SystemExit(1)
+            for name, snap in stats["devices"].items():
+                slots = snap["pool"]["slots"]
+                if not slots[bad]["quarantined"]:
+                    print(f"[engine] FAIL: {name} device {bad} not "
+                          "quarantined")
+                    raise SystemExit(1)
+                healthy = [s for j, s in enumerate(slots) if j != bad]
+                if any(s["quarantined"] for s in healthy) or not any(
+                        s["dispatches"] > 0 and s["verify_failures"] == 0
+                        for s in healthy):
+                    print(f"[engine] FAIL: {name} healthy devices not "
+                          "serving blinded offload")
+                    raise SystemExit(1)
+                if stats["models"][name]["quarantined"]:
+                    print(f"[engine] FAIL: {name} quarantined per-model — "
+                          "expected per-device only")
+                    raise SystemExit(1)
     if args.verify != "off" and integ["verify_checks"] == 0:
         print("[engine] FAIL: verification enabled but no checks ran")
         raise SystemExit(1)
@@ -194,9 +282,12 @@ def run_engine(args) -> None:
         # be asserted either way.
         print("[engine] adaptive drill: evasion bounded by policy "
               f"(failures={integ['verify_failures']}), responses bit-exact")
-    elif args.inject != "none" and args.verify != "off":
+    elif args.inject != "none" and args.verify != "off" and not args.devices:
         # the drill contract: the injected faults were caught (nonzero
-        # failed checks) AND every response above was still bit-exact
+        # failed checks) AND every response above was still bit-exact.
+        # (With --devices the injector is per-device and recovery is
+        # shard-local — no op-level failure or recompute ever happens;
+        # that drill's contract is asserted in the sharded block above.)
         if integ["verify_failures"] == 0 or integ["recomputes"] == 0:
             print("[engine] FAIL: injected faults were not detected")
             raise SystemExit(1)
@@ -239,7 +330,21 @@ def main():
                              "adaptive"),
                     help="dishonest-device drill: corrupt every offloaded "
                          "op with this fault class (runtime/faults.py)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard blinded offload across N simulated devices "
+                         "(runtime/devices.py DevicePool + "
+                         "parallel/offload_sharding.py); 0 = single-device "
+                         "path. Requires --engine.")
+    ap.add_argument("--shard", default="rows", choices=("rows", "shares"),
+                    help="shard geometry: row-shard the blinded operand, "
+                         "or additive secret shares (no single device sees "
+                         "the full blinded tensor)")
+    ap.add_argument("--inject-device", type=int, default=None,
+                    help="with --devices, the slot --inject corrupts "
+                         "(default: the last device)")
     args = ap.parse_args()
+    if args.devices and not args.engine:
+        ap.error("--devices requires --engine")
 
     if args.requests is None:
         args.requests = 32 if args.engine else 16

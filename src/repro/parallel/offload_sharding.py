@@ -1,0 +1,402 @@
+"""Sharded blinded offload: one field matmul across many untrusted devices.
+
+The Slalom protocol offloads ``y_b = (x_b @ W_q) mod p`` to ONE untrusted
+accelerator. DarKnight (PAPERS.md) shows the same blinding construction
+distributes: this module shards each blinded matmul across a
+``runtime/devices.DevicePool`` and is the dispatch half of the multi-device
+plane (the pool is the health half). Two shard geometries
+(``core/plan.ShardPolicy``):
+
+- **rows**: the blinded operand row-shards over the batch/token dim —
+  shard j is rows [lo_j, hi_j) of ``x_b``; results concatenate. Each
+  device sees a *slice* of the one-time-padded tensor (still uniform over
+  Z_p — a slice of a pad is a pad), and the pool's aggregate throughput
+  bounds the op, not one part's.
+- **shares**: additive secret sharing — ``x_b = (Σ_j x_j) mod p`` with
+  every proper subset of shares independently uniform, so **no single
+  device ever holds the full blinded tensor** (defense in depth if a
+  session pad were ever mismanaged: reconstructing ``x_b`` needs ALL
+  shares). Each device multiplies its full-shape share; results sum
+  mod p. Work is replicated n×, which is the price of the stronger
+  non-collusion guarantee.
+
+Both geometries are linear in ``x``, so the assembled result is
+**bit-identical** to the single-device matmul — the executor's logits do
+not change when a pool is attached (tests/test_offload_sharding.py).
+
+**Shard-local Freivalds.** Every shard is checked independently with its
+own fold vectors ``(s_j, ws_j = W_q @ s_j)`` (core/integrity.py
+``shard_fold_stream``; prefetched per session by core/precompute.py via the
+SessionPool ring): ``y_j @ s_j ≡ x_j @ ws_j (mod p)``. A corrupt result
+therefore indicts a *device*, not the op — only that shard is re-dispatched
+to another healthy device (the honest devices' work is never recomputed),
+the pool records the failure against the slot (quarantine/probation), and
+only when every device is exhausted does the enclave compute the shard
+itself. Shards are ALWAYS checked when a plane is active (the adaptive
+adversary of runtime/faults.py, which corrupts only unchecked ops, is
+structurally neutralized here).
+
+**Straggler hedging.** Shard wall times feed a ``runtime/straggler.py``
+``StepWatchdog``; once warmed, a shard exceeding ``deadline_factor`` × the
+P50 is duplicated onto the fastest spare healthy device and the first
+*verified* result wins (pure duplication — resending the same blinded
+shard reveals nothing new to the spare device). The loser's latency still
+feeds its EWMA so placement learns to avoid chronic stragglers.
+
+Host-side control flow (retry, hedging, health) cannot live inside a jit
+trace — an executor with a pool runs its plan interpreter eagerly
+(core/origami.py), which PR 1's kernels make bit-identical to the jitted
+trace. Ops traced under ``lax.scan`` stay on the single-device path (the
+same per-op addressability limit as precompute/verification).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, wait
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blinding as B
+from repro.core import integrity as IG
+from repro.core.plan import SHARD_MODES
+from repro.kernels.limb_matmul.ops import field_matmul
+from repro.kernels.limb_matmul.ref import P
+from repro.runtime.devices import DevicePool, DeviceSlot
+from repro.runtime.straggler import StepWatchdog, WatchdogConfig
+
+# fold_in domains: additive-share masks and per-shard fault keys live in
+# their own sub-spaces, disjoint from blinding/verify/fault streams
+SHARE_DOMAIN = 0x5A8E
+_SHARD_FAULT = 0x51
+
+
+@dataclasses.dataclass
+class ShardReport:
+    """Per-infer outcome of the sharded plane (host-side counters)."""
+    ops: int = 0                    # sharded matmuls dispatched
+    dispatches: int = 0             # shard -> device submissions (all)
+    checks: int = 0                 # shard-local Freivalds checks run
+    failures: int = 0               # checks that mismatched
+    retries: int = 0                # single-shard re-dispatches
+    hedges: int = 0                 # straggler duplicates launched
+    enclave_shards: int = 0         # shards the enclave computed itself
+    probes: int = 0                 # probation probes routed
+
+    @property
+    def flagged(self) -> bool:
+        """A device misbehaved (even though every shard was recovered)."""
+        return self.failures > 0
+
+    def add(self, other: "ShardReport") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+def row_spans(t: int, n: int) -> List[Tuple[int, int]]:
+    """Balanced contiguous row ranges — shard j owns [lo_j, hi_j).
+
+    Static in (t, n): the split never depends on device health, so the
+    assembled result (and the per-shard fold material) is identical
+    whichever devices end up computing the shards."""
+    base, extra = divmod(t, n)
+    spans, lo = [], 0
+    for j in range(n):
+        hi = lo + base + (1 if j < extra else 0)
+        spans.append((lo, hi))
+        lo = hi
+    return spans
+
+
+def additive_shares(x_field: jax.Array, session_key: jax.Array,
+                    op_index: int, step: int, n: int) -> List[jax.Array]:
+    """Split ``x_field`` into n additive shares over Z_p.
+
+    Shares 0..n-2 are fresh uniform masks drawn from the SHARE_DOMAIN
+    stream (enclave-private, never reused across (session, op, step));
+    the last share is the residual. Any proper subset is jointly uniform —
+    reconstructing the blinded tensor needs every share."""
+    root = B.stream_key(jax.random.fold_in(session_key, SHARE_DOMAIN),
+                        op_index, step)
+    shares, acc = [], None
+    for j in range(n - 1):
+        m = B.blinding_stream(jax.random.fold_in(root, j), x_field.shape)
+        shares.append(m)
+        acc = m if acc is None else jnp.mod(acc + m, P)
+    resid = x_field if acc is None else jnp.mod(x_field - acc + P, P)
+    shares.append(resid)
+    return shares
+
+
+@dataclasses.dataclass
+class _ShardTask:
+    index: int                      # shard id (static)
+    op_index: int                   # the blinded op this shard belongs to
+    x: jax.Array                    # the operand this shard's device gets
+    s: jax.Array                    # fold vectors (d_out, k)
+    ws: jax.Array                   # (d_in, k) = W_q @ s mod p
+    fault_key: jax.Array
+
+
+class OffloadPlane:
+    """Dispatches blinded field matmuls across a DevicePool."""
+
+    def __init__(self, pool: DevicePool, *, mode: str = "rows",
+                 hedging: bool = True,
+                 watchdog: Optional[StepWatchdog] = None,
+                 matmul_impl: Optional[str] = None):
+        assert mode in SHARD_MODES, mode
+        self.pool = pool
+        self.mode = mode
+        self.hedging = hedging
+        # kernels/limb_matmul/ops.field_matmul impl override for the shard
+        # matmuls (None = auto). Simulated pools on CPU want "ref": the
+        # interpreted-Pallas path auto picks for large shapes is
+        # Python-level and GIL-bound, which would serialize the per-device
+        # worker threads the simulation relies on; the jnp ref backend is
+        # bit-identical and releases the GIL.
+        self.matmul_impl = matmul_impl
+        # shard wall times feed the watchdog; its P50 sets the hedge
+        # deadline (deadline_factor × P50 after warmup)
+        self.watchdog = watchdog or StepWatchdog(WatchdogConfig(
+            deadline_factor=3.0, warmup_steps=4, window=64))
+        self.report = ShardReport()         # current-infer counters
+        self.totals = ShardReport()         # lifetime counters
+        self._lock = threading.Lock()
+
+    @property
+    def n_shards(self) -> int:
+        return self.pool.size
+
+    def begin_infer(self) -> None:
+        """Reset the per-infer report (the executor calls this per trace)."""
+        self.report = ShardReport()
+
+    # -- internals ---------------------------------------------------------
+    def _record(self, **deltas: int) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self.report, k, getattr(self.report, k) + v)
+                setattr(self.totals, k, getattr(self.totals, k) + v)
+
+    def _observe_latency(self, dt: float) -> None:
+        with self._lock:
+            self.watchdog.start_step(now=0.0)
+            self.watchdog.end_step(now=dt)
+
+    def _hedge_deadline(self) -> Optional[float]:
+        with self._lock:
+            wd = self.watchdog
+            if len(wd.history) < wd.cfg.warmup_steps:
+                return None
+            p50 = wd.p50
+        if p50 is None:
+            return None
+        return max(wd.cfg.deadline_factor * p50, 1e-4)
+
+    def _device_run(self, slot: DeviceSlot, task: _ShardTask,
+                    w_q: jax.Array):
+        """Runs ON the slot's worker thread: the untrusted device's half.
+
+        Returns (y_field, wall_s). The slot's fault injector corrupts the
+        result exactly where a byzantine accelerator would; the latency
+        model (sim_gflops / sim_delay_s) sleeps out the modeled compute
+        time so hedging and the bench see realistic wall clocks."""
+        t0 = time.perf_counter()
+        x = task.x
+        if slot.jax_device is not None:
+            x = jax.device_put(x, slot.jax_device)
+        y = self._matmul(x, w_q)
+        if slot.fault is not None:
+            y, _ = slot.fault.corrupt(y, op_index=task.op_index,
+                                      key=task.fault_key,
+                                      will_verify=jnp.bool_(True))
+        y = jax.block_until_ready(y)
+        if slot.sim_gflops:
+            flops = 2 * x.shape[0] * x.shape[1] * y.shape[1]
+            time.sleep(flops / (slot.sim_gflops * 1e9))
+        if slot.sim_delay_s:
+            time.sleep(slot.sim_delay_s)
+        return y, time.perf_counter() - t0
+
+    def _matmul(self, x: jax.Array, w_q: jax.Array) -> jax.Array:
+        if self.matmul_impl is None:
+            return field_matmul(x, w_q)
+        return field_matmul(x, w_q, impl=self.matmul_impl)
+
+    @staticmethod
+    def _shard_ok(y: jax.Array, task: _ShardTask) -> bool:
+        return bool(IG.fold_check(y, task.x, task.s, task.ws))
+
+    def _resolve_shard(self, task: _ShardTask, w_q: jax.Array,
+                       primary: DeviceSlot, fut,
+                       spares: Sequence[DeviceSlot]) -> jax.Array:
+        """One shard, submitted ``fut`` to verified finish: hedge onto the
+        first spare past the straggler deadline, retry failed checks down
+        the spare list, enclave-compute as last resort. (All shards'
+        primaries are submitted BEFORE any is resolved — ``matmul`` —
+        so distinct devices genuinely overlap.)"""
+        futures = {fut: primary}
+        spares = list(spares)
+        hedged = False
+        deadline = self._hedge_deadline()
+        while futures:
+            done, _ = wait(list(futures), timeout=deadline,
+                           return_when=FIRST_COMPLETED)
+            if not done:                       # straggler: duplicate once
+                # re-check quarantine at use time: the spares list was
+                # captured before this op's earlier shards may have
+                # benched one of them
+                spare = next((s for s in spares if not s.quarantined
+                              and s not in futures.values()), None)
+                if self.hedging and not hedged and spare is not None:
+                    hedged = True
+                    spares.remove(spare)
+                    futures[spare.submit(self._device_run, task, w_q)] = spare
+                    self._record(dispatches=1, hedges=1)
+                deadline = None                # wait for whoever finishes
+                continue
+            fut = next(iter(done))
+            slot = futures.pop(fut)
+            y, dt = fut.result()
+            self._observe_latency(dt)
+            self._record(checks=1)
+            if self._shard_ok(y, task):
+                self.pool.record_success(slot, dt)
+                # a hedge loser still teaches the EWMA its wall time
+                for f, s in futures.items():
+                    f.add_done_callback(
+                        lambda f_, s_=s: self._late_latency(f_, s_))
+                return y
+            self._record(failures=1)
+            self.pool.record_failure(slot)
+            if not futures:                    # re-dispatch THIS shard only
+                retry = next((s for s in spares if not s.quarantined), None)
+                if retry is None:
+                    self._record(enclave_shards=1)
+                    return field_matmul(task.x, w_q)
+                spares.remove(retry)
+                futures[retry.submit(self._device_run, task, w_q)] = retry
+                self._record(dispatches=1, retries=1)
+                deadline = None
+        raise AssertionError("unreachable: shard loop exited without result")
+
+    def _late_latency(self, fut, slot: DeviceSlot) -> None:
+        try:
+            _, dt = fut.result()
+        except Exception:  # noqa: BLE001 — a dead hedge loser is ignorable
+            return
+        self._observe_latency(dt)
+        self.pool.record_latency(slot, dt)
+
+    # -- public API --------------------------------------------------------
+    def matmul(self, x_field: jax.Array, w_q: jax.Array, *,
+               session_key: jax.Array, op_index: int, step: int = 0,
+               k: int = 1,
+               folds: Optional[Sequence[Tuple[jax.Array, jax.Array]]] = None,
+               mode: Optional[str] = None,
+               group: Optional[Sequence[int]] = None) -> jax.Array:
+        """``(x_field @ w_q) mod p`` sharded across the pool.
+
+        ``folds``: per-shard (s_j, ws_j) from the precompute ring (derived
+        live — same streams — when absent). ``mode``/``group``: per-step
+        ShardPolicy overrides (core/plan.py). Bit-identical to
+        ``field_matmul(x_field, w_q)`` for any device behavior the checks
+        and retries can recover from."""
+        mode = mode or self.mode
+        assert mode in SHARD_MODES, mode
+        n = self.n_shards
+        t, d_in = x_field.shape
+        d_out = w_q.shape[1]
+        self.pool.begin_dispatch()
+        self._record(ops=1)
+
+        if mode == "rows":
+            spans = row_spans(t, n)
+            operands = [x_field[lo:hi] for lo, hi in spans]
+        else:
+            operands = additive_shares(x_field, session_key, op_index,
+                                       step, n)
+
+        tasks: List[Optional[_ShardTask]] = []
+        fault_root = B.stream_key(
+            jax.random.fold_in(session_key, _SHARD_FAULT), op_index, step)
+        for j, xj in enumerate(operands):
+            if xj.shape[0] == 0:               # t < n: nothing to compute
+                tasks.append(None)
+                continue
+            if folds is not None:
+                s, ws = folds[j]
+            else:
+                s = IG.shard_fold_stream(session_key, op_index, step, j,
+                                         d_out, k)
+                ws = field_matmul(w_q, s)
+            tasks.append(_ShardTask(j, op_index, xj, s, ws,
+                                    jax.random.fold_in(fault_root, j)))
+
+        healthy = self.pool.healthy(group)
+        probe = self.pool.probe_candidate(group)
+        probe_j = max((j for j, tk in enumerate(tasks) if tk is not None),
+                      default=None)
+        results: List[Optional[jax.Array]] = [None] * n
+        # submit EVERY shard's primary before resolving any — shards on
+        # distinct devices overlap; resolution (verify/hedge/retry) then
+        # consumes them in shard order
+        pending: List[Tuple[int, _ShardTask, DeviceSlot, object,
+                            List[DeviceSlot]]] = []
+        for j, task in enumerate(tasks):
+            if task is None:
+                results[j] = jnp.zeros((0, d_out), x_field.dtype)
+                continue
+            if probe is not None and j == probe_j:
+                # the probation probe: one verified shard on the benched
+                # device; a clean check restores it, a failed one re-benches
+                # it and the shard retries on the healthy list as usual
+                primary, spares = probe, list(healthy)
+            elif healthy:
+                if mode == "shares":
+                    # a device may hold AT MOST ONE share of an op —
+                    # wrapping around (or retrying/hedging a share onto a
+                    # device that already holds another) would hand one
+                    # device enough shares to reconstruct the full blinded
+                    # tensor, the exact thing shares mode exists to prevent
+                    primary = healthy[j] if j < len(healthy) else None
+                else:
+                    primary = healthy[j % len(healthy)]
+                spares = [s for s in healthy if s is not primary]
+            else:
+                primary, spares = None, []
+            if mode == "shares":
+                spares = []        # one device per share, ever (DESIGN §11)
+            if primary is None:
+                # no device this shard may visit: the enclave computes it
+                self._record(enclave_shards=1)
+                results[j] = field_matmul(task.x, w_q)
+                continue
+            if primary is probe:
+                self.pool.record_probe(primary)
+                self._record(probes=1)
+            fut = primary.submit(self._device_run, task, w_q)
+            self._record(dispatches=1)
+            pending.append((j, task, primary, fut, spares))
+        for j, task, primary, fut, spares in pending:
+            results[j] = self._resolve_shard(task, w_q, primary, fut,
+                                             spares)
+
+        if mode == "rows":
+            return jnp.concatenate(results, axis=0)
+        out = results[0]
+        for y in results[1:]:
+            if y.shape[0]:
+                out = jnp.mod(out + y, P)
+        return out
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            totals = dataclasses.asdict(self.totals)
+        return {"mode": self.mode, "hedging": self.hedging,
+                "totals": totals, "pool": self.pool.snapshot()}

@@ -6,13 +6,28 @@ import jax.numpy as jnp
 
 
 def _avg_pool_same(x, win: int):
-    """Uniform-window local mean, NHWC, SAME padding."""
-    k = jnp.ones((win, win, 1, 1), x.dtype) / (win * win)
+    """Uniform-window local mean, NHWC, SAME padding.
+
+    SAME windows at the border are zero-padded; dividing their sums by the
+    full win² (the seed behavior) deflated border means/variances — every
+    border pixel's local statistics shrank toward 0, biasing the SSIM map
+    exactly where reconstructions differ most, and with it every
+    boundary-leakage score the planner acts on (core/planner.py). Normalize
+    by the true in-bounds window mass instead: convolve an all-ones mask
+    with the same window and divide by the per-pixel count."""
     c = x.shape[-1]
-    k = jnp.tile(k, (1, 1, 1, c))
-    return jax.lax.conv_general_dilated(
-        x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=c)
+    k = jnp.tile(jnp.ones((win, win, 1, 1), x.dtype), (1, 1, 1, c))
+
+    def conv(v, kern, groups):
+        return jax.lax.conv_general_dilated(
+            v, kern, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+
+    sums = conv(x, k, c)
+    counts = conv(jnp.ones((1,) + x.shape[1:3] + (1,), x.dtype),
+                  jnp.ones((win, win, 1, 1), x.dtype), 1)
+    return sums / counts
 
 
 def ssim(x, y, *, win: int = 7, data_range: float = 1.0) -> jax.Array:

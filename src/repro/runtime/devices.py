@@ -1,0 +1,228 @@
+"""Multi-device offload pool: per-device health for the blinded plane.
+
+The engine (PR 2/3) offloaded every blinded field matmul to one implicit
+device, so a single bad accelerator quarantined a whole *model* forever and
+throughput was capped by one part. DarKnight's construction (PAPERS.md)
+scales the same blinding across multiple untrusted GPUs; ``DevicePool`` is
+the health-tracking side of that plane (parallel/offload_sharding.py is the
+dispatch side):
+
+- **slots**: one per untrusted accelerator — real ``jax.devices()`` entries
+  when the host has them, or N *simulated* slots (CPU tests/benchmarks: all
+  compute lands on the default backend, but each slot keeps its own fault
+  injector, latency model and health state, which is what the dishonest-
+  device drills exercise).
+- **per-device telemetry**: a latency EWMA per slot (shard placement
+  prefers fast devices) and Freivalds-failure counters fed by the
+  shard-local checks.
+- **per-device quarantine/probation**: ``quarantine_after`` consecutive
+  failed shard checks quarantine *that slot only* — the rest of the pool
+  keeps serving blinded offload (the all-or-nothing per-model quarantine
+  of runtime/engine.py remains only for poolless models). After
+  ``probation_after`` further pool dispatches the slot becomes
+  probe-eligible: the plane routes it ONE verified shard; a clean check
+  restores it, a failed one re-quarantines it — a transient fault heals, a
+  persistent adversary stays benched.
+
+Each slot owns a single-worker thread (its dispatch queue): shards to
+distinct devices run concurrently (JAX ops drop the GIL; real devices
+overlap fully, simulated ones at least overlap their latency models),
+while work for one device serializes like a real command queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass
+class DeviceHealthConfig:
+    quarantine_after: int = 2       # consecutive failed shard checks
+    probation_after: int = 4        # pool dispatches before a re-probe
+    ewma_alpha: float = 0.25        # latency EWMA smoothing
+
+
+class DeviceSlot:
+    """One untrusted accelerator: identity, health, queue, telemetry."""
+
+    def __init__(self, index: int, *, jax_device=None, fault=None,
+                 sim_gflops: Optional[float] = None,
+                 sim_delay_s: float = 0.0):
+        self.index = index
+        self.jax_device = jax_device            # real device or None (sim)
+        self.fault = fault                      # runtime/faults injector
+        self.sim_gflops = sim_gflops            # modeled throughput (sleep)
+        self.sim_delay_s = sim_delay_s          # fixed per-dispatch latency
+        self.name = (str(jax_device) if jax_device is not None
+                     else f"sim:{index}")
+        # health state (guarded by the pool lock)
+        self.quarantined = False
+        self.probation = False                  # probe-eligible
+        self._cooldown = 0                      # dispatches until probation
+        self.consec_failures = 0
+        # telemetry
+        self.dispatches = 0
+        self.verify_failures = 0
+        self.quarantines = 0
+        self.probes = 0
+        self.restores = 0
+        self.ewma_latency_s: Optional[float] = None
+        self._queue = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"offload-dev{index}")
+
+    def submit(self, fn: Callable, *args) -> Future:
+        """Enqueue ``fn(self, *args)`` on this device's serial queue."""
+        return self._queue.submit(fn, self, *args)
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"name": self.name, "quarantined": self.quarantined,
+                "probation": self.probation,
+                "dispatches": self.dispatches,
+                "verify_failures": self.verify_failures,
+                "consec_failures": self.consec_failures,
+                "quarantines": self.quarantines, "probes": self.probes,
+                "restores": self.restores,
+                "ewma_latency_s": self.ewma_latency_s}
+
+    def close(self) -> None:
+        self._queue.shutdown(wait=False)
+
+
+class DevicePool:
+    """Health-tracked device set the sharded offload plane dispatches to.
+
+    ``n``: simulated slot count; ``devices``: explicit ``jax.Device``s
+    (``DevicePool.from_jax()`` wraps the host's real accelerators).
+    ``faults``: {slot index: DishonestDevice} — per-device injectors, the
+    "one dishonest device in the fleet" drill the tier-1 smoke runs.
+    """
+
+    def __init__(self, n: Optional[int] = None, *,
+                 devices: Optional[Sequence] = None,
+                 faults: Optional[Dict[int, object]] = None,
+                 sim_gflops: Optional[float] = None,
+                 sim_delay_s: Optional[Dict[int, float]] = None,
+                 health: Optional[DeviceHealthConfig] = None):
+        assert (n is None) != (devices is None), "pass n= XOR devices="
+        faults = faults or {}
+        delays = sim_delay_s or {}
+        self.health = health or DeviceHealthConfig()
+        self._lock = threading.Lock()
+        if devices is not None:
+            self.slots = [DeviceSlot(i, jax_device=d, fault=faults.get(i),
+                                     sim_delay_s=delays.get(i, 0.0))
+                          for i, d in enumerate(devices)]
+        else:
+            assert n >= 1, n
+            self.slots = [DeviceSlot(i, fault=faults.get(i),
+                                     sim_gflops=sim_gflops,
+                                     sim_delay_s=delays.get(i, 0.0))
+                          for i in range(n)]
+        self.dispatches = 0                 # plane-level matmul dispatches
+
+    @classmethod
+    def from_jax(cls, **kw) -> "DevicePool":
+        return cls(devices=jax.devices(), **kw)
+
+    @property
+    def size(self) -> int:
+        return len(self.slots)
+
+    # -- health ------------------------------------------------------------
+    def n_healthy(self) -> int:
+        with self._lock:
+            return sum(not s.quarantined for s in self.slots)
+
+    def healthy(self, group: Optional[Sequence[int]] = None
+                ) -> List[DeviceSlot]:
+        """Non-quarantined slots (optionally restricted to a device
+        group), fastest EWMA first — placement prefers proven-fast parts;
+        never-measured slots sort first so every device gets warmed."""
+        with self._lock:
+            out = [s for s in self.slots if not s.quarantined
+                   and (group is None or s.index in group)]
+        return sorted(out, key=lambda s: (s.ewma_latency_s is not None,
+                                          s.ewma_latency_s or 0.0, s.index))
+
+    def probe_candidate(self, group: Optional[Sequence[int]] = None
+                        ) -> Optional[DeviceSlot]:
+        """One probe-eligible quarantined slot (probation reached), if any."""
+        with self._lock:
+            for s in self.slots:
+                if (s.quarantined and s.probation
+                        and (group is None or s.index in group)):
+                    return s
+        return None
+
+    def begin_dispatch(self) -> None:
+        """One plane-level matmul dispatch: age quarantine cooldowns so
+        benched devices eventually reach probation."""
+        with self._lock:
+            self.dispatches += 1
+            for s in self.slots:
+                if s.quarantined and not s.probation:
+                    s._cooldown -= 1
+                    if s._cooldown <= 0:
+                        s.probation = True
+
+    def record_success(self, slot: DeviceSlot, latency_s: float) -> None:
+        """A shard this slot computed passed its Freivalds check."""
+        a = self.health.ewma_alpha
+        with self._lock:
+            slot.dispatches += 1
+            slot.ewma_latency_s = (
+                latency_s if slot.ewma_latency_s is None
+                else (1 - a) * slot.ewma_latency_s + a * latency_s)
+            slot.consec_failures = 0
+            if slot.quarantined and slot.probation:
+                # restored ONLY via the probation probe — a clean result
+                # reaching a quarantined slot any other way (a spares list
+                # captured before a mid-op quarantine) must not shortcut
+                # the probation wait, or a probabilistic corruptor could
+                # un-bench itself immediately
+                slot.quarantined = False
+                slot.probation = False
+                slot.restores += 1
+
+    def record_latency(self, slot: DeviceSlot, latency_s: float) -> None:
+        """EWMA-only update — a hedge loser's wall time teaches placement
+        to avoid a chronic straggler without touching its health state
+        (its Freivalds check never ran)."""
+        a = self.health.ewma_alpha
+        with self._lock:
+            slot.ewma_latency_s = (
+                latency_s if slot.ewma_latency_s is None
+                else (1 - a) * slot.ewma_latency_s + a * latency_s)
+
+    def record_probe(self, slot: DeviceSlot) -> None:
+        """The plane routed a probe shard to a quarantined slot."""
+        with self._lock:
+            slot.probes += 1
+
+    def record_failure(self, slot: DeviceSlot) -> None:
+        """A shard this slot computed FAILED its Freivalds check."""
+        with self._lock:
+            slot.dispatches += 1
+            slot.verify_failures += 1
+            slot.consec_failures += 1
+            if slot.quarantined:                # failed probe: re-bench
+                slot.probation = False
+                slot._cooldown = self.health.probation_after
+            elif slot.consec_failures >= self.health.quarantine_after:
+                slot.quarantined = True
+                slot.probation = False
+                slot._cooldown = self.health.probation_after
+                slot.quarantines += 1
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"size": self.size, "healthy": self.n_healthy(),
+                "dispatches": self.dispatches,
+                "slots": [s.snapshot() for s in self.slots]}
+
+    def close(self) -> None:
+        for s in self.slots:
+            s.close()

@@ -54,9 +54,18 @@ class EngineConfig:
     # integrity (DESIGN.md §9): grant one fresh-session device retry after
     # a failed Freivalds check before the enclave recomputes, and after
     # ``quarantine_after`` consecutive failing batches stop offloading to
-    # that model's backend at all (every dispatch runs trusted).
+    # that model's backend at all (every dispatch runs trusted). After
+    # ``probation_after`` trusted batches the backend earns one probation
+    # probe: a verified offload dispatch — a clean probe restores offload
+    # (a transient fault heals), a dirty one re-benches it (the seed
+    # quarantined forever: one bad patch window cost a model its
+    # accelerator for the life of the process). Models registered with a
+    # DevicePool skip this path entirely — their quarantine/probation is
+    # per-DEVICE (runtime/devices.py), so one bad part never benches the
+    # whole model.
     integrity_retry: bool = True
     quarantine_after: int = 3
+    probation_after: int = 8
 
 
 @dataclasses.dataclass
@@ -83,6 +92,9 @@ class _ModelEntry:
     integrity_failures: int = 0          # total failed-check batches
     consec_failures: int = 0             # consecutive (resets on clean)
     quarantined: bool = False            # offload disabled, enclave serves
+    trusted_streak: int = 0              # trusted batches since quarantine
+    probations: int = 0                  # probe dispatches attempted
+    restores: int = 0                    # probes that re-admitted offload
 
 
 class EngineStats:
@@ -107,6 +119,16 @@ class EngineStats:
         self.recomputes = 0              # enclave recomputed a batch
         self.trusted_batches = 0         # dispatched under quarantine
         self.quarantines = 0             # backends quarantined
+        self.probations = 0              # quarantine probes dispatched
+        self.probation_restores = 0      # probes that restored offload
+        # multi-device plane counters (DESIGN.md §11)
+        self.shard_checks = 0            # shard-local Freivalds checks
+        self.shard_failures = 0          # shard checks that mismatched
+        self.shard_retries = 0           # single-shard re-dispatches
+        self.shard_hedges = 0            # straggler duplicates launched
+        self.shard_enclave = 0           # shards the enclave computed
+                                         # (shares-mode recovery, or every
+                                         # device exhausted)
         self.start_t = time.monotonic()
         self.first_batch_t: Optional[float] = None
         self.latencies: Deque[float] = deque(maxlen=self.LAT_WINDOW)
@@ -166,7 +188,20 @@ class EngineStats:
                 "recomputes": self.recomputes,
                 "trusted_batches": self.trusted_batches,
                 "quarantines": self.quarantines,
+                "probations": self.probations,
+                "probation_restores": self.probation_restores,
+                "shard_checks": self.shard_checks,
+                "shard_failures": self.shard_failures,
+                "shard_retries": self.shard_retries,
+                "shard_hedges": self.shard_hedges,
+                "shard_enclave": self.shard_enclave,
             }
+        # per-device health of every model running a sharded offload plane
+        # (quarantine is per-DEVICE there, not per-model)
+        out["devices"] = {
+            name: e.executor.plane.snapshot()
+            for name, e in engine.models.items()
+            if e.executor.plane is not None}
         out["sessions"] = {name: e.pool.stats()
                            for name, e in engine.models.items()}
         # offload counters read the *blinded*-trace snapshot so a recovery
@@ -195,7 +230,8 @@ class EngineStats:
                    "trusted_matmuls":
                        e.executor.telemetry_trusted.trusted_matmuls,
                    "integrity_failures": e.integrity_failures,
-                   "quarantined": e.quarantined}
+                   "quarantined": e.quarantined,
+                   "probations": e.probations, "restores": e.restores}
             for name, e in engine.models.items()}
         return out
 
@@ -231,8 +267,9 @@ class ServingEngine:
                        planner: Optional[PartitionPlanner] = None,
                        leakage: Optional[Dict[int, float]] = None,
                        integrity=None, fault=None,
-                       placement: Optional[PlacementPlan] = None
-                       ) -> _ModelEntry:
+                       placement: Optional[PlacementPlan] = None,
+                       devices=None, shard: str = "rows",
+                       hedging: bool = True) -> _ModelEntry:
         """Build an executor for ``name`` and admit it to the registry.
 
         ``placement``: an explicit per-layer PlacementPlan (core/plan.py)
@@ -244,7 +281,15 @@ class ServingEngine:
         ``integrity``/``fault``: Freivalds verification policy and (for
         tests/chaos drills) a dishonest-device injector, forwarded to the
         executor (core/integrity.py, runtime/faults.py).
+        ``devices``: a runtime/devices.DevicePool or a simulated slot
+        count — attaches the sharded multi-device offload plane
+        (parallel/offload_sharding.py) with default shard geometry
+        ``shard`` and straggler ``hedging``; quarantine then becomes
+        per-device (the pool's) instead of per-model.
         """
+        if isinstance(devices, int):
+            from repro.runtime.devices import DevicePool
+            devices = DevicePool(devices)
         if placement is not None:
             plan = PartitionPlan(cfg.name, placement.mode_label,
                                  placement.boundary, "explicit",
@@ -252,7 +297,8 @@ class ServingEngine:
             executor = OrigamiExecutor(cfg, params, impl=impl,
                                        precompute=precompute,
                                        integrity=integrity, fault=fault,
-                                       plan=placement)
+                                       plan=placement, devices=devices,
+                                       shard=shard, hedging=hedging)
             return self.register_executor(name, executor,
                                           input_key=input_key,
                                           input_dtype=input_dtype, plan=plan)
@@ -268,7 +314,9 @@ class ServingEngine:
         executor = OrigamiExecutor(cfg, params, mode=mode,
                                    partition=plan.partition, impl=impl,
                                    precompute=precompute,
-                                   integrity=integrity, fault=fault)
+                                   integrity=integrity, fault=fault,
+                                   devices=devices, shard=shard,
+                                   hedging=hedging)
         return self.register_executor(name, executor, input_key=input_key,
                                       input_dtype=input_dtype, plan=plan)
 
@@ -437,12 +485,32 @@ class ServingEngine:
         the engine bit-identical to its legacy oracle."""
         from repro.runtime.serving import Response, execute_sealed_batch
         self.watchdog.start_step()
+        # probation (poolless models): a quarantined backend that has
+        # served ``probation_after`` trusted batches earns ONE verified
+        # offload probe — clean restores offload, dirty re-benches it.
+        # The probe routes REAL client traffic back to a convicted
+        # backend, so it is only safe when every offloaded op is checked
+        # (the retry/recompute path then recovers any corruption before
+        # sealing): a "sampled" policy would let unchecked ops carry
+        # corrupt logits to clients AND could restore the backend off a
+        # lucky probe, so such models stay benched (the pre-probation
+        # behavior). Models with a DevicePool never take this path:
+        # their quarantine/probation is per-device, and shards are
+        # always checked.
+        per_device = entry.executor.plane is not None
+        probe = (entry.quarantined and not per_device
+                 and entry.executor.integrity.mode == "full"
+                 and entry.trusted_streak >= self.cfg.probation_after)
+        if probe:
+            entry.probations += 1
+            with self.stats.lock:
+                self.stats.probations += 1
         boxes, n_valid, pad, integ = execute_sealed_batch(
             entry.executor, [p.req for p in batch],
             input_key=entry.input_key, max_batch=self.cfg.max_batch,
             session_key=entry.pool.acquire,   # lazy: only consumed if a
             input_dtype=entry.input_dtype,    # valid request reaches infer
-            trusted=entry.quarantined,
+            trusted=entry.quarantined and not probe,
             retry_device=self.cfg.integrity_retry)
         if n_valid:
             self.stats.record_batch(n_valid, pad)
@@ -453,20 +521,39 @@ class ServingEngine:
             self.stats.device_retries += integ.retried
             self.stats.recomputes += integ.recomputed
             self.stats.trusted_batches += integ.trusted
-        if n_valid and not entry.quarantined:
+            self.stats.shard_checks += integ.shard_checks
+            self.stats.shard_failures += integ.shard_failures
+            self.stats.shard_retries += integ.shard_retries
+            self.stats.shard_hedges += integ.shard_hedges
+            self.stats.shard_enclave += integ.shard_enclave
+        if n_valid and entry.quarantined and not per_device:
+            if probe:
+                if integ.checks and not integ.failures:
+                    entry.quarantined = False
+                    entry.consec_failures = 0
+                    entry.restores += 1
+                    with self.stats.lock:
+                        self.stats.probation_restores += 1
+                entry.trusted_streak = 0     # clean: healthy again; dirty:
+            else:                            # restart the probation clock
+                entry.trusted_streak += 1
+        elif n_valid and not entry.quarantined and not per_device:
             # quarantine bookkeeping (batcher thread owns entry state): a
             # backend that keeps failing its Freivalds checks stops being
-            # offloaded to at all — the enclave serves its traffic until an
-            # operator re-admits it (register a fresh entry).
+            # offloaded to until probation re-admits it.
             if integ.flagged:
                 entry.integrity_failures += 1
                 entry.consec_failures += 1
                 if entry.consec_failures >= self.cfg.quarantine_after:
                     entry.quarantined = True
+                    entry.trusted_streak = 0
                     with self.stats.lock:
                         self.stats.quarantines += 1
             elif integ.checks:
                 entry.consec_failures = 0
+        elif n_valid and per_device and integ.flagged:
+            entry.integrity_failures += 1    # visibility only: recovery and
+                                             # health are per-device (pool)
         self.watchdog.end_step()
         for p, box in zip(batch, boxes):
             self._finish(p, Response(p.req.rid, box, box is not None,
@@ -500,3 +587,5 @@ class ServingEngine:
             self._thread.join(timeout=5.0)
         for entry in self.models.values():
             entry.pool.close()
+            if entry.executor.plane is not None:
+                entry.executor.plane.pool.close()

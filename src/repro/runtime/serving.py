@@ -92,10 +92,19 @@ class BatchIntegrity:
     recomputed: bool = False     # enclave recompute produced the response
     trusted: bool = False        # dispatched straight to the enclave
                                  # (quarantined backend — no checks to run)
+    # multi-device plane counters (parallel/offload_sharding.py): shard
+    # failures are detected AND recovered inside the op (single-shard
+    # retry on another device), so they never trigger the batch-level
+    # retry/recompute path — but they still flag the response.
+    shard_checks: int = 0        # shard-local Freivalds checks run
+    shard_failures: int = 0      # shard checks that mismatched
+    shard_retries: int = 0       # single-shard re-dispatches
+    shard_hedges: int = 0        # straggler duplicates launched
+    shard_enclave: int = 0       # shards the enclave computed itself
 
     @property
     def flagged(self) -> bool:
-        return self.failures > 0
+        return self.failures > 0 or self.shard_failures > 0
 
 
 @dataclasses.dataclass
@@ -109,6 +118,11 @@ class IntegrityTotals:
     retries: int = 0
     recomputes: int = 0
     trusted_batches: int = 0
+    shard_checks: int = 0
+    shard_failures: int = 0
+    shard_retries: int = 0
+    shard_hedges: int = 0
+    shard_enclave: int = 0
 
     def add(self, integ: BatchIntegrity) -> None:
         self.checks += integ.checks
@@ -117,6 +131,11 @@ class IntegrityTotals:
         self.retries += integ.retried
         self.recomputes += integ.recomputed
         self.trusted_batches += integ.trusted
+        self.shard_checks += integ.shard_checks
+        self.shard_failures += integ.shard_failures
+        self.shard_retries += integ.shard_retries
+        self.shard_hedges += integ.shard_hedges
+        self.shard_enclave += integ.shard_enclave
 
 
 def _fresh_session(session_key, used: jax.Array) -> jax.Array:
@@ -188,11 +207,21 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
         result = executor.infer(batch, session_key=_trusted_key(),
                                 trusted=True)
     else:
+        def absorb_shards(res) -> None:
+            if res.sharding is None:
+                return
+            integ.shard_checks += res.sharding.checks
+            integ.shard_failures += res.sharding.failures
+            integ.shard_retries += res.sharding.retries
+            integ.shard_hedges += res.sharding.hedges
+            integ.shard_enclave += res.sharding.enclave_shards
+
         sk = session_key() if callable(session_key) else session_key
         result = executor.infer(batch, session_key=sk)
         integ.checks = result.integrity.n_checked
         integ.failures = result.integrity.n_failed
         integ.corrupted = result.integrity.n_corrupted
+        absorb_shards(result)
         if not result.integrity.ok and retry_device:
             sk = _fresh_session(session_key, sk)
             result = executor.infer(batch, session_key=sk)
@@ -200,6 +229,7 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
             integ.checks += result.integrity.n_checked
             integ.failures += result.integrity.n_failed
             integ.corrupted += result.integrity.n_corrupted
+            absorb_shards(result)
         if not result.integrity.ok:
             result = executor.infer(batch, session_key=_trusted_key(),
                                     trusted=True)

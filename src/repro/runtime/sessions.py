@@ -15,7 +15,12 @@ the request path again.
 - **refill**: a daemon thread keeps ``depth`` sessions prefetched into the
   executor's ``BlindedLayerCache`` (whose ``max_prefetched`` is raised to
   match). JAX dispatch is async, so the refill thread mostly *enqueues*
-  device work that overlaps the batcher thread's inference.
+  device work that overlaps the batcher thread's inference. A prefetched
+  factor set carries everything the session's offload needs: (r, u), the
+  Freivalds fold vectors under a verification policy, and — when the
+  executor runs a multi-device plane — the PER-SHARD fold vectors
+  (core/precompute.py ``shards``), so shard-local verification material
+  is off the request path too.
 - **reuse guard**: every key handed out is remembered (as bytes) and
   re-issue raises — the one-time-pad argument (DESIGN.md §3) dies the
   moment a session is used twice. ``stats()`` exposes

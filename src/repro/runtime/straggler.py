@@ -11,6 +11,7 @@ host — the same path as a failure, but proactive).
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from collections import deque
 from typing import Deque, Optional
@@ -22,6 +23,18 @@ class WatchdogConfig:
     warmup_steps: int = 10
     window: int = 50
     tolerance: int = 3
+
+
+def _median(values) -> float:
+    """Proper median (mean of the two middles on even-length windows).
+
+    The seed used ``sorted(h)[len(h) // 2]`` — the UPPER median — which
+    systematically inflated the deadline baseline on even-length windows
+    (a 3× deadline silently became up to 3× the worst-half boundary), so
+    genuinely slow steps could pass. The offload plane's straggler hedging
+    (parallel/offload_sharding.py) keys its duplicate-dispatch deadline off
+    this estimate, so the bias became load-bearing."""
+    return float(statistics.median(values))
 
 
 class StepWatchdog:
@@ -42,8 +55,7 @@ class StepWatchdog:
         self._t0 = None
         slow = False
         if len(self.history) >= self.cfg.warmup_steps:
-            p50 = sorted(self.history)[len(self.history) // 2]
-            slow = dt > self.cfg.deadline_factor * p50
+            slow = dt > self.cfg.deadline_factor * _median(self.history)
         self.history.append(dt)
         if slow:
             self.flagged_steps += 1
@@ -61,4 +73,4 @@ class StepWatchdog:
     def p50(self) -> Optional[float]:
         if not self.history:
             return None
-        return sorted(self.history)[len(self.history) // 2]
+        return _median(self.history)

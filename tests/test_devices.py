@@ -1,0 +1,124 @@
+"""DevicePool health state machine: EWMA placement, per-device
+quarantine/probation, and the shard-geometry helpers (no executors here —
+end-to-end plane behavior lives in test_offload_sharding.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blinding import blinding_stream
+from repro.kernels.limb_matmul.ref import P
+from repro.parallel.offload_sharding import additive_shares, row_spans
+from repro.runtime.devices import DeviceHealthConfig, DevicePool
+
+
+def test_row_spans_balanced_and_exhaustive():
+    for t in (1, 2, 5, 17, 64):
+        for n in (1, 2, 3, 4, 8):
+            spans = row_spans(t, n)
+            assert len(spans) == n
+            assert spans[0][0] == 0 and spans[-1][1] == t
+            sizes = [hi - lo for lo, hi in spans]
+            assert sum(sizes) == t
+            assert max(sizes) - min(sizes) <= 1       # balanced
+            assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+
+
+def test_additive_shares_reconstruct_and_hide():
+    key = jax.random.PRNGKey(3)
+    x = blinding_stream(jax.random.fold_in(key, 9), (6, 8))
+    for n in (2, 3, 4):
+        shares = additive_shares(x, key, op_index=1, step=0, n=n)
+        assert len(shares) == n
+        acc = shares[0]
+        for s in shares[1:]:
+            acc = jnp.mod(acc + s, P)
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(x))
+        # no single share equals the blinded tensor (each is masked)
+        for s in shares:
+            assert not np.array_equal(np.asarray(s), np.asarray(x))
+    # deterministic per (session, op, step): a shard retry re-sends the
+    # SAME share, never fresh material
+    a = additive_shares(x, key, op_index=1, step=0, n=2)
+    b = additive_shares(x, key, op_index=1, step=0, n=2)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    c = additive_shares(x, key, op_index=2, step=0, n=2)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+def test_healthy_prefers_fast_ewma_and_unmeasured_first():
+    pool = DevicePool(3)
+    pool.record_success(pool.slots[0], 0.5)
+    pool.record_success(pool.slots[2], 0.1)
+    order = [s.index for s in pool.healthy()]
+    assert order == [1, 2, 0]      # never-measured first, then fastest
+    pool.close()
+
+
+def test_quarantine_is_per_device_after_consecutive_failures():
+    pool = DevicePool(2, health=DeviceHealthConfig(quarantine_after=2))
+    bad, good = pool.slots[1], pool.slots[0]
+    pool.record_failure(bad)
+    assert not bad.quarantined      # one strike
+    pool.record_success(good, 0.1)
+    pool.record_failure(bad)
+    assert bad.quarantined and bad.quarantines == 1
+    assert not good.quarantined
+    assert [s.index for s in pool.healthy()] == [0]
+    assert pool.n_healthy() == 1
+    pool.close()
+
+
+def test_success_resets_consecutive_failures():
+    pool = DevicePool(1, health=DeviceHealthConfig(quarantine_after=2))
+    s = pool.slots[0]
+    pool.record_failure(s)
+    pool.record_success(s, 0.1)
+    pool.record_failure(s)
+    assert not s.quarantined        # never two in a row
+    pool.close()
+
+
+def test_probation_cycle_restore_and_rebench():
+    pool = DevicePool(2, health=DeviceHealthConfig(quarantine_after=1,
+                                                   probation_after=2))
+    bad = pool.slots[1]
+    pool.record_failure(bad)
+    assert bad.quarantined and not bad.probation
+    assert pool.probe_candidate() is None
+    pool.begin_dispatch()
+    assert pool.probe_candidate() is None     # cooldown not yet aged out
+    pool.begin_dispatch()
+    assert pool.probe_candidate() is bad      # probe-eligible
+    # dirty probe: re-benched, cooldown restarts
+    pool.record_probe(bad)
+    pool.record_failure(bad)
+    assert bad.quarantined and not bad.probation and bad.probes == 1
+    pool.begin_dispatch()
+    pool.begin_dispatch()
+    assert pool.probe_candidate() is bad
+    # clean probe: restored to the healthy set
+    pool.record_probe(bad)
+    pool.record_success(bad, 0.2)
+    assert not bad.quarantined and bad.restores == 1
+    assert pool.n_healthy() == 2
+    pool.close()
+
+
+def test_record_latency_updates_ewma_only():
+    pool = DevicePool(1)
+    s = pool.slots[0]
+    pool.record_failure(s)
+    before = s.consec_failures
+    pool.record_latency(s, 0.25)
+    assert s.ewma_latency_s == 0.25
+    assert s.consec_failures == before        # health untouched
+    pool.close()
+
+
+def test_pool_snapshot_shape():
+    pool = DevicePool(2)
+    snap = pool.snapshot()
+    assert snap["size"] == 2 and snap["healthy"] == 2
+    assert len(snap["slots"]) == 2
+    assert snap["slots"][0]["name"] == "sim:0"
+    pool.close()

@@ -171,6 +171,136 @@ def test_expired_deadline_never_reaches_executor(zoo, rng):
 
 
 # ---------------------------------------------------------------------------
+# quarantine probation (per-model, poolless backends)
+# ---------------------------------------------------------------------------
+
+def test_probation_restores_clean_backend(zoo, rng):
+    """A quarantined backend that has served its probation gets ONE
+    verified offload probe; a clean probe restores offload (the seed
+    quarantined forever)."""
+    from repro.core.integrity import IntegrityPolicy
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0,
+                                        probation_after=2))
+    entry = engine.register_model("vgg16", cfg, params,
+                                  integrity=IntegrityPolicy.full(1))
+    try:
+        # manufacture the post-quarantine state on an HONEST backend
+        entry.quarantined = True
+        entry.trusted_streak = 2               # probation served
+        req, key = _request(cfg, 300, rng)
+        resp = engine.submit("vgg16", req).result(timeout=300)
+        assert resp.ok and not resp.flagged
+        assert not entry.quarantined           # probe was clean: restored
+        assert entry.probations == 1 and entry.restores == 1
+        snap = engine.stats.snapshot(engine)
+        assert snap["integrity"]["probations"] == 1
+        assert snap["integrity"]["probation_restores"] == 1
+        assert snap["models"]["vgg16"]["restores"] == 1
+    finally:
+        engine.close()
+
+
+def test_probation_rebenches_dishonest_backend(zoo, rng):
+    """A dirty probe re-quarantines — and the probe batch itself is still
+    recovered (enclave recompute), so no client sees a wrong answer."""
+    from repro.core.integrity import IntegrityPolicy
+    from repro.runtime.faults import DishonestDevice, FaultSpec
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0,
+                                        probation_after=2))
+    entry = engine.register_model(
+        "vgg16", cfg, params, integrity=IntegrityPolicy.full(1),
+        fault=DishonestDevice(FaultSpec("bit_flip")))
+    try:
+        entry.quarantined = True
+        entry.trusted_streak = 2
+        req, key = _request(cfg, 310, rng)
+        resp = engine.submit("vgg16", req).result(timeout=300)
+        assert resp.ok and resp.flagged        # served, device blamed
+        assert entry.quarantined               # dirty probe: benched again
+        assert entry.probations == 1 and entry.restores == 0
+        assert entry.trusted_streak == 0       # probation clock restarted
+        snap = engine.stats.snapshot(engine)
+        assert snap["integrity"]["probations"] == 1
+        assert snap["integrity"]["probation_restores"] == 0
+        assert snap["integrity"]["recomputes"] == 1
+    finally:
+        engine.close()
+
+
+def test_sampled_policy_never_probes(zoo, rng):
+    """A probe routes real client traffic back to a convicted backend, so
+    it is only safe under FULL verification — a sampled policy would let
+    unchecked ops carry corrupt logits to clients and could restore the
+    backend off a lucky probe. Such models stay benched."""
+    from repro.core.integrity import IntegrityPolicy
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0,
+                                        probation_after=1))
+    entry = engine.register_model(
+        "vgg16", cfg, params, integrity=IntegrityPolicy.sampled(0.5))
+    try:
+        entry.quarantined = True
+        entry.trusted_streak = 10              # well past probation
+        req, _ = _request(cfg, 315, rng)
+        resp = engine.submit("vgg16", req).result(timeout=300)
+        assert resp.ok
+        assert entry.quarantined and entry.probations == 0
+        assert engine.stats.trusted_batches == 1
+    finally:
+        engine.close()
+
+
+def test_trusted_streak_counts_toward_probation(zoo, rng):
+    cfg, params = zoo["vgg16"]
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0,
+                                        probation_after=5))
+    entry = engine.register_model("vgg16", cfg, params)
+    try:
+        entry.quarantined = True
+        req, _ = _request(cfg, 320, rng)
+        resp = engine.submit("vgg16", req).result(timeout=300)
+        assert resp.ok
+        assert entry.trusted_streak == 1       # still quarantined, aging
+        assert entry.quarantined and entry.probations == 0
+        assert engine.stats.trusted_batches == 1
+    finally:
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded multi-device models: quarantine is per-DEVICE, not per-model
+# ---------------------------------------------------------------------------
+
+def test_sharded_model_quarantines_device_not_model(zoo, rng):
+    from repro.runtime.devices import DeviceHealthConfig, DevicePool
+    from repro.runtime.faults import DishonestDevice, FaultSpec
+    cfg, params = zoo["vgg16"]
+    pool = DevicePool(2, faults={1: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=1,
+                                                probation_after=10 ** 6))
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0))
+    entry = engine.register_model("vgg16", cfg, params, devices=pool)
+    try:
+        req, _ = _request(cfg, 330, rng)
+        resp = engine.submit("vgg16", req).result(timeout=300)
+        assert resp.ok and resp.flagged
+        assert not entry.quarantined           # model keeps offloading
+        assert pool.slots[1].quarantined       # the bad DEVICE is benched
+        assert not pool.slots[0].quarantined
+        snap = engine.stats.snapshot(engine)
+        assert snap["integrity"]["shard_failures"] >= 1
+        assert snap["integrity"]["shard_retries"] >= 1
+        assert snap["integrity"]["recomputes"] == 0   # shard-local recovery
+        devs = snap["devices"]["vgg16"]["pool"]["slots"]
+        assert devs[1]["quarantined"] and not devs[0]["quarantined"]
+        assert not snap["models"]["vgg16"]["quarantined"]
+    finally:
+        engine.close()
+
+
+# ---------------------------------------------------------------------------
 # session pool
 # ---------------------------------------------------------------------------
 
@@ -195,6 +325,54 @@ def test_session_pool_reuse_guard_trips():
     pool._head = 0                            # simulate a counter rollback
     with pytest.raises(SessionReuseError):
         pool.acquire()
+    pool.close()
+
+
+def test_session_pool_acquire_outruns_refill_thread():
+    """acquire() faster than the refill thread: the ``_head > _next`` bump
+    must keep the prefetch counter ahead so the refill never regenerates
+    an already-issued counter (which the reuse guard would fatally trip
+    on) — the multi-device plane makes burst acquisition the common
+    case."""
+    pool = SessionPool(None, depth=2, background=False)
+    keys = [np.asarray(pool.acquire()).tobytes() for _ in range(7)]
+    assert len(set(keys)) == 7
+    assert pool._next == pool._head == 7          # refill counter caught up
+    pool.prime()                                  # refill resumes from 7
+    more = [np.asarray(pool.acquire()).tobytes() for _ in range(4)]
+    assert len(set(keys + more)) == 11
+    assert pool.stats()["consumed"] == 11
+    pool.close()
+
+
+def test_session_pool_concurrent_acquire_never_reuses():
+    """The reuse guard under concurrent acquire from many threads: every
+    key unique, every acquire checked, no SessionReuseError."""
+    import threading
+    pool = SessionPool(None, depth=4)             # background refill ON
+    n_threads, per_thread = 8, 25
+    out: list = [None] * n_threads
+    errors: list = []
+
+    def worker(i):
+        try:
+            out[i] = [np.asarray(pool.acquire()).tobytes()
+                      for _ in range(per_thread)]
+        except Exception as exc:  # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    issued = [k for ks in out for k in ks]
+    assert len(set(issued)) == n_threads * per_thread
+    s = pool.stats()
+    assert s["consumed"] == n_threads * per_thread
+    assert s["reuse_checked"] == n_threads * per_thread
     pool.close()
 
 

@@ -1,0 +1,296 @@
+"""Sharded multi-device offload plane: bit-exactness vs. the single-device
+executor, shard-local Freivalds detection + single-shard recovery,
+per-device quarantine/probation, straggler hedging, per-step ShardPolicy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import plan as PL
+from repro.core.origami import OrigamiExecutor
+from repro.kernels.limb_matmul.ops import field_matmul
+from repro.models import model as M
+from repro.parallel.offload_sharding import OffloadPlane
+from repro.privacy.data import make_batch
+from repro.runtime.devices import DeviceHealthConfig, DevicePool
+from repro.runtime.faults import DishonestDevice, FaultSpec
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"images": jnp.asarray(make_batch(0, 2, cfg.image_size))}
+    return cfg, params, batch
+
+
+@pytest.fixture(scope="module")
+def ref_logits(vgg):
+    cfg, params, batch = vgg
+    ex = OrigamiExecutor(cfg, params, mode="origami", precompute=True)
+    return np.asarray(ex.infer(batch, session_key=KEY).logits)
+
+
+def _pooled(vgg, pool, **kw):
+    cfg, params, batch = vgg
+    kw.setdefault("mode", "origami")
+    kw.setdefault("precompute", True)
+    return OrigamiExecutor(cfg, params, devices=pool, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the single-device executor (same session keys)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shard", ["rows", "shares"])
+def test_two_device_bit_exact(vgg, ref_logits, shard):
+    cfg, params, batch = vgg
+    pool = DevicePool(2)
+    ex = _pooled(vgg, pool, shard=shard)
+    r = ex.infer(batch, session_key=KEY)
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    n_ops = r.sharding.ops
+    assert n_ops > 0
+    # every shard of every op dispatched AND checked (shard-local
+    # verification is structural to the plane)
+    assert r.sharding.dispatches == 2 * n_ops
+    assert r.sharding.checks == 2 * n_ops
+    assert r.sharding.failures == 0
+    # the precompute ring carried the per-shard fold vectors
+    assert ex.cache is not None and ex.cache.shards == 2
+    pool.close()
+
+
+def test_live_factor_path_bit_exact(vgg, ref_logits):
+    """No precompute cache: shard folds derive live, result unchanged."""
+    pool = DevicePool(2)
+    ex = _pooled(vgg, pool, precompute=False)
+    r = ex.infer(batch=vgg[2], session_key=KEY)
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    pool.close()
+
+
+def test_unfused_impl_bit_exact(vgg):
+    cfg, params, batch = vgg
+    single = OrigamiExecutor(cfg, params, mode="origami", precompute=True,
+                             impl="unfused")
+    want = np.asarray(single.infer(batch, session_key=KEY).logits)
+    pool = DevicePool(2)
+    ex = _pooled(vgg, pool, impl="unfused")
+    got = np.asarray(ex.infer(batch, session_key=KEY).logits)
+    np.testing.assert_array_equal(got, want)
+    pool.close()
+
+
+def test_more_devices_than_rows_bit_exact(vgg, ref_logits):
+    """fc ops have t = batch (2) < 4 shards: empty shards are skipped,
+    result still bit-exact."""
+    pool = DevicePool(4)
+    ex = _pooled(vgg, pool, mode="slalom")      # includes the fc/logits ops
+    single = OrigamiExecutor(vgg[0], vgg[1], mode="slalom", precompute=True)
+    want = np.asarray(single.infer(vgg[2], session_key=KEY).logits)
+    got = np.asarray(ex.infer(vgg[2], session_key=KEY).logits)
+    np.testing.assert_array_equal(got, want)
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# shard-local detection, single-shard retry, per-device quarantine
+# ---------------------------------------------------------------------------
+
+def test_dishonest_device_shard_local_recovery(vgg, ref_logits):
+    pool = DevicePool(2, faults={1: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=100))
+    ex = _pooled(vgg, pool)
+    r = ex.infer(vgg[2], session_key=KEY)
+    # recovered bit-exactly, and every corruption was caught SHARD-locally
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    sh = r.sharding
+    assert sh.failures == sh.ops        # device 1 corrupted its shard of
+    assert sh.retries == sh.failures    # every op; ONLY those shards were
+    assert sh.enclave_shards == 0       # re-dispatched — nothing recomputed
+    assert sh.dispatches == 2 * sh.ops + sh.retries
+    # blame lands on the device, not the op: the op-level report is clean
+    # (no batch-level retry/recompute needed) but the response is flagged
+    assert r.integrity.ok
+    assert sh.flagged
+    assert pool.slots[1].verify_failures == sh.failures
+    assert pool.slots[0].verify_failures == 0
+    pool.close()
+
+
+def test_shares_mode_never_moves_a_share_between_devices(vgg, ref_logits):
+    """A failed share is recomputed by the ENCLAVE, never re-dispatched —
+    a device holding two shares of one op could sum them into the full
+    blinded tensor, the exact reconstruction shares mode exists to
+    prevent."""
+    pool = DevicePool(2, faults={1: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=100))
+    ex = _pooled(vgg, pool, shard="shares")
+    r = ex.infer(vgg[2], session_key=KEY)
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    sh = r.sharding
+    assert sh.failures == sh.ops
+    assert sh.retries == 0                    # confinement: no re-dispatch
+    assert sh.enclave_shards == sh.failures   # enclave recomputed them
+    # the honest device received exactly one share per op
+    assert pool.slots[0].dispatches == sh.ops
+    pool.close()
+
+
+def test_per_device_quarantine_keeps_healthy_serving(vgg, ref_logits):
+    pool = DevicePool(2, faults={1: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=2,
+                                                probation_after=10 ** 6))
+    ex = _pooled(vgg, pool)
+    ex.infer(vgg[2], session_key=KEY)
+    assert pool.slots[1].quarantined
+    assert not pool.slots[0].quarantined
+    # the healthy device alone keeps serving blinded offload, bit-exact,
+    # with no further failures and no enclave fallback
+    before = pool.slots[1].dispatches
+    r = ex.infer(vgg[2], session_key=jax.random.fold_in(KEY, 1))
+    single = OrigamiExecutor(vgg[0], vgg[1], mode="origami", precompute=True)
+    want = np.asarray(single.infer(
+        vgg[2], session_key=jax.random.fold_in(KEY, 1)).logits)
+    np.testing.assert_array_equal(np.asarray(r.logits), want)
+    assert r.sharding.failures == 0 and r.sharding.enclave_shards == 0
+    assert pool.slots[1].dispatches == before     # benched: no traffic
+    pool.close()
+
+
+def test_probation_restores_healed_device(vgg, ref_logits):
+    pool = DevicePool(2, faults={1: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=1,
+                                                probation_after=1))
+    ex = _pooled(vgg, pool)
+    ex.infer(vgg[2], session_key=KEY)
+    assert pool.slots[1].quarantined
+    pool.slots[1].fault = None                    # transient fault heals
+    r = ex.infer(vgg[2], session_key=jax.random.fold_in(KEY, 2))
+    assert r.sharding.probes >= 1
+    assert pool.slots[1].restores == 1
+    assert not pool.slots[1].quarantined          # back in the pool
+    assert pool.n_healthy() == 2
+    pool.close()
+
+
+def test_all_devices_quarantined_enclave_fallback(vgg, ref_logits):
+    pool = DevicePool(1, faults={0: DishonestDevice(FaultSpec("bit_flip"))},
+                      health=DeviceHealthConfig(quarantine_after=1,
+                                                probation_after=10 ** 6))
+    ex = _pooled(vgg, pool)
+    r = ex.infer(vgg[2], session_key=KEY)
+    # no healthy device and no spare to retry on: the enclave computes the
+    # failed shards itself — still bit-exact
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    assert r.sharding.enclave_shards >= 1
+    r2 = ex.infer(vgg[2], session_key=KEY)
+    np.testing.assert_array_equal(np.asarray(r2.logits), ref_logits)
+    assert r2.sharding.dispatches == 0            # fully enclave-resident
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# straggler hedging (plane-level: no executor, tiny shapes)
+# ---------------------------------------------------------------------------
+
+def test_straggler_hedging_duplicates_and_wins():
+    # 4 devices, 1 chronic straggler: the honest majority keeps the
+    # watchdog P50 (and so the hedge deadline) at the fast-device level,
+    # so the straggler's shard gets duplicated and the spare's verified
+    # result wins
+    from repro.core.blinding import blinding_stream
+    x = blinding_stream(jax.random.fold_in(KEY, 1), (32, 16))
+    w = blinding_stream(jax.random.fold_in(KEY, 2), (16, 16))
+    want = np.asarray(field_matmul(x, w))
+    pool = DevicePool(4, sim_delay_s={3: 0.30})
+    plane = OffloadPlane(pool, mode="rows", hedging=True, matmul_impl="ref")
+    for i in range(3):                            # warm the watchdog window
+        jax.block_until_ready(plane.matmul(
+            x, w, session_key=jax.random.fold_in(KEY, 10 + i), op_index=0))
+    got = plane.matmul(x, w, session_key=jax.random.fold_in(KEY, 99),
+                       op_index=0)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert plane.totals.hedges >= 1
+    assert plane.totals.failures == 0
+    pool.close()
+
+
+def test_hedging_off_never_duplicates():
+    from repro.core.blinding import blinding_stream
+    x = blinding_stream(jax.random.fold_in(KEY, 1), (32, 16))
+    w = blinding_stream(jax.random.fold_in(KEY, 2), (16, 16))
+    pool = DevicePool(2, sim_delay_s={1: 0.15})
+    plane = OffloadPlane(pool, mode="rows", hedging=False, matmul_impl="ref")
+    for i in range(4):
+        plane.matmul(x, w, session_key=jax.random.fold_in(KEY, 20 + i),
+                     op_index=0)
+    assert plane.totals.hedges == 0
+    assert plane.totals.dispatches == plane.totals.checks
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# per-step ShardPolicy (plan IR)
+# ---------------------------------------------------------------------------
+
+def test_shard_policy_device_group_restriction(vgg, ref_logits):
+    cfg, params, batch = vgg
+    p = cfg.origami.tier1_layers
+    n = PL.num_blocks(cfg)
+    plan = PL.make_plan(
+        cfg, ["blinded"] * p + ["open"] * (n - p), boundary=p,
+        shard={i: PL.ShardPolicy("rows", devices=(0,)) for i in range(p)})
+    pool = DevicePool(2)
+    ex = OrigamiExecutor(cfg, params, plan=plan, precompute=True,
+                         devices=pool)
+    r = ex.infer(batch, session_key=KEY)
+    np.testing.assert_array_equal(np.asarray(r.logits), ref_logits)
+    assert pool.slots[0].dispatches > 0
+    assert pool.slots[1].dispatches == 0          # excluded by the group
+    pool.close()
+
+
+def test_inert_pool_keeps_jit(vgg):
+    """A pool on an executor whose plan can never shard (scanned family,
+    or no offloaded step) stays inert: the jitted trace is kept and no
+    shard report is produced."""
+    cfg, params, batch = vgg
+    pool = DevicePool(2)
+    ex = OrigamiExecutor(cfg, params, mode="enclave", devices=pool)
+    assert not ex._plane_live                  # no offloaded steps
+    r = ex.infer(batch, session_key=KEY)
+    assert r.sharding is None
+    assert pool.dispatches == 0
+    pool.close()
+    lm = get_smoke("smollm_135m")
+    lm_params = M.init_params(lm, jax.random.PRNGKey(2))
+    pool2 = DevicePool(2)
+    ex2 = OrigamiExecutor(lm, lm_params, mode="origami", devices=pool2)
+    assert not ex2._plane_live                 # scanned family
+    pool2.close()
+
+
+def test_shard_policy_in_digest_and_segments(vgg):
+    cfg = vgg[0]
+    base = PL.compile_mode(cfg, "origami")
+    p = cfg.origami.tier1_layers
+    n = PL.num_blocks(cfg)
+    sharded = PL.make_plan(
+        cfg, ["blinded"] * p + ["open"] * (n - p), boundary=p,
+        shard={0: PL.ShardPolicy("shares")})
+    assert sharded.digest != base.digest
+    # shard-free plans keep their pre-sharding digests (cache keys,
+    # attested measurements)
+    plain = PL.make_plan(cfg, ["blinded"] * p + ["open"] * (n - p),
+                         boundary=p)
+    assert plain.digest == base.digest
+    # a mid-run policy switch splits the blinded segment
+    segs = [s for s in sharded.segments if s.regime == "blinded"]
+    assert len(segs) == 2
+    assert segs[0].shard == PL.ShardPolicy("shares")
+    assert segs[1].shard is None

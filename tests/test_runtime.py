@@ -52,6 +52,26 @@ def test_watchdog_flags_slow_steps():
     assert wd.should_escalate
 
 
+def test_watchdog_median_is_proper_on_even_windows():
+    """The seed's ``sorted(h)[len//2]`` is the UPPER median: on the window
+    [0.1, 0.1, 0.3, 0.3] it returns 0.3, inflating the deadline baseline
+    by 50% — a 0.45 s step would pass a 2× deadline it should breach. The
+    offload plane's hedging deadline keys off this estimate, so the bias
+    was load-bearing."""
+    wd = StepWatchdog(WatchdogConfig(deadline_factor=2.0, warmup_steps=4,
+                                     tolerance=3))
+    t = 0.0
+    for dt in (0.1, 0.3, 0.1, 0.3):
+        wd.start_step(now=t)
+        t += dt
+        wd.end_step(now=t)
+    assert wd.p50 == pytest.approx(0.2)
+    wd.start_step(now=t)
+    assert wd.end_step(now=t + 0.45) is True      # 0.45 > 2 x 0.2
+    # odd-length window now ([0.1, 0.1, 0.3, 0.3, 0.45]): the true middle
+    assert wd.p50 == pytest.approx(0.3)
+
+
 def test_watchdog_resets_on_recovery():
     wd = StepWatchdog(WatchdogConfig(deadline_factor=2.0, warmup_steps=3,
                                      tolerance=3))
