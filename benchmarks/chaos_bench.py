@@ -1,0 +1,217 @@
+"""Liveness chaos suite (BENCH_chaos.json): detection -> recovery latency.
+
+Measures the liveness fault-tolerance plane (DESIGN.md §12) per fault
+class, plus one full engine degradation cycle:
+
+- **per class** (``crash`` / ``hang`` / ``flaky`` / ``brownout``): a 2-slot
+  pool serves sharded blinded matmuls while the class's injector
+  (runtime/faults.py ``UnresponsiveDevice``) is armed on device 0.
+  Detection = steps (and wall seconds) from arming until device 0's
+  circuit breaker OPENs; recovery = steps from disarming until a half-open
+  probe CLOSEs it again. Goodput is verified matmuls/s while the fault is
+  live — the plane must keep serving on the surviving device. ``brownout``
+  never errors and must NOT trip the breaker (its latency inflation is the
+  straggler plane's problem); the suite reports its inflation ratio and
+  asserts zero breaker opens.
+- **engine cycle**: a scripted total blackout (crash dev0 + hang dev1,
+  runtime/chaos.py) against the ServingEngine — batches to first degraded
+  dispatch (detection), batches from disarm to the recovered flag
+  (recovery), end-to-end goodput, and the breaker/degraded transition
+  counters from ``engine.snapshot()``.
+
+Shard-local Freivalds checks stay ON throughout, so every number includes
+verification cost.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+SHAPE = (64, 64, 64)                    # (t, d_in, d_out) — real CPU cost
+STEP_CAP = 24                           # detection/recovery step ceilings
+
+
+def _operands(t: int, d_in: int, d_out: int):
+    from repro.core.blinding import blinding_stream
+    key = jax.random.PRNGKey(0)
+    x = blinding_stream(jax.random.fold_in(key, 1), (t, d_in))
+    w = blinding_stream(jax.random.fold_in(key, 2), (d_in, d_out))
+    return x, w
+
+
+def _steps_until(plane, x, w, op0: int, done, cap: int = STEP_CAP):
+    """(steps, wall_s) of sharded matmuls until ``done()`` (None = cap)."""
+    t0 = time.perf_counter()
+    for i in range(cap):
+        y = plane.matmul(x, w, session_key=jax.random.PRNGKey(op0 + i),
+                         op_index=op0 + i)
+        jax.block_until_ready(y)
+        if done():
+            return i + 1, time.perf_counter() - t0
+    return None, time.perf_counter() - t0
+
+
+def _class_cycle(kind: str, emit) -> Dict:
+    """One arm -> detect -> disarm -> recover cycle for a fault class."""
+    from repro.parallel.offload_sharding import LivenessConfig, OffloadPlane
+    from repro.runtime.devices import (BREAKER_CLOSED, DeviceHealthConfig,
+                                       DevicePool)
+    from repro.runtime.faults import LivenessSpec, UnresponsiveDevice
+
+    t, d_in, d_out = SHAPE
+    x, w = _operands(t, d_in, d_out)
+    pool = DevicePool(2, health=DeviceHealthConfig(breaker_after=2,
+                                                   breaker_cooldown=2))
+    plane = OffloadPlane(pool, mode="rows", hedging=False,
+                         liveness=LivenessConfig(timeout_floor_s=0.1,
+                                                 cold_timeout_s=1.0))
+    slot = pool.slots[0]
+
+    # healthy baseline (also warms jit + the plane's watchdog)
+    laps = []
+    for i in range(6):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            plane.matmul(x, w, session_key=jax.random.PRNGKey(i),
+                         op_index=i))
+        laps.append(time.perf_counter() - t0)
+    healthy_s = float(np.median(laps))
+
+    # brownout stays under the dispatch timeout: never an error, never a
+    # breaker trip — every other class must open the breaker
+    slot.liveness = UnresponsiveDevice(
+        LivenessSpec(kind=kind, delay_s=0.03), seed=7)
+    det_steps, det_s = _steps_until(
+        plane, x, w, 100,
+        lambda: slot.breaker != BREAKER_CLOSED,
+        cap=4 if kind == "brownout" else STEP_CAP)
+    if kind == "brownout":
+        inflation = (det_s / 4) / healthy_s
+        det_steps = None                 # by design: nothing to detect
+
+    # goodput while the fault is live (the surviving device serves)
+    n_fault, fault_s = _steps_until(plane, x, w, 200, lambda: False, cap=6)
+
+    slot.liveness = None
+    rec_steps, rec_s = _steps_until(
+        plane, x, w, 300, lambda: slot.breaker == BREAKER_CLOSED,
+        cap=4 if kind == "brownout" else STEP_CAP)
+    if kind == "brownout":
+        rec_steps = None
+
+    snap = slot.snapshot()
+    pool.close()
+    out = {
+        "detection_steps": det_steps,
+        "detection_s": round(det_s, 4),
+        "recovery_steps": rec_steps,
+        "recovery_s": round(rec_s, 4),
+        "goodput_faulted_sps": round(6 / fault_s, 2),
+        "goodput_healthy_sps": round(1.0 / healthy_s, 2),
+        "crashes": plane.totals.crashes,
+        "timeouts": plane.totals.timeouts,
+        "backoffs": plane.totals.backoffs,
+        "breaker": {k: snap[k] for k in
+                    ("breaker", "breaker_opens", "breaker_probes",
+                     "breaker_closes", "abandons", "available")},
+    }
+    if kind == "brownout":
+        out["latency_inflation"] = round(inflation, 2)
+        assert snap["breaker_opens"] == 0, \
+            "brownout must not trip the circuit breaker"
+    else:
+        assert det_steps is not None, f"{kind} never opened the breaker"
+        assert rec_steps is not None, f"{kind} breaker never re-closed"
+        assert snap["available"], f"{kind} device not re-admitted"
+    emit(f"chaos_{kind}_detect", det_s * 1e6,
+         f"steps={det_steps}_rec={rec_steps}")
+    return out
+
+
+def _engine_cycle(emit) -> Dict:
+    """Scripted total blackout through the ServingEngine: degradation to
+    enclave-only serving, then automatic recovery via breaker probes."""
+    from repro.configs import get_smoke
+    from repro.launch.serve import _sealed_requests
+    from repro.models import model as M
+    from repro.parallel.offload_sharding import LivenessConfig
+    from repro.runtime.chaos import ChaosController, ChaosSchedule
+    from repro.runtime.devices import DeviceHealthConfig, DevicePool
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    name = "vgg16"
+    cfg = get_smoke(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    schedule = ChaosSchedule.parse("dev0.crash@1-2,dev1.hang@1-2")
+    n_batches = schedule.horizon + 8
+
+    pool = DevicePool(2, health=DeviceHealthConfig(breaker_after=2,
+                                                   breaker_cooldown=2))
+    chaos = ChaosController(schedule)
+    engine = ServingEngine(EngineConfig(max_batch=1, max_wait_ms=10.0))
+    engine.register_model(name, cfg, params, mode="origami",
+                          devices=pool, shard="rows",
+                          liveness=LivenessConfig(cold_timeout_s=2.0),
+                          chaos=chaos)
+    reqs, _ = _sealed_requests(cfg, n_batches)
+
+    t0 = time.perf_counter()
+    first_degraded = first_recovered = None
+    ok = 0
+    for j in range(n_batches):
+        resp = engine.submit(name, reqs[j]).result(timeout=120)
+        ok += resp.ok
+        degraded = engine.snapshot()["models"][name]["degraded"]
+        if degraded and first_degraded is None:
+            first_degraded = j
+        if (first_degraded is not None and not degraded
+                and first_recovered is None):
+            first_recovered = j
+    dt = time.perf_counter() - t0
+
+    snap = engine.snapshot()
+    slots = next(iter(snap["devices"].values()))["pool"]["slots"]
+    engine.close()
+    fault_start = min(ev.start for ev in schedule.events)
+    assert first_degraded is not None, "blackout never degraded the engine"
+    assert first_recovered is not None, "engine never recovered"
+    assert ok == n_batches, f"only {ok}/{n_batches} served under chaos"
+    out = {
+        "schedule": str(schedule),
+        "batches": n_batches,
+        "detection_batches": first_degraded - fault_start,
+        "recovery_batches": first_recovered - schedule.horizon,
+        "first_degraded_batch": first_degraded,
+        "first_recovered_batch": first_recovered,
+        "goodput_rps": round(ok / dt, 2),
+        "liveness": snap["liveness"],
+        "breakers": [{k: s[k] for k in
+                      ("name", "breaker", "breaker_opens",
+                       "breaker_closes", "available")} for s in slots],
+    }
+    emit("chaos_engine_cycle", dt * 1e6,
+         f"degraded@{first_degraded}_recovered@{first_recovered}")
+    return out
+
+
+def run_suite(emit) -> Dict:
+    from repro.runtime.faults import LIVENESS_KINDS
+    results: Dict[str, Dict] = {
+        "config": {"shape": dict(zip(("t", "d_in", "d_out"), SHAPE)),
+                   "breaker_after": 2, "breaker_cooldown": 2},
+        "classes": {},
+    }
+    for kind in LIVENESS_KINDS:
+        results["classes"][kind] = _class_cycle(kind, emit)
+    results["engine"] = _engine_cycle(emit)
+    return results
+
+
+def run(emit):
+    # the aggregate run skips the (slow) engine cycle
+    from repro.runtime.faults import LIVENESS_KINDS
+    for kind in LIVENESS_KINDS:
+        _class_cycle(kind, emit)

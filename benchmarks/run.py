@@ -64,6 +64,13 @@ def run_offload_suite(out_path: pathlib.Path) -> None:
     print(f"wrote {out_path}", file=sys.stderr)
 
 
+def run_chaos_suite(out_path: pathlib.Path) -> None:
+    from benchmarks import chaos_bench
+    results = chaos_bench.run_suite(emit)
+    out_path.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -71,7 +78,7 @@ def main() -> None:
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--suite",
                     choices=["all", "blinding", "serving", "integrity",
-                             "plans", "offload"],
+                             "plans", "offload", "chaos"],
                     default="all",
                     help="'blinding' runs the fused/precompute matrix into "
                          "BENCH_blinding.json; 'serving' sweeps the engine "
@@ -83,7 +90,10 @@ def main() -> None:
                          "BENCH_plans.json; 'offload' scales the sharded "
                          "multi-device plane over 1/2/4 simulated devices "
                          "(rows vs shares, hedging on/off) into "
-                         "BENCH_offload.json")
+                         "BENCH_offload.json; 'chaos' measures liveness "
+                         "detection->recovery latency per fault class and "
+                         "one engine degradation cycle into "
+                         "BENCH_chaos.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent
@@ -101,6 +111,9 @@ def main() -> None:
         return
     if args.suite == "offload":
         run_offload_suite(root / "BENCH_offload.json")
+        return
+    if args.suite == "chaos":
+        run_chaos_suite(root / "BENCH_chaos.json")
         return
 
     from benchmarks import (blinding_micro, exec_micro, integrity_bench,

@@ -32,3 +32,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --requests 8 --plan mixed --devices 2 --shard rows --inject bit_flip
+# liveness chaos smoke: scripted crash on device 0 + hang on device 1
+# (total blackout), a session-refill fault window and a sealing-
+# corruption window — the drill fails unless every future resolves, the
+# engine degrades to verified enclave-only serving and recovers
+# automatically via breaker half-open probes, seal-window requests are
+# rejected with mac_failed and nothing else, and every served response
+# stays bit-exact vs the healthy oracle (DESIGN.md §12)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --devices 2 --chaos "dev0.crash@1-2,dev1.hang@1-2,refill@7-8,seal@10"

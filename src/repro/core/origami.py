@@ -67,7 +67,7 @@ class OrigamiExecutor:
                  fault: Optional[Any] = None,
                  plan: Optional[PL.PlacementPlan] = None,
                  devices: Optional[Any] = None, shard: str = "rows",
-                 hedging: bool = True):
+                 hedging: bool = True, liveness: Optional[Any] = None):
         """``plan``: an explicit PlacementPlan; when omitted, the legacy
         ``mode``/``partition`` kwargs compile one (``plan.compile_mode``).
         ``integrity``: Freivalds verification policy inherited by blinded
@@ -77,7 +77,9 @@ class OrigamiExecutor:
         injectors instead). ``devices``: a runtime/devices.DevicePool —
         attaches a sharded multi-device offload plane
         (parallel/offload_sharding.py) with default shard ``shard``
-        ("rows" | "shares") and straggler ``hedging``; the plane's
+        ("rows" | "shares"), straggler ``hedging`` and a
+        parallel/offload_sharding.LivenessConfig ``liveness`` (timeout /
+        backoff / breaker knobs, defaults when None); the plane's
         host-side retry/health control flow makes the executor run its
         trace eagerly (bit-identical to the jitted trace). All are static
         — pick them at construction."""
@@ -100,7 +102,8 @@ class OrigamiExecutor:
         self._plane_live = False
         if devices is not None:
             from repro.parallel.offload_sharding import OffloadPlane
-            self.plane = OffloadPlane(devices, mode=shard, hedging=hedging)
+            self.plane = OffloadPlane(devices, mode=shard, hedging=hedging,
+                                      liveness=liveness)
             # the plane only ever fires on per-op-addressable offloaded
             # steps (scanned families and offload-free plans have none) —
             # keep jit for executors whose pool can never shard anything,
@@ -273,8 +276,11 @@ class OrigamiExecutor:
         else:
             factors = self._session_factors(batch, key)
             # the plane's host-side dispatch (retry, hedging, per-device
-            # health) cannot live inside a jit trace — run eagerly, which
-            # the kernels keep bit-identical to the jitted trace
+            # health) cannot live inside a jit trace — run eagerly. The
+            # field kernels are exact either way; the float tier-2 layers
+            # stay bit-identical to the jitted trace for batch >= 2 (XLA
+            # picks a different conv algorithm at batch 1), which is the
+            # regime the cross-checking drills run in
             fn = (self._jitted if jit and not self._plane_live
                   else self._traced)
             if self._plane_live:

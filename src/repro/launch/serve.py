@@ -22,6 +22,15 @@ Usage:
     # keeps offloading on device 0):
     PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
         --models vgg16 --devices 2 --shard rows --inject bit_flip
+
+    # liveness chaos drill (DESIGN.md §12): a scripted schedule crashes
+    # device 0 and hangs device 1 (the engine must degrade to verified
+    # enclave-only serving, then recover automatically via breaker
+    # probes), fails session refills, and corrupts sealed requests in
+    # flight — every future must resolve, the engine must never stop
+    # serving, and every served response must stay bit-exact:
+    PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
+        --models vgg16 --devices 2 --chaos
 """
 from __future__ import annotations
 
@@ -293,6 +302,177 @@ def run_engine(args) -> None:
             raise SystemExit(1)
 
 
+def run_chaos(args) -> None:
+    """Liveness chaos drill (DESIGN.md §12): serial request stream through
+    the engine while a scripted ChaosSchedule crashes/hangs devices, fails
+    session refills and corrupts sealed requests in flight.
+
+    The chaos invariant asserted here: every submitted future resolves,
+    the engine never stops serving (degrading to verified enclave-only
+    when every device is benched, recovering via breaker half-open
+    probes), every non-seal-window response is bit-exact against a
+    healthy single-device oracle, and seal-window requests fail with
+    ``mac_failed`` and nothing else."""
+    from repro.parallel.offload_sharding import LivenessConfig
+    from repro.runtime.chaos import ChaosController, ChaosSchedule
+    from repro.runtime.devices import DeviceHealthConfig, DevicePool
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    get = get_smoke if args.smoke else get_config
+    name = [m.strip() for m in args.models.split(",") if m.strip()][0]
+    cfg = get(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    schedule = ChaosSchedule.parse(args.chaos)
+    dev_events = [ev for ev in schedule.events if ev.layer == "device"]
+    for ev in dev_events:
+        if ev.device >= args.devices:
+            raise SystemExit(f"[chaos] schedule targets dev{ev.device} but "
+                             f"--devices {args.devices}")
+    kinds = {ev.kind for ev in dev_events}
+    refill_scheduled = any(ev.layer == "refill" for ev in schedule.events)
+    seal_batches = {b for ev in schedule.events if ev.layer == "seal"
+                    for b in range(ev.start, ev.stop + 1)}
+    # a batch where EVERY device is under an armed fault must degrade the
+    # engine to enclave-only serving (the assertion below keys off this)
+    blackout = any(
+        {ev.device for ev in dev_events if ev.active(b)}
+        == set(range(args.devices))
+        for b in range(schedule.horizon))
+
+    # 2 requests per chaos batch: the plane's host-side dispatch runs the
+    # trace eagerly, and eager/jitted logits are only bit-identical for
+    # t >= 2 on this backend (XLA picks a different t=1 conv algorithm) —
+    # the same regime the sharded integrity drill above relies on
+    per = 2
+    n_batches = schedule.horizon + args.chaos_margin
+    reqs, keys = _sealed_requests(cfg, per * n_batches)
+    key_by_rid = {r.rid: k for r, k in zip(reqs, keys)}
+
+    # healthy oracle FIRST (chaos mutates seal-window request MACs in
+    # flight, so the oracle must see the pristine boxes), on a genuinely
+    # single-device executor so a plane bug can't corrupt both sides
+    # alike; grouped in the engine's exact batches
+    oracle = PrivateInferenceServer(cfg, params, mode=args.mode,
+                                    max_batch=per)
+    want = {}
+    for j in range(n_batches):
+        for r in oracle.serve_batch(reqs[per * j:per * (j + 1)]):
+            assert r.ok, f"oracle failed on rid={r.rid}"
+            want[r.rid] = PrivateInferenceServer.client_open(
+                key_by_rid[r.rid], r.box, (cfg.num_classes,))
+
+    pool = DevicePool(args.devices,
+                      health=DeviceHealthConfig(breaker_after=2,
+                                                breaker_cooldown=2))
+    chaos = ChaosController(schedule)
+    engine = ServingEngine(EngineConfig(max_batch=per, max_wait_ms=50.0))
+    engine.register_model(name, cfg, params, mode=args.mode,
+                          devices=pool, shard=args.shard,
+                          liveness=LivenessConfig(cold_timeout_s=2.0),
+                          chaos=chaos)
+    print(f"[chaos] schedule={schedule} horizon={schedule.horizon} "
+          f"batches={n_batches}x{per} devices={args.devices}")
+
+    t0 = time.time()
+    timeline, ok_served = [], 0
+    for j in range(n_batches):
+        futs = [engine.submit(name, r) for r in reqs[per * j:per * (j + 1)]]
+        resps = [f.result(timeout=120) for f in futs]
+        snap = engine.snapshot()
+        degraded = snap["models"][name]["degraded"]
+        timeline.append((j, resps, degraded))
+        ok_served += sum(r.ok for r in resps)
+        if refill_scheduled and any(
+                ev.layer == "refill" and ev.active(j)
+                for ev in schedule.events):
+            # the refill thread is async: give it a beat to hit the armed
+            # window (bounded — the drill stays deterministic in outcome)
+            for _ in range(40):
+                if chaos.refill_faults > 0:
+                    break
+                time.sleep(0.05)
+        time.sleep(args.chaos_pace)
+    dt = time.time() - t0
+
+    snap = engine.snapshot()
+    liv = snap["liveness"]
+    slots = next(iter(snap["devices"].values()))["pool"]["slots"]
+    marks = "".join("D" if d else ("X" if not all(r.ok for r in rs)
+                                   else ".")
+                    for _, rs, d in timeline)
+    print(f"[chaos] timeline [{marks}]  (.=ok D=degraded X=rejected)")
+    for b, label, action in chaos.log:
+        print(f"[chaos]   batch {b}: {action} {label}")
+    print(f"[chaos] {ok_served}/{per * n_batches} ok in {dt:.1f}s "
+          f"(goodput {ok_served / dt:.1f} req/s) liveness={liv} "
+          f"refill_errors={snap['refill_errors']} "
+          f"seal_corruptions={chaos.seal_corruptions}")
+    for s in slots:
+        print(f"[chaos]   {s['name']}: breaker={s['breaker']} "
+              f"opens={s['breaker_opens']} probes={s['breaker_probes']} "
+              f"closes={s['breaker_closes']} abandons={s['abandons']} "
+              f"available={s['available']}")
+    engine.close()
+
+    # the chaos invariant, clause by clause
+    fails = []
+    if chaos.batch != n_batches - 1:
+        fails.append(f"chaos clock drift: controller saw batch "
+                     f"{chaos.batch}, drill drove {n_batches} "
+                     f"(partial flush?) — scripted windows shifted")
+    for j, resps, _ in timeline:
+        for resp in resps:
+            if j in seal_batches:
+                if resp.ok or resp.error != "mac_failed":
+                    fails.append(f"batch {j} rid={resp.rid}: seal-window "
+                                 f"request not rejected with mac_failed "
+                                 f"(ok={resp.ok}, error={resp.error})")
+            elif not resp.ok:
+                fails.append(f"batch {j} rid={resp.rid}: rejected outside "
+                             f"any seal window (error={resp.error})")
+            elif not np.array_equal(
+                    PrivateInferenceServer.client_open(
+                        key_by_rid[resp.rid], resp.box,
+                        (cfg.num_classes,)),
+                    want[resp.rid]):
+                fails.append(f"batch {j} rid={resp.rid}: logits not "
+                             f"bit-exact vs oracle")
+    if blackout:
+        if liv["degradations"] == 0:
+            fails.append("total device blackout never degraded the engine "
+                         "to enclave-only serving")
+        if liv["recoveries"] == 0 or snap["models"][name]["degraded"]:
+            fails.append("engine did not recover from degraded mode")
+    if "crash" in kinds and liv["shard_crashes"] == 0:
+        fails.append("crash scheduled but no shard crash contained")
+    if "hang" in kinds and liv["shard_timeouts"] == 0:
+        fails.append("hang scheduled but no dispatch timeout fired")
+    if dev_events:
+        if not any(s["breaker_opens"] > 0 for s in slots):
+            fails.append("device faults scheduled but no breaker opened")
+        bad = [s["name"] for s in slots if not s["available"]]
+        if bad:
+            fails.append(f"devices still benched after recovery margin: "
+                         f"{bad}")
+    if refill_scheduled and (chaos.refill_faults == 0
+                             or snap["refill_errors"] == 0):
+        fails.append("refill faults scheduled but none contained")
+    if seal_batches and chaos.seal_corruptions == 0:
+        fails.append("seal corruption scheduled but never applied")
+    if chaos.snapshot()["armed"]:
+        fails.append(f"events still armed: {chaos.snapshot()['armed']}")
+    for f in fails:
+        print(f"[chaos] FAIL: {f}")
+    if fails:
+        raise SystemExit(1)
+    print("[chaos] OK: every future resolved, degradation/recovery as "
+          "scheduled, all served logits bit-exact")
+
+
+DEFAULT_CHAOS = "dev0.crash@1-2,dev1.hang@1-2,refill@7-8,seal@10"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vgg16")
@@ -342,9 +522,22 @@ def main():
     ap.add_argument("--inject-device", type=int, default=None,
                     help="with --devices, the slot --inject corrupts "
                          "(default: the last device)")
+    ap.add_argument("--chaos", nargs="?", const=DEFAULT_CHAOS, default=None,
+                    help="liveness chaos drill (runtime/chaos.py): a "
+                         "scripted schedule like "
+                         "'dev0.crash@1-2,dev1.hang@1-2,refill@7-8,seal@10' "
+                         f"(no value = '{DEFAULT_CHAOS}'). Requires "
+                         "--engine and --devices.")
+    ap.add_argument("--chaos-margin", type=int, default=10,
+                    help="recovery batches served past the schedule "
+                         "horizon (breaker half-open probes need a few)")
+    ap.add_argument("--chaos-pace", type=float, default=0.02,
+                    help="inter-batch sleep in the chaos drill")
     args = ap.parse_args()
     if args.devices and not args.engine:
         ap.error("--devices requires --engine")
+    if args.chaos is not None and (not args.engine or args.devices < 1):
+        ap.error("--chaos requires --engine and --devices >= 1")
 
     if args.requests is None:
         args.requests = 32 if args.engine else 16
@@ -353,6 +546,9 @@ def main():
         names = ([m.strip() for m in args.models.split(",") if m.strip()]
                  if args.engine else [args.model])
         _print_plans(names, get)
+        return
+    if args.chaos is not None:
+        run_chaos(args)
         return
     if args.engine:
         run_engine(args)

@@ -43,6 +43,34 @@ P50 is duplicated onto the fastest spare healthy device and the first
 shard reveals nothing new to the spare device). The loser's latency still
 feeds its EWMA so placement learns to avoid chronic stragglers.
 
+**Liveness recovery ladder (DESIGN.md §12).** The integrity ladder above
+handles devices that return *wrong* results; this plane also survives
+devices that return *none*:
+
+- **exception containment**: a dispatch that raises (crash, cancelled
+  queue) resolves as a liveness failure of that DEVICE — the exception
+  never propagates into the batch, and only that shard re-dispatches;
+- **hard per-dispatch timeout**: ``liveness.timeout_factor`` × the same
+  watchdog P50 the hedge uses (with a floor, and a ``cold_timeout_s``
+  fallback before warmup). A dispatch past it is abandoned — the slot's
+  wedged queue is cut loose (``DeviceSlot.abandon``) so a hung worker
+  never blocks later probes — and the shard re-dispatches;
+- **exponential backoff with jitter** between liveness re-dispatches of
+  one shard (transient flake storms de-synchronize instead of stampeding);
+- **per-device circuit breaker**: ``breaker_after`` consecutive liveness
+  failures open the slot's breaker (no traffic); after a cooldown it
+  half-opens and ONE probe shard is routed — a verified success closes
+  it, failure re-opens with doubled cooldown. Distinct from the
+  integrity quarantine; the two compose (a slot serves only when neither
+  indicts it).
+
+As with integrity, the enclave computes the shard itself when every
+eligible device is exhausted — so **every submitted matmul resolves**
+under any liveness fault schedule, and the assembled result stays
+bit-identical (recovered shards are recomputed from the same operands).
+In ``shares`` mode the confinement rule still applies: a crashed or
+timed-out share goes straight to the enclave, never to a second device.
+
 Host-side control flow (retry, hedging, health) cannot live inside a jit
 trace — an executor with a pool runs its plan interpreter eagerly
 (core/origami.py), which PR 1's kernels make bit-identical to the jitted
@@ -52,6 +80,7 @@ same per-op addressability limit as precompute/verification).
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, wait
@@ -63,6 +92,7 @@ import jax.numpy as jnp
 from repro.core import blinding as B
 from repro.core import integrity as IG
 from repro.core.plan import SHARD_MODES
+from repro.runtime import faults as FT
 from repro.kernels.limb_matmul.ops import field_matmul
 from repro.kernels.limb_matmul.ref import P
 from repro.runtime.devices import DevicePool, DeviceSlot
@@ -72,6 +102,26 @@ from repro.runtime.straggler import StepWatchdog, WatchdogConfig
 # their own sub-spaces, disjoint from blinding/verify/fault streams
 SHARE_DOMAIN = 0x5A8E
 _SHARD_FAULT = 0x51
+
+
+@dataclasses.dataclass
+class LivenessConfig:
+    """Liveness-ladder knobs (per plane; DESIGN.md §12 tabulates them).
+
+    The hard timeout shares the StepWatchdog baseline with hedging:
+    ``timeout_factor × P50`` once the window is warm (floored — a
+    sub-millisecond P50 must not turn scheduler jitter into abandons),
+    ``cold_timeout_s`` before that. Backoff sleeps
+    ``base × factor^attempt × (1 + jitter·u)`` between liveness
+    re-dispatches of one shard, u deterministic in (op, shard, attempt).
+    """
+    timeout_factor: float = 8.0
+    timeout_floor_s: float = 0.25
+    cold_timeout_s: float = 10.0
+    backoff_base_s: float = 0.005
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 0.25
+    backoff_jitter: float = 0.5
 
 
 @dataclasses.dataclass
@@ -85,6 +135,11 @@ class ShardReport:
     hedges: int = 0                 # straggler duplicates launched
     enclave_shards: int = 0         # shards the enclave computed itself
     probes: int = 0                 # probation probes routed
+    # liveness ladder (DESIGN.md §12)
+    crashes: int = 0                # dispatches that raised (contained)
+    timeouts: int = 0               # dispatches abandoned past the deadline
+    backoffs: int = 0               # backoff sleeps between re-dispatches
+    breaker_probes: int = 0         # half-open liveness probes routed
 
     @property
     def flagged(self) -> bool:
@@ -148,11 +203,13 @@ class OffloadPlane:
     def __init__(self, pool: DevicePool, *, mode: str = "rows",
                  hedging: bool = True,
                  watchdog: Optional[StepWatchdog] = None,
-                 matmul_impl: Optional[str] = None):
+                 matmul_impl: Optional[str] = None,
+                 liveness: Optional[LivenessConfig] = None):
         assert mode in SHARD_MODES, mode
         self.pool = pool
         self.mode = mode
         self.hedging = hedging
+        self.liveness = liveness or LivenessConfig()
         # kernels/limb_matmul/ops.field_matmul impl override for the shard
         # matmuls (None = auto). Simulated pools on CPU want "ref": the
         # interpreted-Pallas path auto picks for large shapes is
@@ -190,23 +247,45 @@ class OffloadPlane:
 
     def _hedge_deadline(self) -> Optional[float]:
         with self._lock:
-            wd = self.watchdog
-            if len(wd.history) < wd.cfg.warmup_steps:
-                return None
-            p50 = wd.p50
-        if p50 is None:
-            return None
-        return max(wd.cfg.deadline_factor * p50, 1e-4)
+            return self.watchdog.deadline(floor=1e-4)
+
+    def _dispatch_timeout(self) -> float:
+        """Hard liveness deadline for one shard dispatch: same watchdog
+        baseline as the hedge, larger factor + a floor (a hedge fires a
+        duplicate; a timeout indicts the device)."""
+        lv = self.liveness
+        with self._lock:
+            return self.watchdog.deadline(factor=lv.timeout_factor,
+                                          floor=lv.timeout_floor_s,
+                                          cold=lv.cold_timeout_s)
+
+    def _backoff(self, task: _ShardTask, attempt: int) -> None:
+        """Sleep before liveness re-dispatch attempt ``attempt`` of one
+        shard: exponential with deterministic jitter in (op, shard,
+        attempt) — a flake storm across shards de-synchronizes instead of
+        stampeding the surviving devices."""
+        lv = self.liveness
+        u = random.Random(FT.stable_seed(task.op_index, task.index,
+                                         attempt)).random()
+        dt = min(lv.backoff_base_s * (lv.backoff_factor ** attempt),
+                 lv.backoff_max_s) * (1.0 + lv.backoff_jitter * u)
+        self._record(backoffs=1)
+        time.sleep(dt)
 
     def _device_run(self, slot: DeviceSlot, task: _ShardTask,
                     w_q: jax.Array):
         """Runs ON the slot's worker thread: the untrusted device's half.
 
         Returns (y_field, wall_s). The slot's fault injector corrupts the
-        result exactly where a byzantine accelerator would; the latency
-        model (sim_gflops / sim_delay_s) sleeps out the modeled compute
-        time so hedging and the bench see realistic wall clocks."""
+        result exactly where a byzantine accelerator would; the liveness
+        injector crashes/parks/delays the dispatch exactly where a dead
+        or braked device would; the latency model (sim_gflops /
+        sim_delay_s) sleeps out the modeled compute time so hedging and
+        the bench see realistic wall clocks."""
         t0 = time.perf_counter()
+        if slot.liveness is not None:
+            slot.liveness.perturb(op_index=task.op_index,
+                                  cancel=slot.cancel)
         x = task.x
         if slot.jax_device is not None:
             x = jax.device_put(x, slot.jax_device)
@@ -236,53 +315,109 @@ class OffloadPlane:
                        primary: DeviceSlot, fut,
                        spares: Sequence[DeviceSlot]) -> jax.Array:
         """One shard, submitted ``fut`` to verified finish: hedge onto the
-        first spare past the straggler deadline, retry failed checks down
-        the spare list, enclave-compute as last resort. (All shards'
-        primaries are submitted BEFORE any is resolved — ``matmul`` —
-        so distinct devices genuinely overlap.)"""
-        futures = {fut: primary}
+        first spare past the straggler deadline, contain crashes, abandon
+        dispatches past the hard liveness timeout, retry failures
+        (integrity or liveness) down the spare list, enclave-compute as
+        last resort. (All shards' primaries are submitted BEFORE any is
+        resolved — ``matmul`` — so distinct devices genuinely overlap.)"""
+        futures: Dict[object, Tuple[DeviceSlot, float]] = {
+            fut: (primary, time.perf_counter())}
         spares = list(spares)
         hedged = False
-        deadline = self._hedge_deadline()
+        attempt = 0                    # liveness re-dispatches of this shard
+        hedge_deadline = self._hedge_deadline()
+
+        def next_spare() -> Optional[DeviceSlot]:
+            # re-check health at use time: the spares list was captured
+            # before this op's earlier shards may have indicted one of them
+            busy = {sl for sl, _ in futures.values()}
+            return next((s for s in spares
+                         if s.available and s not in busy), None)
+
+        def redispatch() -> bool:
+            """Backoff, then re-submit this shard to the next spare."""
+            nonlocal attempt
+            retry = next_spare()
+            if retry is None:
+                return False
+            spares.remove(retry)
+            attempt += 1
+            self._backoff(task, attempt)
+            futures[retry.submit(self._device_run, task, w_q)] = (
+                retry, time.perf_counter())
+            self._record(dispatches=1, retries=1)
+            return True
+
         while futures:
-            done, _ = wait(list(futures), timeout=deadline,
+            hard = self._dispatch_timeout()
+            now = time.perf_counter()
+            wait_t = min(max(t0 + hard - now, 0.0)
+                         for _, t0 in futures.values())
+            if not hedged and hedge_deadline is not None:
+                wait_t = min(wait_t, hedge_deadline)
+            done, _ = wait(list(futures), timeout=wait_t,
                            return_when=FIRST_COMPLETED)
-            if not done:                       # straggler: duplicate once
-                # re-check quarantine at use time: the spares list was
-                # captured before this op's earlier shards may have
-                # benched one of them
-                spare = next((s for s in spares if not s.quarantined
-                              and s not in futures.values()), None)
+            if not done:
+                now = time.perf_counter()
+                expired = [f for f, (_, t0) in futures.items()
+                           if now - t0 >= hard]
+                if expired:
+                    # hard liveness timeout: indict the device, cut its
+                    # wedged queue loose so later probes never line up
+                    # behind the hung dispatch, re-dispatch elsewhere
+                    for f in expired:
+                        slot, _ = futures.pop(f)
+                        self._record(timeouts=1)
+                        self.pool.record_liveness_failure(slot)
+                        slot.abandon()
+                    if not futures and not redispatch():
+                        self._record(enclave_shards=1)
+                        return field_matmul(task.x, w_q)
+                    continue
+                # straggler (still inside the hard deadline): hedge once
+                spare = next_spare()
                 if self.hedging and not hedged and spare is not None:
                     hedged = True
                     spares.remove(spare)
-                    futures[spare.submit(self._device_run, task, w_q)] = spare
+                    futures[spare.submit(self._device_run, task, w_q)] = (
+                        spare, time.perf_counter())
                     self._record(dispatches=1, hedges=1)
-                deadline = None                # wait for whoever finishes
+                hedge_deadline = None  # hard expiries drive the waits now
                 continue
             fut = next(iter(done))
-            slot = futures.pop(fut)
-            y, dt = fut.result()
+            slot, _ = futures.pop(fut)
+            try:
+                y, dt = fut.result()
+            except Exception:  # noqa: BLE001 — crash containment (§12)
+                # the dispatch raised (injected crash, driver error,
+                # abandoned-queue cancellation): a liveness failure of the
+                # DEVICE, contained here — it never reaches the batch
+                self._record(crashes=1)
+                self.pool.record_liveness_failure(slot)
+                if not futures and not redispatch():
+                    self._record(enclave_shards=1)
+                    return field_matmul(task.x, w_q)
+                continue
             self._observe_latency(dt)
             self._record(checks=1)
             if self._shard_ok(y, task):
                 self.pool.record_success(slot, dt)
                 # a hedge loser still teaches the EWMA its wall time
-                for f, s in futures.items():
+                for f, (s, _) in futures.items():
                     f.add_done_callback(
                         lambda f_, s_=s: self._late_latency(f_, s_))
                 return y
             self._record(failures=1)
             self.pool.record_failure(slot)
             if not futures:                    # re-dispatch THIS shard only
-                retry = next((s for s in spares if not s.quarantined), None)
+                retry = next_spare()
                 if retry is None:
                     self._record(enclave_shards=1)
                     return field_matmul(task.x, w_q)
                 spares.remove(retry)
-                futures[retry.submit(self._device_run, task, w_q)] = retry
+                futures[retry.submit(self._device_run, task, w_q)] = (
+                    retry, time.perf_counter())
                 self._record(dispatches=1, retries=1)
-                deadline = None
         raise AssertionError("unreachable: shard loop exited without result")
 
     def _late_latency(self, fut, slot: DeviceSlot) -> None:
@@ -340,8 +475,16 @@ class OffloadPlane:
 
         healthy = self.pool.healthy(group)
         probe = self.pool.probe_candidate(group)
+        bprobe = self.pool.breaker_candidate(group)
         probe_j = max((j for j, tk in enumerate(tasks) if tk is not None),
                       default=None)
+        # the liveness probe rides the lowest shard so the two probe kinds
+        # never collide; with a single shard the integrity probe wins and
+        # the breaker probe waits for the next op
+        bprobe_j = min((j for j, tk in enumerate(tasks) if tk is not None),
+                       default=None)
+        if probe is not None and bprobe_j == probe_j:
+            bprobe = None
         results: List[Optional[jax.Array]] = [None] * n
         # submit EVERY shard's primary before resolving any — shards on
         # distinct devices overlap; resolution (verify/hedge/retry) then
@@ -357,6 +500,12 @@ class OffloadPlane:
                 # device; a clean check restores it, a failed one re-benches
                 # it and the shard retries on the healthy list as usual
                 primary, spares = probe, list(healthy)
+            elif bprobe is not None and j == bprobe_j:
+                # the breaker probe: one shard on the half-open device; a
+                # verified success closes the breaker (record_success), a
+                # crash/timeout re-opens it with a doubled cooldown and the
+                # shard retries on the healthy list / enclave as usual
+                primary, spares = bprobe, list(healthy)
             elif healthy:
                 if mode == "shares":
                     # a device may hold AT MOST ONE share of an op —
@@ -380,6 +529,9 @@ class OffloadPlane:
             if primary is probe:
                 self.pool.record_probe(primary)
                 self._record(probes=1)
+            elif primary is bprobe:
+                self.pool.record_breaker_probe(primary)
+                self._record(breaker_probes=1)
             fut = primary.submit(self._device_run, task, w_q)
             self._record(dispatches=1)
             pending.append((j, task, primary, fut, spares))

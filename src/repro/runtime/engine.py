@@ -21,6 +21,20 @@ layer Privado-style systems put in front of enclave inference:
   a smoke LM) concurrently, each with its own OrigamiExecutor, attestation
   quote, blinding ``SessionPool`` (runtime/sessions.py) and partition plan
   from ``core/planner.py``.
+- **graceful degradation** (DESIGN.md §12): a model whose DevicePool has
+  zero serving-eligible slots (every device quarantined or breaker-open)
+  falls back to verified enclave-only dispatch (``trusted=True``) with a
+  ``degraded`` flag in EngineStats/snapshot — the service keeps answering,
+  bit-exact, at enclave speed. Degraded batches still age the pool's
+  bench cooldowns; the moment a breaker half-opens (or a quarantined slot
+  reaches probation) the engine routes a blinded dispatch again so the
+  plane's probe can re-admit the device, and a successful probe clears
+  the flag automatically.
+- **draining shutdown**: ``close()`` stops admission, lets the batcher
+  flush everything already queued (bounded by the plane's liveness
+  timeouts), force-resolves anything left with an explicit ``shutdown``
+  error, and only then stops session pools and device queues — no future
+  is ever left pending and no dispatched work is orphaned.
 
 Batches execute on the single batcher thread (the enclave executes one
 batch at a time; JAX async dispatch still overlaps the session pool's
@@ -95,6 +109,13 @@ class _ModelEntry:
     trusted_streak: int = 0              # trusted batches since quarantine
     probations: int = 0                  # probe dispatches attempted
     restores: int = 0                    # probes that re-admitted offload
+    # liveness / degradation bookkeeping (batcher thread only, §12)
+    batches: int = 0                     # dispatches (the chaos clock)
+    degraded: bool = False               # pool empty: enclave-only serving
+    degradations: int = 0                # healthy -> degraded transitions
+    recoveries: int = 0                  # degraded -> healthy transitions
+    degraded_batches: int = 0            # batches served enclave-only
+    chaos: Optional[object] = None       # runtime/chaos.ChaosController
 
 
 class EngineStats:
@@ -129,6 +150,13 @@ class EngineStats:
         self.shard_enclave = 0           # shards the enclave computed
                                          # (shares-mode recovery, or every
                                          # device exhausted)
+        # liveness plane counters (DESIGN.md §12)
+        self.shard_crashes = 0           # contained dispatch exceptions
+        self.shard_timeouts = 0          # dispatches abandoned past deadline
+        self.degradations = 0            # models entering enclave-only mode
+        self.recoveries = 0              # models recovering a device
+        self.degraded_batches = 0        # batches served enclave-only
+        self.shutdown_drops = 0          # futures force-resolved at close
         self.start_t = time.monotonic()
         self.first_batch_t: Optional[float] = None
         self.latencies: Deque[float] = deque(maxlen=self.LAT_WINDOW)
@@ -196,6 +224,14 @@ class EngineStats:
                 "shard_hedges": self.shard_hedges,
                 "shard_enclave": self.shard_enclave,
             }
+            out["liveness"] = {
+                "shard_crashes": self.shard_crashes,
+                "shard_timeouts": self.shard_timeouts,
+                "degradations": self.degradations,
+                "recoveries": self.recoveries,
+                "degraded_batches": self.degraded_batches,
+                "shutdown_drops": self.shutdown_drops,
+            }
         # per-device health of every model running a sharded offload plane
         # (quarantine is per-DEVICE there, not per-model)
         out["devices"] = {
@@ -204,6 +240,11 @@ class EngineStats:
             if e.executor.plane is not None}
         out["sessions"] = {name: e.pool.stats()
                            for name, e in engine.models.items()}
+        # a persistently failing refill thread silently puts every factor
+        # matmul back on the hot path — surface it at the top level too,
+        # not just per-model under "sessions"
+        out["refill_errors"] = sum(s["refill_errors"]
+                                   for s in out["sessions"].values())
         # offload counters read the *blinded*-trace snapshot so a recovery
         # (trusted) trace can never pollute them; trusted_matmuls reads the
         # trusted-trace snapshot for the same reason
@@ -231,7 +272,11 @@ class EngineStats:
                        e.executor.telemetry_trusted.trusted_matmuls,
                    "integrity_failures": e.integrity_failures,
                    "quarantined": e.quarantined,
-                   "probations": e.probations, "restores": e.restores}
+                   "probations": e.probations, "restores": e.restores,
+                   "degraded": e.degraded,
+                   "degradations": e.degradations,
+                   "recoveries": e.recoveries,
+                   "degraded_batches": e.degraded_batches}
             for name, e in engine.models.items()}
         return out
 
@@ -269,7 +314,8 @@ class ServingEngine:
                        integrity=None, fault=None,
                        placement: Optional[PlacementPlan] = None,
                        devices=None, shard: str = "rows",
-                       hedging: bool = True) -> _ModelEntry:
+                       hedging: bool = True, liveness=None,
+                       chaos=None) -> _ModelEntry:
         """Build an executor for ``name`` and admit it to the registry.
 
         ``placement``: an explicit per-layer PlacementPlan (core/plan.py)
@@ -285,7 +331,11 @@ class ServingEngine:
         count — attaches the sharded multi-device offload plane
         (parallel/offload_sharding.py) with default shard geometry
         ``shard`` and straggler ``hedging``; quarantine then becomes
-        per-device (the pool's) instead of per-model.
+        per-device (the pool's) instead of per-model. ``liveness``: a
+        parallel/offload_sharding.LivenessConfig for the plane's
+        timeout/backoff/breaker ladder. ``chaos``: a runtime/chaos
+        ChaosController — its schedule is advanced once per dispatched
+        batch of this model (the drill clock).
         """
         if isinstance(devices, int):
             from repro.runtime.devices import DevicePool
@@ -298,10 +348,12 @@ class ServingEngine:
                                        precompute=precompute,
                                        integrity=integrity, fault=fault,
                                        plan=placement, devices=devices,
-                                       shard=shard, hedging=hedging)
+                                       shard=shard, hedging=hedging,
+                                       liveness=liveness)
             return self.register_executor(name, executor,
                                           input_key=input_key,
-                                          input_dtype=input_dtype, plan=plan)
+                                          input_dtype=input_dtype, plan=plan,
+                                          chaos=chaos)
         if planner is None and privacy_floor is not None:
             planner = PartitionPlanner(privacy_floor=privacy_floor)
         if planner is not None or partition is not None:
@@ -316,15 +368,17 @@ class ServingEngine:
                                    precompute=precompute,
                                    integrity=integrity, fault=fault,
                                    devices=devices, shard=shard,
-                                   hedging=hedging)
+                                   hedging=hedging, liveness=liveness)
         return self.register_executor(name, executor, input_key=input_key,
-                                      input_dtype=input_dtype, plan=plan)
+                                      input_dtype=input_dtype, plan=plan,
+                                      chaos=chaos)
 
     def register_executor(self, name: str, executor: OrigamiExecutor, *,
                           input_key: str = "images",
                           input_dtype: Optional[str] = None,
                           plan: Optional[PartitionPlan] = None,
-                          pool: Optional[SessionPool] = None) -> _ModelEntry:
+                          pool: Optional[SessionPool] = None,
+                          chaos=None) -> _ModelEntry:
         """Admit a pre-built executor (the legacy server's compat path)."""
         assert name not in self.models, f"model {name!r} already registered"
         plan = plan or PartitionPlan(executor.cfg.name, executor.mode,
@@ -339,6 +393,12 @@ class ServingEngine:
                                      depth=self.cfg.session_pool_depth),
             plan=plan, placement=executor.plan,
             input_key=input_key, input_dtype=input_dtype)
+        entry.chaos = chaos
+        if chaos is not None:
+            chaos.bind(
+                pool=(executor.plane.pool if executor.plane is not None
+                      else None),
+                sessions=entry.pool)
         with self._lock:
             self.models[name] = entry
         return entry
@@ -365,12 +425,15 @@ class ServingEngine:
             entry = self.models.get(model)
             if entry is None or self._closed:
                 self.stats.rejected += 1
-                fut.set_result(Response(req.rid, None, False, 0.0))
+                fut.set_result(Response(
+                    req.rid, None, False, 0.0,
+                    error="shutdown" if self._closed else "rejected"))
                 return fut
             if (self._in_flight >= self.cfg.max_queue
                     or (model, req.rid) in self._futures):
                 self.stats.rejected += 1
-                fut.set_result(Response(req.rid, None, False, 0.0))
+                fut.set_result(Response(req.rid, None, False, 0.0,
+                                        error="rejected"))
                 return fut
             self._futures[(model, req.rid)] = fut
             bucket_key = (model, tuple(req.shape))
@@ -467,7 +530,8 @@ class ServingEngine:
                 with self.stats.lock:
                     self.stats.expired += 1
                 self._finish(p, Response(p.req.rid, None, False,
-                                         time.monotonic() - p.submit_t))
+                                         time.monotonic() - p.submit_t,
+                                         error="deadline_exceeded"))
             if batch:
                 try:
                     self._dispatch(self.models[batch[0].model], batch)
@@ -484,6 +548,30 @@ class ServingEngine:
         unseal -> MAC-filter -> pad -> infer -> seal pipeline is what keeps
         the engine bit-identical to its legacy oracle."""
         from repro.runtime.serving import Response, execute_sealed_batch
+        # deadline re-check at dispatch time (DESIGN.md §12): formation and
+        # dispatch are back-to-back on the batcher thread, but a slow
+        # previous batch can age this one past its deadline — don't burn
+        # device compute on work nobody can use, and tell the caller why
+        now = time.monotonic()
+        live: List[_Pending] = []
+        for p in batch:
+            if p.deadline_s is not None and now - p.submit_t > p.deadline_s:
+                with self.stats.lock:
+                    self.stats.expired += 1
+                self._finish(p, Response(p.req.rid, None, False,
+                                         now - p.submit_t,
+                                         error="deadline_exceeded"))
+            else:
+                live.append(p)
+        batch = live
+        if not batch:
+            return
+        entry.batches += 1
+        if entry.chaos is not None:
+            # the drill clock: arm/disarm scripted faults for this batch
+            # index (device injectors, refill faults, sealed-box corruption)
+            entry.chaos.on_batch(entry.batches - 1,
+                                 requests=[p.req for p in batch])
         self.watchdog.start_step()
         # probation (poolless models): a quarantined backend that has
         # served ``probation_after`` trusted batches earns ONE verified
@@ -505,12 +593,35 @@ class ServingEngine:
             entry.probations += 1
             with self.stats.lock:
                 self.stats.probations += 1
+        # graceful degradation (DESIGN.md §12): zero serving-eligible
+        # devices (every slot quarantined or breaker-open) means a blinded
+        # dispatch has nowhere to go — serve this batch verified
+        # enclave-only instead. The moment the pool has a probe candidate
+        # (half-open breaker or probation-ripe quarantine) the blinded
+        # path runs again so the plane can route the probe: shards are
+        # always verified, so a recovery attempt is safe with real traffic
+        # (un-routable shards fall to the enclave inside the op).
+        degrade_trusted = False
+        if per_device:
+            dpool = entry.executor.plane.pool
+            can_probe = (dpool.breaker_candidate() is not None
+                         or dpool.probe_candidate() is not None)
+            if dpool.n_available() == 0 and not can_probe:
+                degrade_trusted = True
+                entry.degraded_batches += 1
+                with self.stats.lock:
+                    self.stats.degraded_batches += 1
+                # enclave-only batches still age the pool's cooldowns —
+                # otherwise a fully-benched pool could never reach its
+                # half-open / probation probe state and the degradation
+                # would be permanent
+                dpool.begin_dispatch()
         boxes, n_valid, pad, integ = execute_sealed_batch(
             entry.executor, [p.req for p in batch],
             input_key=entry.input_key, max_batch=self.cfg.max_batch,
             session_key=entry.pool.acquire,   # lazy: only consumed if a
             input_dtype=entry.input_dtype,    # valid request reaches infer
-            trusted=entry.quarantined and not probe,
+            trusted=(entry.quarantined and not probe) or degrade_trusted,
             retry_device=self.cfg.integrity_retry)
         if n_valid:
             self.stats.record_batch(n_valid, pad)
@@ -526,6 +637,8 @@ class ServingEngine:
             self.stats.shard_retries += integ.shard_retries
             self.stats.shard_hedges += integ.shard_hedges
             self.stats.shard_enclave += integ.shard_enclave
+            self.stats.shard_crashes += integ.shard_crashes
+            self.stats.shard_timeouts += integ.shard_timeouts
         if n_valid and entry.quarantined and not per_device:
             if probe:
                 if integ.checks and not integ.failures:
@@ -554,12 +667,30 @@ class ServingEngine:
         elif n_valid and per_device and integ.flagged:
             entry.integrity_failures += 1    # visibility only: recovery and
                                              # health are per-device (pool)
+        if per_device:
+            # degraded-mode state machine (§12): the flag tracks the pool's
+            # serving-eligible count, transitions counted right after the
+            # dispatch that caused them (a breaker opening mid-batch
+            # degrades here; a successful half-open probe recovers here)
+            available = entry.executor.plane.pool.n_available() > 0
+            if entry.degraded and available:
+                entry.degraded = False
+                entry.recoveries += 1
+                with self.stats.lock:
+                    self.stats.recoveries += 1
+            elif not entry.degraded and not available:
+                entry.degraded = True
+                entry.degradations += 1
+                with self.stats.lock:
+                    self.stats.degradations += 1
         self.watchdog.end_step()
         for p, box in zip(batch, boxes):
             self._finish(p, Response(p.req.rid, box, box is not None,
                                      time.monotonic() - p.submit_t,
                                      flagged=integ.flagged
-                                     and box is not None))
+                                     and box is not None,
+                                     error=None if box is not None
+                                     else "mac_failed"))
 
     def _finish(self, p: _Pending, resp) -> None:
         if resp.ok:
@@ -567,7 +698,15 @@ class ServingEngine:
         with self._lock:
             self.completion_order.append((p.model, p.req.rid))
             self._futures.pop((p.model, p.req.rid), None)
-        p.future.set_result(resp)
+        # done-guard: the forced shutdown sweep (close) may have resolved
+        # this future already — set_result on a done future raises and
+        # would kill the batcher thread
+        if not p.future.done():
+            p.future.set_result(resp)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Aggregate serving telemetry (EngineStats.snapshot shorthand)."""
+        return self.stats.snapshot(self)
 
     # -- lifecycle ---------------------------------------------------------
     def drain(self, timeout_s: float = 60.0) -> bool:
@@ -579,13 +718,38 @@ class ServingEngine:
             time.sleep(0.002)
         return self.queue_depth() == 0
 
-    def close(self) -> None:
+    def close(self, drain_s: float = 30.0) -> None:
+        """Graceful shutdown (DESIGN.md §12): stop admitting, let the
+        batcher flush everything already queued (the plane's liveness
+        timeouts bound how long a wedged device can stall that), then
+        force-resolve anything still pending with an explicit ``shutdown``
+        error — **every submitted future resolves** — and only then stop
+        the session pools and drain the device queues."""
+        from repro.runtime.serving import Response
         with self._cv:
             self._closed = True
+            # the tail bucket must not idle out its max_wait timer while
+            # the batcher is the only thing left running
+            self._flush_t = time.monotonic()
             self._cv.notify_all()
         if self._thread is not None:
-            self._thread.join(timeout=5.0)
+            self._thread.join(timeout=drain_s)
+        # forced resolution: anything the batcher left behind (it died, or
+        # the drain timed out) resolves NOW — a shutdown may abandon work,
+        # never a caller
+        leftovers: List[_Pending] = []
+        with self._cv:
+            for bucket in self._buckets.values():
+                leftovers.extend(bucket)
+            self._buckets.clear()
+            self._in_flight = 0
+        for p in leftovers:
+            with self.stats.lock:
+                self.stats.shutdown_drops += 1
+            self._finish(p, Response(p.req.rid, None, False,
+                                     time.monotonic() - p.submit_t,
+                                     error="shutdown"))
         for entry in self.models.values():
             entry.pool.close()
             if entry.executor.plane is not None:
-                entry.executor.plane.pool.close()
+                entry.executor.plane.pool.close(drain=True)

@@ -8,7 +8,32 @@ result and it returns a (possibly) corrupted one, all inside the jit trace,
 so the enclave-side Freivalds layer (core/integrity.py) sees precisely what
 a byzantine backend would feed it.
 
-Fault classes (``FaultSpec.kind``):
+``UnresponsiveDevice`` is the *availability* half of the same threat model
+(DESIGN.md §12): a device that returns NO result instead of a wrong one.
+It lives host-side (a crash or a hang cannot be expressed inside a jit
+trace) and perturbs the DeviceSlot dispatch path
+(parallel/offload_sharding.py ``_device_run``) before any compute runs.
+
+Liveness fault classes (``LivenessSpec.kind``):
+
+- ``crash``        the dispatch raises ``DeviceCrash`` (driver reset, OOM
+                   kill, XID error) — the minimal liveness fault the
+                   containment/retry ladder must absorb;
+- ``hang``         the dispatch never returns: the worker parks on the
+                   slot's cancel event, which only the plane's hard
+                   dispatch timeout (abandon) or shutdown releases;
+- ``flaky``        transient failure: attempt k on an op crashes with
+                   probability ``prob * decay**k`` — retries with backoff
+                   eventually get through, which is what distinguishes it
+                   from ``crash`` for the circuit breaker;
+- ``brownout``     latency inflation: the dispatch sleeps ``delay_s`` on
+                   top of real compute — no error is ever raised, only the
+                   straggler/hedging machinery sees it.
+
+All liveness decisions are pure functions of (seed, op, attempt), so a
+scripted chaos run (runtime/chaos.py) replays identically.
+
+Integrity fault classes (``FaultSpec.kind``):
 
 - ``bit_flip``     one bit of one field element flips (SEU / marginal
                    hardware) — the minimal corruption Freivalds must catch;
@@ -32,8 +57,11 @@ which is what lets the engine's device-retry distinguish transient faults
 """
 from __future__ import annotations
 
+import random
+import threading
+import zlib
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +70,98 @@ from repro.core import blinding as B
 from repro.kernels.limb_matmul.ref import P
 
 KINDS = ("bit_flip", "row_swap", "stale", "adaptive")
+LIVENESS_KINDS = ("crash", "hang", "flaky", "brownout")
+
+
+class DeviceCrash(RuntimeError):
+    """The untrusted device raised (or was abandoned) mid-dispatch."""
+
+
+def stable_seed(*parts) -> int:
+    """Process-independent integer seed from reprable parts. (Seeding
+    random.Random with a tuple is deprecated AND goes through hash(),
+    which PYTHONHASHSEED randomizes — a chaos schedule must replay
+    identically across processes, e.g. the subprocess-isolated tests.)"""
+    return zlib.crc32(repr(parts).encode())
+
+
+@dataclass(frozen=True)
+class LivenessSpec:
+    """Static liveness-corruption plan for one device.
+
+    ``prob``: per-attempt trigger probability (1.0 = deterministic);
+    ``decay``: ``flaky`` multiplies the probability by this per *attempt*
+    on the same op, so a bounded number of retries always gets through;
+    ``delay_s``: ``brownout`` latency inflation; ``ops``: blinded-op
+    indices to target (None = every op).
+    """
+    kind: str
+    prob: float = 1.0
+    decay: float = 0.5
+    delay_s: float = 0.05
+    ops: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        assert self.kind in LIVENESS_KINDS, self.kind
+        assert 0.0 < self.prob <= 1.0, self.prob
+        assert 0.0 <= self.decay <= 1.0, self.decay
+        assert self.delay_s >= 0.0, self.delay_s
+
+
+class UnresponsiveDevice:
+    """Host-side liveness injector: perturbs the slot dispatch path.
+
+    ``perturb`` runs ON the device's worker thread before its compute —
+    exactly where a real crash/hang would bite. Decisions are
+    deterministic in (seed, op, attempt): a chaos schedule replays
+    identically, and the per-op attempt counter is what lets ``flaky``
+    decay across the plane's retries.
+    """
+
+    def __init__(self, spec: LivenessSpec, seed: int = 0):
+        self.spec = spec
+        self.seed = seed
+        self.fired = 0                     # perturbations that triggered
+        self._attempts: Dict[int, int] = {}
+        self._lock = threading.Lock()
+
+    def _attempt(self, op_index: int) -> int:
+        with self._lock:
+            k = self._attempts.get(op_index, 0)
+            self._attempts[op_index] = k + 1
+        return k
+
+    def _gate(self, op_index: int, attempt: int, prob: float) -> bool:
+        if prob >= 1.0:
+            return True
+        u = random.Random(stable_seed(self.seed, self.spec.kind, op_index,
+                                      attempt)).random()
+        return u < prob
+
+    def perturb(self, *, op_index: int, cancel: threading.Event) -> None:
+        """Crash, park, delay — or pass through. ``cancel`` is the slot's
+        abandon/shutdown event: an injected hang parks on it instead of
+        sleeping unconditionally, so a timed-out dispatch (slot.abandon)
+        or a draining close always reclaims the worker thread."""
+        spec = self.spec
+        if spec.ops is not None and op_index not in spec.ops:
+            return
+        attempt = self._attempt(op_index)
+        if spec.kind == "brownout":
+            if self._gate(op_index, attempt, spec.prob):
+                self.fired += 1
+                cancel.wait(timeout=spec.delay_s)
+            return
+        prob = spec.prob
+        if spec.kind == "flaky":
+            prob = spec.prob * (spec.decay ** attempt)
+        if not self._gate(op_index, attempt, prob):
+            return
+        self.fired += 1
+        if spec.kind == "hang":
+            cancel.wait()                  # parked until abandon/close
+        raise DeviceCrash(f"{spec.kind} (op {op_index}, "
+                          f"attempt {attempt})")
 
 # fold_in sub-domains of the per-op fault key
 _SUB_GATE = 0

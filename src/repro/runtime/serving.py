@@ -78,6 +78,13 @@ class Response:
     # enclave recompute) before sealing — served correctly, but the client
     # / operator can see the device misbehaved.
     flagged: bool = False
+    # machine-readable failure cause when ok=False (DESIGN.md §12):
+    # "mac_failed" (request never reached the executor),
+    # "deadline_exceeded" (expired at batch formation or dispatch),
+    # "shutdown" (engine closed with this request still queued),
+    # "rejected" (admission control: queue full, unknown model, or a
+    # duplicate in-flight rid). None on every ok=True response.
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -101,6 +108,10 @@ class BatchIntegrity:
     shard_retries: int = 0       # single-shard re-dispatches
     shard_hedges: int = 0        # straggler duplicates launched
     shard_enclave: int = 0       # shards the enclave computed itself
+    # liveness ladder (DESIGN.md §12): contained inside the op like shard
+    # integrity failures — recovered before the batch ever sees them
+    shard_crashes: int = 0       # dispatches that raised (contained)
+    shard_timeouts: int = 0      # dispatches abandoned past the deadline
 
     @property
     def flagged(self) -> bool:
@@ -123,6 +134,8 @@ class IntegrityTotals:
     shard_retries: int = 0
     shard_hedges: int = 0
     shard_enclave: int = 0
+    shard_crashes: int = 0
+    shard_timeouts: int = 0
 
     def add(self, integ: BatchIntegrity) -> None:
         self.checks += integ.checks
@@ -136,6 +149,8 @@ class IntegrityTotals:
         self.shard_retries += integ.shard_retries
         self.shard_hedges += integ.shard_hedges
         self.shard_enclave += integ.shard_enclave
+        self.shard_crashes += integ.shard_crashes
+        self.shard_timeouts += integ.shard_timeouts
 
 
 def _fresh_session(session_key, used: jax.Array) -> jax.Array:
@@ -215,6 +230,8 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
             integ.shard_retries += res.sharding.retries
             integ.shard_hedges += res.sharding.hedges
             integ.shard_enclave += res.sharding.enclave_shards
+            integ.shard_crashes += res.sharding.crashes
+            integ.shard_timeouts += res.sharding.timeouts
 
         sk = session_key() if callable(session_key) else session_key
         result = executor.infer(batch, session_key=sk)
@@ -321,7 +338,8 @@ class PrivateInferenceServer:
         dt = time.monotonic() - t0
         # positional assembly (not keyed by rid — rids may repeat)
         return [Response(r.rid, box, box is not None, dt,
-                         flagged=integ.flagged and box is not None)
+                         flagged=integ.flagged and box is not None,
+                         error=None if box is not None else "mac_failed")
                 for r, box in zip(requests, boxes)]
 
     def serve(self, requests: List[Request]) -> List[Response]:

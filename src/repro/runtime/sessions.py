@@ -25,6 +25,11 @@ the request path again.
   re-issue raises — the one-time-pad argument (DESIGN.md §3) dies the
   moment a session is used twice. ``stats()`` exposes
   consumed/refilled/misses/reuse-checked counters for EngineStats.
+- **fault containment**: a prefetch that raises increments
+  ``refill_errors`` and the loop keeps going — ``acquire`` falls back to
+  synchronous factors for that session. ``refill_fault`` is the chaos
+  harness's injection point (runtime/chaos.py): a callable run before
+  each prefetch, so a drill can script exactly this failure mode.
 
 The pool is executor-agnostic: before the first batch builds the layer
 cache, ``prepare`` is a no-op and ``acquire`` simply hands out fresh keys
@@ -34,7 +39,7 @@ from __future__ import annotations
 
 import os
 import threading
-from typing import Dict, Optional, Set
+from typing import Callable, Dict, Optional, Set
 
 import jax
 import numpy as np
@@ -58,10 +63,14 @@ class SessionPool:
 
     def __init__(self, executor=None, *, depth: int = 4,
                  root: Optional[jax.Array] = None,
-                 background: bool = True):
+                 background: bool = True,
+                 refill_fault: Optional[Callable[[int], None]] = None):
         assert depth >= 1, depth
         self.executor = executor
         self.depth = depth
+        # chaos hook: called with the session counter before each prefetch;
+        # raising makes that refill fail exactly like a real one would
+        self.refill_fault = refill_fault
         self._root = root if root is not None else fresh_root()
         self._next = 0                     # next counter to prefetch
         self._head = 0                     # next counter to hand out
@@ -117,6 +126,8 @@ class SessionPool:
 
     def _prefetch(self, counter: int) -> bool:
         """Generate factors for one future session. False if no cache yet."""
+        if self.refill_fault is not None:
+            self.refill_fault(counter)
         caches = self._caches()
         for cache in caches:
             cache.max_prefetched = max(self.depth + 1, cache.max_prefetched)
@@ -185,7 +196,13 @@ class SessionPool:
                                                 self._head + self.depth)
             stop = self._next
         for c in range(start, stop):
-            if self._prefetch(c):
+            try:
+                ok = self._prefetch(c)
+            except Exception:  # noqa: BLE001 — same containment as the loop
+                with self._lock:
+                    self.refill_errors += 1
+                continue
+            if ok:
                 with self._lock:
                     self.refilled += 1
 

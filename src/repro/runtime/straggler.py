@@ -74,3 +74,21 @@ class StepWatchdog:
         if not self.history:
             return None
         return _median(self.history)
+
+    def deadline(self, factor: Optional[float] = None,
+                 floor: float = 0.0,
+                 cold: Optional[float] = None) -> Optional[float]:
+        """``factor × P50`` once warm, else ``cold``.
+
+        The one deadline baseline both consumers share: the offload
+        plane's straggler-hedge trigger and its hard per-dispatch
+        liveness timeout (parallel/offload_sharding.py) key off the same
+        robust estimate, just with different factors. ``floor`` guards
+        against sub-millisecond P50s turning scheduler jitter into
+        timeouts; ``cold`` is the pre-warmup fallback (None = no
+        deadline until the window warms)."""
+        if len(self.history) < self.cfg.warmup_steps:
+            return cold
+        p50 = _median(self.history)
+        f = self.cfg.deadline_factor if factor is None else factor
+        return max(f * p50, floor)

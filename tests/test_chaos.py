@@ -1,0 +1,402 @@
+"""Liveness fault-tolerance plane (DESIGN.md §12): chaos schedule parsing,
+deterministic liveness injectors, the plane's timeout/backoff/breaker
+recovery ladder, engine degradation to enclave-only serving + automatic
+recovery, scripted refill/sealing faults, and draining shutdown."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.blinding import blinding_stream
+from repro.kernels.limb_matmul.ops import field_matmul
+from repro.models import model as M
+from repro.parallel.offload_sharding import LivenessConfig, OffloadPlane
+from repro.privacy.data import make_batch
+from repro.runtime.chaos import ChaosController, ChaosSchedule, RefillChaos
+from repro.runtime.devices import (BREAKER_CLOSED, BREAKER_OPEN,
+                                   DeviceHealthConfig, DevicePool)
+from repro.runtime.engine import EngineConfig, ServingEngine
+from repro.runtime.faults import (DeviceCrash, LivenessSpec,
+                                  UnresponsiveDevice)
+from repro.runtime.serving import PrivateInferenceServer, Request
+from repro.runtime.sessions import SessionPool
+
+DRILL = "dev0.crash@1-2,dev1.hang@1-2,refill@7-8,seal@10"
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    cfg = get_smoke("vgg16")
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _request(cfg, rid, rng):
+    img = make_batch(rid, 1, cfg.image_size)[0]
+    key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
+    box = PrivateInferenceServer.client_seal(key, img, rid)
+    return Request(rid=rid, box=box, shape=img.shape, session_key=key), key
+
+
+def _operands(t=32, d_in=32, d_out=32):
+    key = jax.random.PRNGKey(0)
+    x = blinding_stream(jax.random.fold_in(key, 1), (t, d_in))
+    w = blinding_stream(jax.random.fold_in(key, 2), (d_in, d_out))
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# schedule mini-language
+# ---------------------------------------------------------------------------
+
+def test_schedule_parse_round_trip():
+    sched = ChaosSchedule.parse(DRILL)
+    assert str(sched) == DRILL
+    assert len(sched.events) == 4
+    assert sched.horizon == 11                  # last window ends at 10
+    dev0 = sched.events[0]
+    assert (dev0.layer, dev0.device, dev0.kind) == ("device", 0, "crash")
+    assert dev0.active(1) and dev0.active(2)
+    assert not dev0.active(0) and not dev0.active(3)
+    seal = sched.events[3]
+    assert seal.start == seal.stop == 10        # @a is the window [a, a]
+
+
+def test_schedule_rejects_garbage():
+    for bad in ("dev0.fliparoo@1", "crash@1", "dev0.crash", "refill@",
+                "dev0.crash@2-", "", " , ", "devx.hang@1"):
+        with pytest.raises(ValueError):
+            ChaosSchedule.parse(bad)
+    with pytest.raises(AssertionError):         # inverted window
+        ChaosSchedule.parse("dev0.crash@5-2")
+
+
+# ---------------------------------------------------------------------------
+# liveness injectors: deterministic, per-class semantics
+# ---------------------------------------------------------------------------
+
+def _fired_pattern(seed, ops=8):
+    inj = UnresponsiveDevice(LivenessSpec(kind="flaky", prob=0.6), seed=seed)
+    pattern = []
+    done = threading.Event()
+    for op in range(ops):
+        try:
+            inj.perturb(op_index=op, cancel=done)
+            pattern.append(False)
+        except DeviceCrash:
+            pattern.append(True)
+    return pattern
+
+
+def test_injector_replays_identically():
+    a, b = _fired_pattern(seed=3), _fired_pattern(seed=3)
+    assert a == b                               # same seed -> same run
+    assert any(a) and not all(a)                # prob 0.6 actually gates
+
+
+def test_flaky_decay_lets_retries_through():
+    # prob 1.0, decay 0: attempt 0 on an op always crashes, attempt 1
+    # never does — the minimal "transient" the backoff ladder must absorb
+    inj = UnresponsiveDevice(LivenessSpec(kind="flaky", decay=0.0))
+    done = threading.Event()
+    with pytest.raises(DeviceCrash):
+        inj.perturb(op_index=5, cancel=done)
+    inj.perturb(op_index=5, cancel=done)        # retry passes
+    assert inj.fired == 1
+
+
+def test_hang_parks_on_cancel_event():
+    inj = UnresponsiveDevice(LivenessSpec(kind="hang"))
+    cancel = threading.Event()
+    cancel.set()                                # abandoned before dispatch
+    with pytest.raises(DeviceCrash):
+        inj.perturb(op_index=0, cancel=cancel)
+
+
+def test_brownout_delays_without_error():
+    inj = UnresponsiveDevice(LivenessSpec(kind="brownout", delay_s=0.05))
+    t0 = time.perf_counter()
+    inj.perturb(op_index=0, cancel=threading.Event())
+    assert time.perf_counter() - t0 >= 0.04
+    assert inj.fired == 1
+
+
+def test_injector_op_targeting():
+    inj = UnresponsiveDevice(LivenessSpec(kind="crash", ops=(2,)))
+    done = threading.Event()
+    inj.perturb(op_index=0, cancel=done)        # untargeted: no-op
+    with pytest.raises(DeviceCrash):
+        inj.perturb(op_index=2, cancel=done)
+
+
+# ---------------------------------------------------------------------------
+# plane-level recovery ladder: containment -> retry -> breaker -> probe
+# ---------------------------------------------------------------------------
+
+def test_plane_contains_crashes_and_breaker_cycles():
+    x, w = _operands()
+    want = np.asarray(field_matmul(x, w))
+    pool = DevicePool(2, health=DeviceHealthConfig(breaker_after=2,
+                                                   breaker_cooldown=2))
+    plane = OffloadPlane(pool, mode="rows", hedging=False,
+                         liveness=LivenessConfig(timeout_floor_s=0.1,
+                                                 cold_timeout_s=1.0))
+    slot = pool.slots[0]
+    slot.liveness = UnresponsiveDevice(LivenessSpec(kind="crash"))
+    for op in range(4):                         # faulted window
+        y = plane.matmul(x, w, session_key=jax.random.PRNGKey(op),
+                         op_index=op)
+        np.testing.assert_array_equal(np.asarray(y), want)
+    assert plane.totals.crashes >= 2
+    assert plane.totals.backoffs >= 1           # redispatch waited its turn
+    assert slot.breaker == BREAKER_OPEN         # indicted after 2 consec
+    assert not slot.available and pool.n_available() == 1
+    assert slot.breaker_opens == 1
+
+    slot.liveness = None                        # fault clears
+    for op in range(4, 12):
+        y = plane.matmul(x, w, session_key=jax.random.PRNGKey(op),
+                         op_index=op)
+        np.testing.assert_array_equal(np.asarray(y), want)
+        if slot.breaker == BREAKER_CLOSED:
+            break
+    assert slot.breaker == BREAKER_CLOSED       # half-open probe verified
+    assert slot.breaker_probes >= 1 and slot.breaker_closes == 1
+    assert pool.n_available() == 2
+    assert plane.totals.breaker_probes >= 1
+    pool.close()
+
+
+def test_plane_times_out_hung_device_and_abandons_queue():
+    x, w = _operands()
+    want = np.asarray(field_matmul(x, w))
+    pool = DevicePool(2, health=DeviceHealthConfig(breaker_after=1,
+                                                   breaker_cooldown=2))
+    plane = OffloadPlane(pool, mode="rows", hedging=False,
+                         liveness=LivenessConfig(timeout_floor_s=0.1,
+                                                 cold_timeout_s=0.5))
+    slot = pool.slots[1]
+    slot.liveness = UnresponsiveDevice(LivenessSpec(kind="hang"))
+    t0 = time.perf_counter()
+    y = plane.matmul(x, w, session_key=jax.random.PRNGKey(0), op_index=0)
+    np.testing.assert_array_equal(np.asarray(y), want)
+    assert time.perf_counter() - t0 < 30        # hard timeout, not forever
+    assert plane.totals.timeouts >= 1
+    assert slot.abandons >= 1                   # wedged queue swapped out
+    assert slot.breaker == BREAKER_OPEN
+    slot.liveness = None
+    pool.close()                                # parked worker released
+
+
+def test_plane_single_device_falls_back_to_enclave():
+    # no spare exists: after containment the shard recomputes in-enclave
+    x, w = _operands()
+    want = np.asarray(field_matmul(x, w))
+    pool = DevicePool(1)
+    plane = OffloadPlane(pool, mode="rows", hedging=False,
+                         liveness=LivenessConfig(backoff_max_s=0.02))
+    pool.slots[0].liveness = UnresponsiveDevice(LivenessSpec(kind="crash"))
+    y = plane.matmul(x, w, session_key=jax.random.PRNGKey(0), op_index=0)
+    np.testing.assert_array_equal(np.asarray(y), want)
+    assert plane.totals.enclave_shards >= 1
+    assert plane.totals.crashes >= 1
+    pool.close()
+
+
+def test_brownout_inflates_latency_without_indictment():
+    x, w = _operands()
+    pool = DevicePool(2)
+    plane = OffloadPlane(pool, mode="rows", hedging=False,
+                         liveness=LivenessConfig(timeout_floor_s=1.0))
+    pool.slots[0].liveness = UnresponsiveDevice(
+        LivenessSpec(kind="brownout", delay_s=0.05))
+    for op in range(3):
+        plane.matmul(x, w, session_key=jax.random.PRNGKey(op), op_index=op)
+    assert plane.totals.crashes == 0 and plane.totals.timeouts == 0
+    assert pool.slots[0].breaker == BREAKER_CLOSED
+    assert pool.n_available() == 2
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# scripted refill faults (deterministic: synchronous prime)
+# ---------------------------------------------------------------------------
+
+def test_refill_chaos_contained_and_counted():
+    pool = SessionPool(None, depth=2, background=False)
+    chaos = ChaosController(ChaosSchedule.parse("refill@0-1"), sessions=pool)
+    chaos.on_batch(0)                           # arm
+    assert pool.refill_fault is not None
+    pool.prime()                                # every prefetch raises
+    assert pool.stats()["refill_errors"] == 2   # contained, counted
+    assert chaos.refill_faults == 2
+    chaos.on_batch(2)                           # disarm
+    assert pool.refill_fault is None
+    pool.acquire()                              # serving never stopped
+    pool.prime()
+    assert pool.stats()["refill_errors"] == 2   # no new failures
+    pool.close()
+
+
+def test_refill_fault_hook_raises_refill_chaos():
+    pool = SessionPool(None, depth=1, background=False)
+    chaos = ChaosController(ChaosSchedule.parse("refill@0"), sessions=pool)
+    chaos.on_batch(0)
+    with pytest.raises(RefillChaos):
+        pool.refill_fault(0)
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# controller arming across layers
+# ---------------------------------------------------------------------------
+
+def test_controller_arms_and_disarms_device_injectors():
+    pool = DevicePool(2)
+    chaos = ChaosController(ChaosSchedule.parse("dev1.crash@2-3"), pool=pool)
+    chaos.on_batch(0)
+    assert pool.slots[1].liveness is None
+    chaos.on_batch(2)
+    inj = pool.slots[1].liveness
+    assert inj is not None and inj.spec.kind == "crash"
+    chaos.on_batch(3)
+    assert pool.slots[1].liveness is inj        # window still open
+    chaos.on_batch(4)
+    assert pool.slots[1].liveness is None
+    assert [(b, a) for b, _, a in chaos.log] == [(2, "arm"), (4, "disarm")]
+    pool.close()
+
+
+def test_controller_seal_window_flips_macs(vgg, rng):
+    cfg, _ = vgg
+    req, _key = _request(cfg, 0, rng)
+    mac0 = np.uint32(req.box.mac)
+    chaos = ChaosController(ChaosSchedule.parse("seal@1"))
+    chaos.on_batch(0, requests=[req])
+    assert np.uint32(req.box.mac) == mac0       # outside the window
+    chaos.on_batch(1, requests=[req])
+    assert np.uint32(req.box.mac) == mac0 ^ np.uint32(1)
+    assert chaos.seal_corruptions == 1
+    chaos.quiesce()
+    assert not chaos.snapshot()["armed"]
+
+
+# ---------------------------------------------------------------------------
+# engine: degrade to enclave-only, recover, seal isolation — bit-exact
+# ---------------------------------------------------------------------------
+
+def test_engine_degrades_recovers_and_stays_bit_exact(vgg, rng):
+    cfg, params = vgg
+    per = 2            # eager (plane) and jitted logits only agree for t>=2
+    schedule = ChaosSchedule.parse("dev0.crash@1,dev1.hang@1,seal@3")
+    n_batches = schedule.horizon + 5
+    reqs, keys = zip(*[_request(cfg, i, rng)
+                       for i in range(per * n_batches)])
+    key_by_rid = {r.rid: k for r, k in zip(reqs, keys)}
+
+    # healthy jitted oracle first: chaos corrupts seal-window boxes in
+    # flight, and the oracle must see the pristine requests
+    legacy = PrivateInferenceServer(cfg, params, mode="origami",
+                                    max_batch=per)
+    want = {}
+    for j in range(n_batches):
+        for r in legacy.serve_batch(list(reqs[per * j:per * (j + 1)])):
+            want[r.rid] = PrivateInferenceServer.client_open(
+                key_by_rid[r.rid], r.box, (cfg.num_classes,))
+
+    pool = DevicePool(2, health=DeviceHealthConfig(breaker_after=2,
+                                                   breaker_cooldown=2))
+    chaos = ChaosController(schedule)
+    engine = ServingEngine(EngineConfig(max_batch=per, max_wait_ms=50.0))
+    engine.register_model("vgg16", cfg, params, mode="origami",
+                          devices=pool, shard="rows",
+                          liveness=LivenessConfig(cold_timeout_s=2.0),
+                          chaos=chaos)
+    timeline = []
+    try:
+        for j in range(n_batches):
+            futs = [engine.submit("vgg16", r)
+                    for r in reqs[per * j:per * (j + 1)]]
+            resps = [f.result(timeout=120) for f in futs]
+            degraded = engine.snapshot()["models"]["vgg16"]["degraded"]
+            timeline.append((j, resps, degraded))
+    finally:
+        snap = engine.snapshot()
+        engine.close()
+
+    assert chaos.batch == n_batches - 1         # clock never drifted
+    for j, resps, _ in timeline:
+        for resp in resps:
+            if j == 3:                          # the seal window
+                assert not resp.ok and resp.error == "mac_failed", \
+                    (j, resp)
+            else:
+                assert resp.ok and resp.error is None, (j, resp)
+                got = PrivateInferenceServer.client_open(
+                    key_by_rid[resp.rid], resp.box, (cfg.num_classes,))
+                np.testing.assert_array_equal(got, want[resp.rid])
+
+    liv = snap["liveness"]
+    assert liv["degradations"] >= 1             # total blackout detected
+    assert liv["recoveries"] >= 1               # ...and self-healed
+    assert liv["shard_crashes"] >= 1 and liv["shard_timeouts"] >= 1
+    assert not snap["models"]["vgg16"]["degraded"]
+    assert any(d for _, _, d in timeline)       # degradation was observed
+    assert not timeline[-1][2]                  # ...and cleared by the end
+    slots = snap["devices"]["vgg16"]["pool"]["slots"]
+    assert all(s["available"] for s in slots)   # both devices re-admitted
+    assert all(s["breaker"] == BREAKER_CLOSED for s in slots)
+    assert all(s["breaker_opens"] >= 1 for s in slots)
+    # liveness is NOT an integrity indictment: no quarantine ever fired
+    assert all(not s["quarantined"] for s in slots)
+
+
+# ---------------------------------------------------------------------------
+# draining shutdown: every in-flight future resolves, no orphaned threads
+# ---------------------------------------------------------------------------
+
+_OWNED_PREFIXES = ("offload-dev", "session-pool-refill",
+                   "serving-engine-batcher")
+
+
+def _owned_threads():
+    return [t for t in threading.enumerate()
+            if t.is_alive() and t.name.startswith(_OWNED_PREFIXES)]
+
+
+def test_close_drains_in_flight_sharded_batches(vgg, rng):
+    cfg, params = vgg
+    before = {id(t) for t in _owned_threads()}
+    pool = DevicePool(2)
+    engine = ServingEngine(EngineConfig(max_batch=2, max_wait_ms=20.0))
+    engine.register_model("vgg16", cfg, params, mode="origami",
+                          devices=pool, shard="rows")
+    reqs = [_request(cfg, 100 + i, rng)[0] for i in range(6)]
+    futures = [engine.submit("vgg16", r) for r in reqs]
+    engine.close()                              # immediately: work in flight
+
+    for f in futures:                           # EVERY future resolved...
+        assert f.done()
+        resp = f.result(timeout=0)
+        assert resp.ok or resp.error == "shutdown", resp
+    assert any(f.result(timeout=0).ok for f in futures)  # ...and drained
+    snap = engine.stats.snapshot(engine)
+    assert snap["completed"] + snap["liveness"]["shutdown_drops"] \
+        >= len(reqs)
+
+    deadline = time.monotonic() + 10            # workers unwind quickly
+    while time.monotonic() < deadline:
+        orphans = [t for t in _owned_threads() if id(t) not in before]
+        if not orphans:
+            break
+        time.sleep(0.05)
+    assert not orphans, f"orphaned threads after close: {orphans}"
+
+    # close is idempotent and late submits are rejected, not hung
+    engine.close()
+    late = engine.submit("vgg16", _request(cfg, 999, rng)[0])
+    resp = late.result(timeout=5)
+    assert not resp.ok and resp.error == "shutdown"
