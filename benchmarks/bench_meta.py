@@ -1,0 +1,50 @@
+"""Shared metadata header for every BENCH_*.json artifact.
+
+All recorded suites write through :func:`write_bench`, so every artifact
+has the same envelope::
+
+    {"meta": {"schema_version": ..., "suite": ..., "backend": ...,
+              "config": {...}},
+     "results": {...}}
+
+``schema_version`` bumps whenever the envelope shape changes (successive
+PRs diff these files as a perf trajectory, so readers need a stable key to
+dispatch on); ``suite`` names the generating suite; ``backend`` records
+the jax backend the numbers were taken on; ``config`` echoes the suite's
+knobs (each suite module's ``BENCH_CONFIG``) so a row is reproducible
+without reading the suite source at the generating commit.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import Any, Dict, Mapping, Optional
+
+# v1 was the per-suite ad-hoc shapes (bare results dict at top level);
+# v2 is the meta/results envelope above.
+SCHEMA_VERSION = 2
+
+
+def bench_doc(suite: str, results: Any,
+              config: Optional[Mapping[str, Any]] = None) -> Dict[str, Any]:
+    """The envelope as a dict (split from write_bench for tests)."""
+    import jax
+    return {
+        "meta": {
+            "schema_version": SCHEMA_VERSION,
+            "suite": suite,
+            "backend": jax.default_backend(),
+            "config": dict(config or {}),
+        },
+        "results": results,
+    }
+
+
+def write_bench(out_path, suite: str, results: Any,
+                config: Optional[Mapping[str, Any]] = None) -> pathlib.Path:
+    out_path = pathlib.Path(out_path)
+    out_path.write_text(
+        json.dumps(bench_doc(suite, results, config), indent=2) + "\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+    return out_path

@@ -41,6 +41,13 @@ VGG16_TIER1_SHAPES = (
     (112 * 112, 1152, 128),
 )
 
+# echoed into BENCH_blinding.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {
+    "model": "vgg16 tier-1 (partition 6, batch 1)",
+    "shapes": [list(s) for s in VGG16_TIER1_SHAPES],
+    "iters": 2,
+}
+
 
 def _time(fn, *args, iters=5):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \

@@ -34,6 +34,10 @@ SHAPE = (64, 64, 64)                    # (t, d_in, d_out) — real CPU cost
 STEP_CAP = 24                           # detection/recovery step ceilings
 
 
+# echoed into BENCH_chaos.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {"shape": list(SHAPE), "step_cap": STEP_CAP}
+
+
 def _operands(t: int, d_in: int, d_out: int):
     from repro.core.blinding import blinding_stream
     key = jax.random.PRNGKey(0)

@@ -22,6 +22,10 @@ import jax
 import numpy as np
 
 
+# echoed into BENCH_integrity.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {"model": "vgg16 (smoke)", "iters": 12, "sessions": 24}
+
+
 def _executor(cfg, params, policy, fault=None):
     from repro.core.origami import OrigamiExecutor
     return OrigamiExecutor(cfg, params, mode="origami", precompute=True,

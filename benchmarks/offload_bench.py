@@ -36,6 +36,11 @@ SHAPE = (256, 128, 128)                     # (t, d_in, d_out)
 ITERS = 8
 
 
+# echoed into BENCH_offload.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {"shape": list(SHAPE), "iters": ITERS,
+                "sim_gflops": SIM_GFLOPS}
+
+
 def _operands(t: int, d_in: int, d_out: int):
     from repro.core.blinding import blinding_stream
     key = jax.random.PRNGKey(0)

@@ -25,6 +25,11 @@ from repro.core.trust import EnclaveSim
 from repro.models import model as M
 
 
+# echoed into BENCH_plans.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {"model": "vgg16 (smoke timed, full modeled)", "iters": 5,
+                "plans": "legacy modes + mixed + vopen"}
+
+
 def _bench_plans(cfg):
     """The measured spread: every legacy shape + IR-only placements
     (mixed enclave/blinded tier-1, verified-open tier-2)."""

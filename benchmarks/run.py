@@ -13,7 +13,6 @@ offered loads (mixed vgg16/vgg19 smoke traffic) into ``BENCH_serving.json``.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import sys
 import traceback
@@ -23,52 +22,40 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
 
 
-def run_blinding_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import blinding_micro
-    results = {}
+# recorded suites: --suite NAME runs benchmarks/MODULE.run_suite and stamps
+# the results into BENCH_*.json through the shared bench_meta envelope
+# (schema version + suite name + backend + the module's BENCH_CONFIG echo)
+RECORDED_SUITES = {
+    "blinding": ("blinding_micro", "BENCH_blinding.json"),
+    "serving": ("serving_bench", "BENCH_serving.json"),
+    "integrity": ("integrity_bench", "BENCH_integrity.json"),
+    "plans": ("plans_bench", "BENCH_plans.json"),
+    "offload": ("offload_bench", "BENCH_offload.json"),
+    "chaos": ("chaos_bench", "BENCH_chaos.json"),
+    "trace": ("trace_overhead_bench", "BENCH_trace_overhead.json"),
+}
+
+
+def run_recorded_suite(suite: str, out_path: pathlib.Path) -> None:
+    import importlib
+
+    from benchmarks import bench_meta
+    mod_name, _ = RECORDED_SUITES[suite]
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    recorded = {}
 
     def record(name: str, us: float, derived: str = ""):
         emit(name, us, derived)
-        results[name] = {"us": round(us, 1), "derived": derived}
+        recorded[name] = {"us": round(us, 1), "derived": derived}
 
-    blinding_micro.run_suite(record)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
-
-
-def run_serving_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import serving_bench
-    results = serving_bench.run_suite(emit)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
-
-
-def run_integrity_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import integrity_bench
-    results = integrity_bench.run_suite(emit)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
-
-
-def run_plans_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import plans_bench
-    results = plans_bench.run_suite(emit)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
-
-
-def run_offload_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import offload_bench
-    results = offload_bench.run_suite(emit)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
-
-
-def run_chaos_suite(out_path: pathlib.Path) -> None:
-    from benchmarks import chaos_bench
-    results = chaos_bench.run_suite(emit)
-    out_path.write_text(json.dumps(results, indent=2) + "\n")
-    print(f"wrote {out_path}", file=sys.stderr)
+    # suites either return their results dict (and emit() rows as a side
+    # effect) or emit rows only — in that case the recorded rows ARE the
+    # results (blinding_micro's original contract)
+    results = mod.run_suite(record)
+    if results is None:
+        results = recorded
+    bench_meta.write_bench(out_path, suite, results,
+                           config=getattr(mod, "BENCH_CONFIG", {}))
 
 
 def main() -> None:
@@ -77,8 +64,7 @@ def main() -> None:
                     help="include the c-GAN SSIM layer sweep (slow)")
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--suite",
-                    choices=["all", "blinding", "serving", "integrity",
-                             "plans", "offload", "chaos"],
+                    choices=["all"] + sorted(RECORDED_SUITES),
                     default="all",
                     help="'blinding' runs the fused/precompute matrix into "
                          "BENCH_blinding.json; 'serving' sweeps the engine "
@@ -93,27 +79,15 @@ def main() -> None:
                          "BENCH_offload.json; 'chaos' measures liveness "
                          "detection->recovery latency per fault class and "
                          "one engine degradation cycle into "
-                         "BENCH_chaos.json")
+                         "BENCH_chaos.json; 'trace' measures span-tracing "
+                         "overhead (on vs off, <5%% bar) into "
+                         "BENCH_trace_overhead.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent
-    if args.suite == "blinding":
-        run_blinding_suite(root / "BENCH_blinding.json")
-        return
-    if args.suite == "serving":
-        run_serving_suite(root / "BENCH_serving.json")
-        return
-    if args.suite == "integrity":
-        run_integrity_suite(root / "BENCH_integrity.json")
-        return
-    if args.suite == "plans":
-        run_plans_suite(root / "BENCH_plans.json")
-        return
-    if args.suite == "offload":
-        run_offload_suite(root / "BENCH_offload.json")
-        return
-    if args.suite == "chaos":
-        run_chaos_suite(root / "BENCH_chaos.json")
+    if args.suite in RECORDED_SUITES:
+        _, out_name = RECORDED_SUITES[args.suite]
+        run_recorded_suite(args.suite, root / out_name)
         return
 
     from benchmarks import (blinding_micro, exec_micro, integrity_bench,

@@ -15,6 +15,16 @@ import jax
 import numpy as np
 
 
+# echoed into BENCH_serving.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {
+    "models": ["vgg16", "vgg19"],
+    "n_per_model": 12,
+    "max_batch": 4,
+    "max_wait_ms": 10.0,
+    "loads": ["burst", "50rps", "10rps"],
+}
+
+
 def _build_engine(max_batch: int, max_wait_ms: float):
     from repro.configs import get_smoke
     from repro.models import model as M

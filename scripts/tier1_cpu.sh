@@ -32,6 +32,27 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --requests 8 --plan mixed --devices 2 --shard rows --inject bit_flip
+# observability smoke: the same sharded drill with span tracing on — the
+# trace artifact (queue -> batch -> plan steps -> shard dispatches ->
+# verify -> unseal, DESIGN.md §13) must come out as valid Chrome-trace
+# JSON with a connected tree; CI uploads trace_tier1.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --requests 8 --plan mixed --devices 2 --shard rows --inject bit_flip \
+    --verify full --trace-out trace_tier1.json
+python - <<'PY'
+import json
+doc = json.load(open("trace_tier1.json"))
+ev = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+roots = [e for e in ev if e["name"] == "request"]
+assert roots and len(ev) > len(roots), (len(ev), len(roots))
+names = {e["name"] for e in ev}
+need = {"request", "queue", "batch", "unseal", "plan.segment",
+        "shard.dispatch", "verify", "seal"}
+assert need <= names, need - names
+print(f"[trace] OK: {len(ev)} spans, {len(roots)} requests, "
+      f"kinds={sorted({e['cat'] for e in ev})}")
+PY
 # liveness chaos smoke: scripted crash on device 0 + hang on device 1
 # (total blackout), a session-refill fault window and a sealing-
 # corruption window — the drill fails unless every future resolves, the

@@ -25,7 +25,7 @@ core/trust.py prices with the paper-calibrated cost model.
 from __future__ import annotations
 
 import functools
-from contextlib import ExitStack
+from contextlib import ExitStack, nullcontext
 from dataclasses import dataclass, field as dfield
 from typing import Any, Dict, Optional
 
@@ -36,6 +36,7 @@ from repro.configs.base import ModelConfig
 from repro.core import integrity as IG
 from repro.core import plan as PL
 from repro.core import slalom as SL
+from repro.core import tracing
 from repro.core.blinding import BlindingSpec
 from repro.core.precompute import BlindedLayerCache
 from repro.models import layers as L
@@ -177,23 +178,30 @@ class OrigamiExecutor:
         and all placements (no mode strings, no family forks)."""
         params, prog, plan = self.params, self._program, self.plan
         x, memory = prog.prologue(params, batch)
+        # span per plan segment — EAGER traces only (the pooled plane path
+        # and recovery paths): under jit the walk runs once at trace time,
+        # so a span would clock compilation, not the step
+        eager = not isinstance(x, jax.core.Tracer)
         boundary = x if plan.boundary == 0 else None
         for seg in plan.segments:
-            if seg.regime == "plain":
-                x = prog.segment(params, x, seg.lo, seg.hi, memory)
-            else:
-                policy = (seg.policy if seg.policy is not None
-                          else self.integrity)
-                with ExitStack() as stack:
-                    stack.enter_context(ctx.segment_overrides(
-                        policy, unblinded=(seg.regime == "verified"),
-                        shard=seg.shard))
-                    stack.enter_context(L.dense_impl(
-                        functools.partial(SL.blinded_dense, ctx)))
-                    if prog.blind_convs:
-                        stack.enter_context(L.conv_impl(
-                            functools.partial(SL.blinded_conv2d, ctx)))
+            with (tracing.maybe_span("plan.segment", "step", lo=seg.lo,
+                                     hi=seg.hi, regime=seg.regime)
+                  if eager else nullcontext()):
+                if seg.regime == "plain":
                     x = prog.segment(params, x, seg.lo, seg.hi, memory)
+                else:
+                    policy = (seg.policy if seg.policy is not None
+                              else self.integrity)
+                    with ExitStack() as stack:
+                        stack.enter_context(ctx.segment_overrides(
+                            policy, unblinded=(seg.regime == "verified"),
+                            shard=seg.shard))
+                        stack.enter_context(L.dense_impl(
+                            functools.partial(SL.blinded_dense, ctx)))
+                        if prog.blind_convs:
+                            stack.enter_context(L.conv_impl(
+                                functools.partial(SL.blinded_conv2d, ctx)))
+                        x = prog.segment(params, x, seg.lo, seg.hi, memory)
             if seg.hi == plan.boundary:
                 boundary = x
         return prog.epilogue(params, x, batch, memory), boundary

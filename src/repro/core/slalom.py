@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.core import blinding as B
 from repro.core import integrity as IG
+from repro.core import tracing
 from repro.kernels.blind.ref import quantize as quantize_act
 from repro.kernels.limb_matmul.ops import (encode_weight_planes, field_matmul,
                                            fused_blinded_matmul)
@@ -230,6 +231,20 @@ def blinded_dense(ctx: SlalomContext, p, x, scanned: Optional[bool] = None):
     im2col reorder turns a concrete leaf into a tracer) must pass the
     verdict on the RAW leaf.
     """
+    # per-op trace span — eager traces only (plane path / recoveries);
+    # attributes are shapes and placement flags, never operands
+    if not isinstance(x, jax.core.Tracer):
+        with tracing.maybe_span(
+                "op.trusted" if ctx.trusted else "op.blinded", "step",
+                layer=ctx._layer_counter, d_in=int(p["w"].shape[0]),
+                d_out=int(p["w"].shape[1]),
+                verified_open=bool(ctx.unblinded)):
+            return _blinded_dense(ctx, p, x, scanned)
+    return _blinded_dense(ctx, p, x, scanned)
+
+
+def _blinded_dense(ctx: SlalomContext, p, x,
+                   scanned: Optional[bool] = None):
     w = p["w"]
     d_in, d_out = w.shape
     lead = x.shape[:-1]

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import tracing
 from repro.kernels.blind import ref
 from repro.kernels.blind.blind import blind_pallas, unblind_pallas
 
@@ -15,7 +16,7 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("k_bits", "impl"))
-def blind(x, r, k_bits: int, impl: str = "auto"):
+def _blind_jit(x, r, k_bits: int, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu() and x.size < 2 ** 16):
         return ref.blind_ref(x, r, k_bits)
     return blind_pallas(x, r, k_bits,
@@ -25,9 +26,26 @@ def blind(x, r, k_bits: int, impl: str = "auto"):
 
 @functools.partial(jax.jit, static_argnames=("k_out_bits", "out_dtype",
                                              "impl"))
-def unblind(y, u, k_out_bits: int, out_dtype=jnp.float32, impl: str = "auto"):
+def _unblind_jit(y, u, k_out_bits: int, out_dtype=jnp.float32,
+                 impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu() and y.size < 2 ** 16):
         return ref.unblind_ref(y, u, k_out_bits, out_dtype)
     return unblind_pallas(y, u, k_out_bits, out_dtype,
                           interpret=(impl == "interpret")
                           or (impl == "auto" and not _on_tpu()))
+
+
+def blind(x, r, k_bits: int, impl: str = "auto"):
+    """Profiling wrapper (``kernel.blind_encode`` spans, core/tracing.py):
+    fenced wall-time when a tracer with kernel spans is ambient and the
+    operands are concrete; the plain jitted call otherwise."""
+    return tracing.profiled_kernel("kernel.blind_encode", _blind_jit,
+                                   x, r, k_bits=k_bits, impl=impl)
+
+
+def unblind(y, u, k_out_bits: int, out_dtype=jnp.float32,
+            impl: str = "auto"):
+    """Profiling wrapper (``kernel.unblind`` spans)."""
+    return tracing.profiled_kernel("kernel.unblind", _unblind_jit,
+                                   y, u, k_out_bits=k_out_bits,
+                                   out_dtype=out_dtype, impl=impl)

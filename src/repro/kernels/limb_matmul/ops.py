@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import tracing
 from repro.kernels.blind.blind import blind_encode_pallas
 from repro.kernels.limb_matmul import ref
 from repro.kernels.limb_matmul.limb_matmul import (limb_matmul_planes,
@@ -82,9 +83,8 @@ def encode_weight_planes(w_field, *, bn=256, bk=1024):
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "bm", "bn", "bk"))
-def field_matmul(x_field, w_field, *, impl: str = "auto",
-                 bm=256, bn=256, bk=1024):
-    """(X @ W) mod p. x: (M, K) int32 in [0, p); w: (K, N) int32 in [0, p)."""
+def _field_matmul_jit(x_field, w_field, *, impl: str = "auto",
+                      bm=256, bn=256, bk=1024):
     M, K = x_field.shape
     K2, N = w_field.shape
     assert K == K2
@@ -103,9 +103,10 @@ def field_matmul(x_field, w_field, *, impl: str = "auto",
 
 @functools.partial(jax.jit, static_argnames=("k_bits", "k_out_bits", "impl",
                                              "bm", "bn", "bk", "out_dtype"))
-def fused_blinded_matmul(x, r, w_limbs, u, inv_scale, out_scale, *,
-                         k_bits: int, k_out_bits: int, impl: str = "auto",
-                         bm=256, bn=256, bk=1024, out_dtype=jnp.float32):
+def _fused_blinded_matmul_jit(x, r, w_limbs, u, inv_scale, out_scale, *,
+                              k_bits: int, k_out_bits: int,
+                              impl: str = "auto", bm=256, bn=256, bk=1024,
+                              out_dtype=jnp.float32):
     """Blind -> limb-encode -> field matmul -> unblind -> dequantize, fused.
 
     x: (M, K) float activations (unscaled); r: (M, K) int32 blinding stream;
@@ -154,7 +155,7 @@ def fused_blinded_matmul(x, r, w_limbs, u, inv_scale, out_scale, *,
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "bm", "bk"))
-def field_fold(x_field, s_field, *, impl: str = "auto", bm=256, bk=1024):
+def _field_fold_jit(x_field, s_field, *, impl: str = "auto", bm=256, bk=1024):
     """Freivalds fold ``(X @ S) mod p`` for a skinny fold matrix.
 
     x_field: (M, K) int32 in [0, p); s_field: (K, k) int32 in [0, p) with
@@ -177,6 +178,32 @@ def field_fold(x_field, s_field, *, impl: str = "auto", bm=256, bk=1024):
     out = limb_fold_planes(xl, sl, bm=bm_, bk=bk_,
                            interpret=(impl == "interpret"))
     return out[:M, :kf]
+
+
+def field_matmul(x_field, w_field, **kw):
+    """(X @ W) mod p. x: (M, K) int32 in [0, p); w: (K, N) int32 in [0, p).
+
+    Thin profiling wrapper over the jitted kernel: when a tracer with
+    kernel spans is ambient (core/tracing.py) and the operands are
+    concrete, the call is fenced with ``block_until_ready`` on both sides
+    and recorded as a ``kernel.limb_matmul`` span; otherwise it is the
+    jitted call, untouched."""
+    return tracing.profiled_kernel("kernel.limb_matmul", _field_matmul_jit,
+                                   x_field, w_field, **kw)
+
+
+def fused_blinded_matmul(x, r, w_limbs, u, inv_scale, out_scale, **kw):
+    """Profiling wrapper over the fused chain (``kernel.fused_blind_matmul``
+    spans cover blind_encode + limb matmul + in-register unblind)."""
+    return tracing.profiled_kernel("kernel.fused_blind_matmul",
+                                   _fused_blinded_matmul_jit, x, r, w_limbs,
+                                   u, inv_scale, out_scale, **kw)
+
+
+def field_fold(x_field, s_field, **kw):
+    """Profiling wrapper over the jitted Freivalds fold (``kernel.fold``)."""
+    return tracing.profiled_kernel("kernel.fold", _field_fold_jit,
+                                   x_field, s_field, **kw)
 
 
 def blinded_matmul(x_blinded, w_field, **kw):

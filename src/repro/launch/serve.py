@@ -139,8 +139,13 @@ def run_engine(args) -> None:
     get = get_smoke if args.smoke else get_config
     names = [m.strip() for m in args.models.split(",") if m.strip()]
     policy, fault = _integrity_args(args)
+    tracer = None
+    if args.trace_out:
+        from repro.core.tracing import Tracer
+        tracer = Tracer(kernel_spans=args.trace_kernels)
     engine = ServingEngine(EngineConfig(max_batch=args.batch,
-                                        max_wait_ms=args.max_wait_ms))
+                                        max_wait_ms=args.max_wait_ms),
+                           tracer=tracer)
     legacy, per_model = {}, {}
     for i, name in enumerate(names):
         cfg = get(name)
@@ -239,6 +244,11 @@ def run_engine(args) -> None:
                       f"quarantined={s['quarantined']} "
                       f"restores={s['restores']}")
     engine.close()
+    if tracer is not None:
+        n_events = tracer.dump_chrome(args.trace_out)
+        print(f"[engine] trace: {len(tracer.spans())} spans "
+              f"({n_events} chrome events, dropped={tracer.dropped}) "
+              f"-> {args.trace_out}")
     if mismatches or ok != len(responses):
         raise SystemExit(1)
     if args.devices:
@@ -366,7 +376,12 @@ def run_chaos(args) -> None:
                       health=DeviceHealthConfig(breaker_after=2,
                                                 breaker_cooldown=2))
     chaos = ChaosController(schedule)
-    engine = ServingEngine(EngineConfig(max_batch=per, max_wait_ms=50.0))
+    tracer = None
+    if args.trace_out:
+        from repro.core.tracing import Tracer
+        tracer = Tracer(kernel_spans=args.trace_kernels)
+    engine = ServingEngine(EngineConfig(max_batch=per, max_wait_ms=50.0),
+                           tracer=tracer)
     engine.register_model(name, cfg, params, mode=args.mode,
                           devices=pool, shard=args.shard,
                           liveness=LivenessConfig(cold_timeout_s=2.0),
@@ -414,6 +429,10 @@ def run_chaos(args) -> None:
               f"closes={s['breaker_closes']} abandons={s['abandons']} "
               f"available={s['available']}")
     engine.close()
+    if tracer is not None:
+        n_events = tracer.dump_chrome(args.trace_out)
+        print(f"[chaos] trace: {len(tracer.spans())} spans "
+              f"({n_events} chrome events) -> {args.trace_out}")
 
     # the chaos invariant, clause by clause
     fails = []
@@ -533,9 +552,22 @@ def main():
                          "horizon (breaker half-open probes need a few)")
     ap.add_argument("--chaos-pace", type=float, default=0.02,
                     help="inter-batch sleep in the chaos drill")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON span tree of "
+                         "the run (core/tracing.py): request admission -> "
+                         "micro-batch -> plan steps -> shard dispatches -> "
+                         "verify -> unseal, redacted to shapes/timings. "
+                         "Requires --engine.")
+    ap.add_argument("--trace-kernels", action="store_true",
+                    help="with --trace-out, also record fenced wall-time "
+                         "kernel spans (blind_encode/limb_matmul/fold) — "
+                         "adds block_until_ready fences, so only for "
+                         "profiling runs")
     args = ap.parse_args()
     if args.devices and not args.engine:
         ap.error("--devices requires --engine")
+    if args.trace_out and not args.engine:
+        ap.error("--trace-out requires --engine")
     if args.chaos is not None and (not args.engine or args.devices < 1):
         ap.error("--chaos requires --engine and --devices >= 1")
 

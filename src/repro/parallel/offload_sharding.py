@@ -91,6 +91,7 @@ import jax.numpy as jnp
 
 from repro.core import blinding as B
 from repro.core import integrity as IG
+from repro.core import tracing
 from repro.core.plan import SHARD_MODES
 from repro.runtime import faults as FT
 from repro.kernels.limb_matmul.ops import field_matmul
@@ -240,6 +241,23 @@ class OffloadPlane:
                 setattr(self.report, k, getattr(self.report, k) + v)
                 setattr(self.totals, k, getattr(self.totals, k) + v)
 
+    def _span_start(self, name: str, **attrs):
+        """Open a child span of the ambient parent (the op's
+        "shard.matmul" span — submission AND resolution both run on the
+        batcher thread, so the contextvar parent is always right). None
+        when no tracer is active."""
+        tr = tracing.current_tracer()
+        if tr is None:
+            return None
+        return tr.start_span(name, "shard", **attrs)
+
+    def _span_end(self, span, **attrs) -> None:
+        if span is None:
+            return
+        tr = tracing.current_tracer()
+        if tr is not None:
+            tr.end(span, **attrs)
+
     def _observe_latency(self, dt: float) -> None:
         with self._lock:
             self.watchdog.start_step(now=0.0)
@@ -311,17 +329,30 @@ class OffloadPlane:
     def _shard_ok(y: jax.Array, task: _ShardTask) -> bool:
         return bool(IG.fold_check(y, task.x, task.s, task.ws))
 
+    def _enclave_shard(self, task: _ShardTask, w_q: jax.Array) -> jax.Array:
+        """Enclave computes this shard itself (last resort) — traced as its
+        own child span so post-hoc analysis sees WHERE offload gave up."""
+        self._record(enclave_shards=1)
+        with tracing.maybe_span("shard.enclave", "shard",
+                                shard=task.index, op_index=task.op_index):
+            return field_matmul(task.x, w_q)
+
     def _resolve_shard(self, task: _ShardTask, w_q: jax.Array,
                        primary: DeviceSlot, fut,
-                       spares: Sequence[DeviceSlot]) -> jax.Array:
+                       spares: Sequence[DeviceSlot],
+                       span=None) -> jax.Array:
         """One shard, submitted ``fut`` to verified finish: hedge onto the
         first spare past the straggler deadline, contain crashes, abandon
         dispatches past the hard liveness timeout, retry failures
         (integrity or liveness) down the spare list, enclave-compute as
         last resort. (All shards' primaries are submitted BEFORE any is
-        resolved — ``matmul`` — so distinct devices genuinely overlap.)"""
-        futures: Dict[object, Tuple[DeviceSlot, float]] = {
-            fut: (primary, time.perf_counter())}
+        resolved — ``matmul`` — so distinct devices genuinely overlap.)
+
+        ``span``: the primary dispatch's open trace span (from the submit
+        site); every re-dispatch/hedge opens its own, and each closes with
+        an ``outcome`` attribute when its future resolves."""
+        futures: Dict[object, Tuple[DeviceSlot, float, object]] = {
+            fut: (primary, time.perf_counter(), span)}
         spares = list(spares)
         hedged = False
         attempt = 0                    # liveness re-dispatches of this shard
@@ -330,9 +361,16 @@ class OffloadPlane:
         def next_spare() -> Optional[DeviceSlot]:
             # re-check health at use time: the spares list was captured
             # before this op's earlier shards may have indicted one of them
-            busy = {sl for sl, _ in futures.values()}
+            busy = {v[0] for v in futures.values()}
             return next((s for s in spares
                          if s.available and s not in busy), None)
+
+        def submit_to(slot: DeviceSlot, why: str) -> None:
+            futures[slot.submit(self._device_run, task, w_q)] = (
+                slot, time.perf_counter(),
+                self._span_start("shard.dispatch", shard=task.index,
+                                 op_index=task.op_index, device=slot.name,
+                                 attempt=why))
 
         def redispatch() -> bool:
             """Backoff, then re-submit this shard to the next spare."""
@@ -343,80 +381,79 @@ class OffloadPlane:
             spares.remove(retry)
             attempt += 1
             self._backoff(task, attempt)
-            futures[retry.submit(self._device_run, task, w_q)] = (
-                retry, time.perf_counter())
+            submit_to(retry, "retry")
             self._record(dispatches=1, retries=1)
             return True
 
         while futures:
             hard = self._dispatch_timeout()
             now = time.perf_counter()
-            wait_t = min(max(t0 + hard - now, 0.0)
-                         for _, t0 in futures.values())
+            wait_t = min(max(v[1] + hard - now, 0.0)
+                         for v in futures.values())
             if not hedged and hedge_deadline is not None:
                 wait_t = min(wait_t, hedge_deadline)
             done, _ = wait(list(futures), timeout=wait_t,
                            return_when=FIRST_COMPLETED)
             if not done:
                 now = time.perf_counter()
-                expired = [f for f, (_, t0) in futures.items()
-                           if now - t0 >= hard]
+                expired = [f for f, v in futures.items()
+                           if now - v[1] >= hard]
                 if expired:
                     # hard liveness timeout: indict the device, cut its
                     # wedged queue loose so later probes never line up
                     # behind the hung dispatch, re-dispatch elsewhere
                     for f in expired:
-                        slot, _ = futures.pop(f)
+                        slot, _, sp = futures.pop(f)
+                        self._span_end(sp, outcome="timeout")
                         self._record(timeouts=1)
                         self.pool.record_liveness_failure(slot)
                         slot.abandon()
                     if not futures and not redispatch():
-                        self._record(enclave_shards=1)
-                        return field_matmul(task.x, w_q)
+                        return self._enclave_shard(task, w_q)
                     continue
                 # straggler (still inside the hard deadline): hedge once
                 spare = next_spare()
                 if self.hedging and not hedged and spare is not None:
                     hedged = True
                     spares.remove(spare)
-                    futures[spare.submit(self._device_run, task, w_q)] = (
-                        spare, time.perf_counter())
+                    submit_to(spare, "hedge")
                     self._record(dispatches=1, hedges=1)
                 hedge_deadline = None  # hard expiries drive the waits now
                 continue
             fut = next(iter(done))
-            slot, _ = futures.pop(fut)
+            slot, _, sp = futures.pop(fut)
             try:
                 y, dt = fut.result()
             except Exception:  # noqa: BLE001 — crash containment (§12)
                 # the dispatch raised (injected crash, driver error,
                 # abandoned-queue cancellation): a liveness failure of the
                 # DEVICE, contained here — it never reaches the batch
+                self._span_end(sp, outcome="crash")
                 self._record(crashes=1)
                 self.pool.record_liveness_failure(slot)
                 if not futures and not redispatch():
-                    self._record(enclave_shards=1)
-                    return field_matmul(task.x, w_q)
+                    return self._enclave_shard(task, w_q)
                 continue
             self._observe_latency(dt)
             self._record(checks=1)
             if self._shard_ok(y, task):
+                self._span_end(sp, outcome="verified", device_wall_s=dt)
                 self.pool.record_success(slot, dt)
                 # a hedge loser still teaches the EWMA its wall time
-                for f, (s, _) in futures.items():
+                for f, v in futures.items():
+                    self._span_end(v[2], outcome="superseded")
                     f.add_done_callback(
-                        lambda f_, s_=s: self._late_latency(f_, s_))
+                        lambda f_, s_=v[0]: self._late_latency(f_, s_))
                 return y
+            self._span_end(sp, outcome="verify_failed", device_wall_s=dt)
             self._record(failures=1)
             self.pool.record_failure(slot)
             if not futures:                    # re-dispatch THIS shard only
                 retry = next_spare()
                 if retry is None:
-                    self._record(enclave_shards=1)
-                    return field_matmul(task.x, w_q)
+                    return self._enclave_shard(task, w_q)
                 spares.remove(retry)
-                futures[retry.submit(self._device_run, task, w_q)] = (
-                    retry, time.perf_counter())
+                submit_to(retry, "retry")
                 self._record(dispatches=1, retries=1)
         raise AssertionError("unreachable: shard loop exited without result")
 
@@ -444,6 +481,28 @@ class OffloadPlane:
         and retries can recover from."""
         mode = mode or self.mode
         assert mode in SHARD_MODES, mode
+        # one "shard.matmul" span per sharded op; every dispatch/retry/
+        # hedge/enclave child parents to it (all created on this thread).
+        # Shapes and counts only — the operands are blinded but redaction
+        # would reject them anyway (core/tracing.py).
+        with tracing.maybe_span("shard.matmul", "shard", op_index=op_index,
+                                step=step, mode=mode,
+                                n_shards=self.n_shards,
+                                t=int(x_field.shape[0]),
+                                d_in=int(x_field.shape[1]),
+                                d_out=int(w_q.shape[1])):
+            return self._sharded_matmul(x_field, w_q,
+                                        session_key=session_key,
+                                        op_index=op_index, step=step, k=k,
+                                        folds=folds, mode=mode, group=group)
+
+    def _sharded_matmul(self, x_field: jax.Array, w_q: jax.Array, *,
+                        session_key: jax.Array, op_index: int, step: int,
+                        k: int,
+                        folds: Optional[Sequence[Tuple[jax.Array,
+                                                       jax.Array]]],
+                        mode: str,
+                        group: Optional[Sequence[int]]) -> jax.Array:
         n = self.n_shards
         t, d_in = x_field.shape
         d_out = w_q.shape[1]
@@ -490,7 +549,7 @@ class OffloadPlane:
         # distinct devices overlap; resolution (verify/hedge/retry) then
         # consumes them in shard order
         pending: List[Tuple[int, _ShardTask, DeviceSlot, object,
-                            List[DeviceSlot]]] = []
+                            List[DeviceSlot], object]] = []
         for j, task in enumerate(tasks):
             if task is None:
                 results[j] = jnp.zeros((0, d_out), x_field.dtype)
@@ -523,21 +582,26 @@ class OffloadPlane:
                 spares = []        # one device per share, ever (DESIGN §11)
             if primary is None:
                 # no device this shard may visit: the enclave computes it
-                self._record(enclave_shards=1)
-                results[j] = field_matmul(task.x, w_q)
+                results[j] = self._enclave_shard(task, w_q)
                 continue
+            why = "primary"
             if primary is probe:
                 self.pool.record_probe(primary)
                 self._record(probes=1)
+                why = "probe"
             elif primary is bprobe:
                 self.pool.record_breaker_probe(primary)
                 self._record(breaker_probes=1)
+                why = "breaker_probe"
+            span = self._span_start("shard.dispatch", shard=j,
+                                    op_index=op_index, device=primary.name,
+                                    attempt=why)
             fut = primary.submit(self._device_run, task, w_q)
             self._record(dispatches=1)
-            pending.append((j, task, primary, fut, spares))
-        for j, task, primary, fut, spares in pending:
+            pending.append((j, task, primary, fut, spares, span))
+        for j, task, primary, fut, spares, span in pending:
             results[j] = self._resolve_shard(task, w_q, primary, fut,
-                                             spares)
+                                             spares, span=span)
 
         if mode == "rows":
             return jnp.concatenate(results, axis=0)
@@ -548,7 +612,21 @@ class OffloadPlane:
         return out
 
     def snapshot(self) -> Dict[str, object]:
+        lv = self.liveness
         with self._lock:
             totals = dataclasses.asdict(self.totals)
+            # the plane's straggler/liveness brain, exported (DESIGN.md
+            # §13): the hedge and abandon deadlines in force RIGHT NOW,
+            # so a post-hoc chaos drill can explain every hedge/timeout
+            watchdog = {
+                "p50_s": self.watchdog.p50,
+                "samples": len(self.watchdog.history),
+                "flagged_steps": self.watchdog.flagged_steps,
+                "hedge_deadline_s": self.watchdog.deadline(floor=1e-4),
+                "dispatch_timeout_s": self.watchdog.deadline(
+                    factor=lv.timeout_factor, floor=lv.timeout_floor_s,
+                    cold=lv.cold_timeout_s),
+            }
         return {"mode": self.mode, "hedging": self.hedging,
-                "totals": totals, "pool": self.pool.snapshot()}
+                "totals": totals, "watchdog": watchdog,
+                "pool": self.pool.snapshot()}

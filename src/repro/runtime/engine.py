@@ -54,6 +54,8 @@ from repro.core.attestation import Quote, measure_enclave
 from repro.core.origami import OrigamiExecutor
 from repro.core.plan import PlacementPlan
 from repro.core.planner import PartitionPlan, PartitionPlanner
+from repro.core import tracing
+from repro.runtime.observability import MetricsRegistry, sync_struct
 from repro.runtime.sessions import SessionPool
 from repro.runtime.straggler import StepWatchdog
 
@@ -89,6 +91,10 @@ class _Pending:
     future: Future
     submit_t: float
     deadline_s: Optional[float]
+    # trace plane (core/tracing.py): the per-request root span and its
+    # open "queue" child, both None when the engine has no tracer
+    span: Optional[object] = None
+    queue_span: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -119,63 +125,92 @@ class _ModelEntry:
 
 
 class EngineStats:
-    """Aggregate serving telemetry (queried live, not a snapshot)."""
+    """Aggregate serving telemetry — a facade over ``MetricsRegistry``.
+
+    Counters used to live as bare ints bumped with ``+=`` from the
+    submit path, the batcher thread and (via snapshot reads) any caller
+    thread — unsynchronized read-modify-write. Every counter now lives in
+    the registry under its DESIGN.md §13 name; attribute access keeps
+    working (``stats.batches`` reads the registry) so existing tests and
+    benches hold, but *mutation* should go through ``inc``/``inc_many``,
+    which are atomic under the registry's lock. ``stats.lock`` aliases
+    that (re-entrant) lock, so legacy ``with stats.lock: stats.x += 1``
+    blocks remain correct rather than deadlocking.
+    """
 
     LAT_WINDOW = 4096
+    LATENCY_HIST = "engine.latency_s"
 
-    def __init__(self) -> None:
-        self.lock = threading.Lock()
-        self.submitted = 0
-        self.completed = 0
-        self.rejected = 0                # admission control
-        self.expired = 0                 # deadline passed before dispatch
-        self.mac_failures = 0
-        self.batches = 0
-        self.padded_slots = 0
-        self.batched_requests = 0
+    # attribute -> registry counter name (the §13 naming scheme: one
+    # dotted namespace per stat surface)
+    COUNTERS = {
+        "submitted": "engine.submitted",
+        "completed": "engine.completed",
+        "rejected": "engine.rejected",           # admission control
+        "expired": "engine.expired",             # deadline before dispatch
+        "mac_failures": "engine.mac_failures",
+        "batches": "engine.batches",
+        "padded_slots": "engine.padded_slots",
+        "batched_requests": "engine.batched_requests",
         # integrity counters (DESIGN.md §9)
-        self.verify_checks = 0           # Freivalds checks run
-        self.verify_failures = 0         # checks that mismatched
-        self.device_retries = 0          # fresh-session re-offloads
-        self.recomputes = 0              # enclave recomputed a batch
-        self.trusted_batches = 0         # dispatched under quarantine
-        self.quarantines = 0             # backends quarantined
-        self.probations = 0              # quarantine probes dispatched
-        self.probation_restores = 0      # probes that restored offload
+        "verify_checks": "integrity.verify_checks",
+        "verify_failures": "integrity.verify_failures",
+        "device_retries": "integrity.device_retries",
+        "recomputes": "integrity.recomputes",
+        "trusted_batches": "integrity.trusted_batches",
+        "quarantines": "integrity.quarantines",
+        "probations": "integrity.probations",
+        "probation_restores": "integrity.probation_restores",
         # multi-device plane counters (DESIGN.md §11)
-        self.shard_checks = 0            # shard-local Freivalds checks
-        self.shard_failures = 0          # shard checks that mismatched
-        self.shard_retries = 0           # single-shard re-dispatches
-        self.shard_hedges = 0            # straggler duplicates launched
-        self.shard_enclave = 0           # shards the enclave computed
-                                         # (shares-mode recovery, or every
-                                         # device exhausted)
+        "shard_checks": "shard.checks",
+        "shard_failures": "shard.failures",
+        "shard_retries": "shard.retries",
+        "shard_hedges": "shard.hedges",
+        "shard_enclave": "shard.enclave",
         # liveness plane counters (DESIGN.md §12)
-        self.shard_crashes = 0           # contained dispatch exceptions
-        self.shard_timeouts = 0          # dispatches abandoned past deadline
-        self.degradations = 0            # models entering enclave-only mode
-        self.recoveries = 0              # models recovering a device
-        self.degraded_batches = 0        # batches served enclave-only
-        self.shutdown_drops = 0          # futures force-resolved at close
+        "shard_crashes": "liveness.shard_crashes",
+        "shard_timeouts": "liveness.shard_timeouts",
+        "degradations": "liveness.degradations",
+        "recoveries": "liveness.recoveries",
+        "degraded_batches": "liveness.degraded_batches",
+        "shutdown_drops": "liveness.shutdown_drops",
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.lock = self.registry.lock
+        for metric in self.COUNTERS.values():
+            self.registry.set_counter(metric, 0)
         self.start_t = time.monotonic()
         self.first_batch_t: Optional[float] = None
-        self.latencies: Deque[float] = deque(maxlen=self.LAT_WINDOW)
 
     # -- recording ---------------------------------------------------------
+    def inc(self, attr: str, n: int = 1) -> None:
+        """Atomically bump one counter by its legacy attribute name."""
+        self.registry.inc(self.COUNTERS[attr], n)
+
+    def inc_many(self, **deltas: int) -> None:
+        """Atomically bump several counters (one lock acquisition)."""
+        self.registry.inc_many(
+            **{self.COUNTERS[a]: n for a, n in deltas.items()})
+
     def record_batch(self, n_valid: int, pad: int) -> None:
         with self.lock:
             if self.first_batch_t is None:
                 self.first_batch_t = time.monotonic()
-            self.batches += 1
-            self.batched_requests += n_valid
-            self.padded_slots += pad
+            self.inc_many(batches=1, batched_requests=n_valid,
+                          padded_slots=pad)
 
     def record_done(self, latency_s: float) -> None:
         with self.lock:
-            self.completed += 1
-            self.latencies.append(latency_s)
+            self.inc("completed")
+            self.registry.observe(self.LATENCY_HIST, latency_s)
 
     # -- derived -----------------------------------------------------------
+    @property
+    def latencies(self) -> List[float]:
+        return self.registry.hist_values(self.LATENCY_HIST)
+
     @property
     def time_to_first_batch_s(self) -> Optional[float]:
         if self.first_batch_t is None:
@@ -183,8 +218,7 @@ class EngineStats:
         return self.first_batch_t - self.start_t
 
     def _quantile(self, q: float) -> Optional[float]:
-        with self.lock:
-            lat = sorted(self.latencies)
+        lat = sorted(self.latencies)
         if not lat:
             return None
         return lat[min(len(lat) - 1, int(q * len(lat)))]
@@ -196,42 +230,29 @@ class EngineStats:
         return self._quantile(0.95)
 
     def snapshot(self, engine: "ServingEngine") -> Dict[str, object]:
-        with self.lock:
-            out = {
-                "submitted": self.submitted, "completed": self.completed,
-                "rejected": self.rejected, "expired": self.expired,
-                "mac_failures": self.mac_failures, "batches": self.batches,
-                "padded_slots": self.padded_slots,
-                "batched_requests": self.batched_requests,
-            }
+        c = {attr: self.registry.get(m) for attr, m in self.COUNTERS.items()}
+        out: Dict[str, object] = {
+            "submitted": c["submitted"], "completed": c["completed"],
+            "rejected": c["rejected"], "expired": c["expired"],
+            "mac_failures": c["mac_failures"], "batches": c["batches"],
+            "padded_slots": c["padded_slots"],
+            "batched_requests": c["batched_requests"],
+        }
         out["queue_depth"] = engine.queue_depth()
         out["time_to_first_batch_s"] = self.time_to_first_batch_s
         out["p50_latency_s"] = self.p50_latency_s()
         out["p95_latency_s"] = self.p95_latency_s()
-        with self.lock:
-            out["integrity"] = {
-                "verify_checks": self.verify_checks,
-                "verify_failures": self.verify_failures,
-                "device_retries": self.device_retries,
-                "recomputes": self.recomputes,
-                "trusted_batches": self.trusted_batches,
-                "quarantines": self.quarantines,
-                "probations": self.probations,
-                "probation_restores": self.probation_restores,
-                "shard_checks": self.shard_checks,
-                "shard_failures": self.shard_failures,
-                "shard_retries": self.shard_retries,
-                "shard_hedges": self.shard_hedges,
-                "shard_enclave": self.shard_enclave,
-            }
-            out["liveness"] = {
-                "shard_crashes": self.shard_crashes,
-                "shard_timeouts": self.shard_timeouts,
-                "degradations": self.degradations,
-                "recoveries": self.recoveries,
-                "degraded_batches": self.degraded_batches,
-                "shutdown_drops": self.shutdown_drops,
-            }
+        out["integrity"] = {
+            k: c[k] for k in (
+                "verify_checks", "verify_failures", "device_retries",
+                "recomputes", "trusted_batches", "quarantines",
+                "probations", "probation_restores", "shard_checks",
+                "shard_failures", "shard_retries", "shard_hedges",
+                "shard_enclave")}
+        out["liveness"] = {
+            k: c[k] for k in (
+                "shard_crashes", "shard_timeouts", "degradations",
+                "recoveries", "degraded_batches", "shutdown_drops")}
         # per-device health of every model running a sharded offload plane
         # (quarantine is per-DEVICE there, not per-model)
         out["devices"] = {
@@ -278,16 +299,40 @@ class EngineStats:
                    "recoveries": e.recoveries,
                    "degraded_batches": e.degraded_batches}
             for name, e in engine.models.items()}
+        # unified registry view: publish the per-model/per-device feeder
+        # surfaces (Telemetry, ShardReport, session stats, watchdog EWMAs,
+        # breaker/quarantine state) as gauges, then export one consistent
+        # cut — the same names the benches and DESIGN.md §13 use
+        engine.sync_registry(out)
+        out["metrics"] = self.registry.snapshot()
         return out
+
+
+def _counter_property(metric: str) -> property:
+    def fget(self: EngineStats) -> int:
+        return self.registry.get(metric)
+
+    def fset(self: EngineStats, value: int) -> None:
+        self.registry.set_counter(metric, value)
+
+    return property(fget, fset)
+
+
+for _attr, _metric in EngineStats.COUNTERS.items():
+    setattr(EngineStats, _attr, _counter_property(_metric))
 
 
 class ServingEngine:
     """Continuous micro-batching engine over a registry of enclaves."""
 
-    def __init__(self, cfg: Optional[EngineConfig] = None, **kw):
+    def __init__(self, cfg: Optional[EngineConfig] = None,
+                 tracer: Optional[tracing.Tracer] = None,
+                 registry: Optional[MetricsRegistry] = None, **kw):
         self.cfg = cfg or EngineConfig(**kw)
         self.models: Dict[str, _ModelEntry] = {}
-        self.stats = EngineStats()
+        self.tracer = tracer
+        self.stats = EngineStats(registry)
+        self.registry = self.stats.registry
         self.watchdog = StepWatchdog()
         self._buckets: "OrderedDict[Tuple[str, Tuple[int, ...]], Deque[_Pending]]" = OrderedDict()
         self._futures: Dict[Tuple[str, int], Future] = {}   # (model, rid)
@@ -421,24 +466,32 @@ class ServingEngine:
         deadline = (deadline_s if deadline_s is not None
                     else self.cfg.default_deadline_s)
         with self._cv:
-            self.stats.submitted += 1
+            self.stats.inc("submitted")
             entry = self.models.get(model)
             if entry is None or self._closed:
-                self.stats.rejected += 1
+                self.stats.inc("rejected")
                 fut.set_result(Response(
                     req.rid, None, False, 0.0,
                     error="shutdown" if self._closed else "rejected"))
                 return fut
             if (self._in_flight >= self.cfg.max_queue
                     or (model, req.rid) in self._futures):
-                self.stats.rejected += 1
+                self.stats.inc("rejected")
                 fut.set_result(Response(req.rid, None, False, 0.0,
                                         error="rejected"))
                 return fut
             self._futures[(model, req.rid)] = fut
+            p = _Pending(model, req, fut, now, deadline)
+            if self.tracer is not None and self.tracer.enabled:
+                # admitted requests only: a shed request never cost a stage
+                p.span = self.tracer.start_span(
+                    "request", "request", parent=None, rid=req.rid,
+                    model=model, shape=list(req.shape))
+                p.queue_span = self.tracer.start_span(
+                    "queue", "queue", parent=p.span)
             bucket_key = (model, tuple(req.shape))
             bucket = self._buckets.setdefault(bucket_key, deque())
-            bucket.append(_Pending(model, req, fut, now, deadline))
+            bucket.append(p)
             self._in_flight += 1
             self._ensure_thread()
             self._cv.notify_all()
@@ -527,8 +580,8 @@ class ServingEngine:
                 if not bucket:
                     self._buckets.pop(key, None)
             for p in expired:
-                with self.stats.lock:
-                    self.stats.expired += 1
+                self.stats.inc("expired")
+                self._end_queue_span(p, expired=True)
                 self._finish(p, Response(p.req.rid, None, False,
                                          time.monotonic() - p.submit_t,
                                          error="deadline_exceeded"))
@@ -556,8 +609,8 @@ class ServingEngine:
         live: List[_Pending] = []
         for p in batch:
             if p.deadline_s is not None and now - p.submit_t > p.deadline_s:
-                with self.stats.lock:
-                    self.stats.expired += 1
+                self.stats.inc("expired")
+                self._end_queue_span(p, expired=True)
                 self._finish(p, Response(p.req.rid, None, False,
                                          now - p.submit_t,
                                          error="deadline_exceeded"))
@@ -566,6 +619,23 @@ class ServingEngine:
         batch = live
         if not batch:
             return
+        # trace plane: close every member's queue span, open one "batch"
+        # span parented at the OLDEST request's root (the request whose
+        # wait formed the batch); other members' roots carry the batch
+        # span id as an attribute so their trees remain navigable
+        batch_span = None
+        if self.tracer is not None and self.tracer.enabled:
+            for p in batch:
+                self._end_queue_span(p)
+            anchor = min(batch, key=lambda p: p.submit_t)
+            batch_span = self.tracer.start_span(
+                "batch", "batch", parent=anchor.span, model=entry.name,
+                n_requests=len(batch),
+                rids=[p.req.rid for p in batch[:32]])
+            for p in batch:
+                if p.span is not None and p is not anchor:
+                    self.tracer.annotate(p.span,
+                                         batch_span_id=batch_span.span_id)
         entry.batches += 1
         if entry.chaos is not None:
             # the drill clock: arm/disarm scripted faults for this batch
@@ -591,8 +661,7 @@ class ServingEngine:
                  and entry.trusted_streak >= self.cfg.probation_after)
         if probe:
             entry.probations += 1
-            with self.stats.lock:
-                self.stats.probations += 1
+            self.stats.inc("probations")
         # graceful degradation (DESIGN.md §12): zero serving-eligible
         # devices (every slot quarantined or breaker-open) means a blinded
         # dispatch has nowhere to go — serve this batch verified
@@ -609,44 +678,53 @@ class ServingEngine:
             if dpool.n_available() == 0 and not can_probe:
                 degrade_trusted = True
                 entry.degraded_batches += 1
-                with self.stats.lock:
-                    self.stats.degraded_batches += 1
+                self.stats.inc("degraded_batches")
                 # enclave-only batches still age the pool's cooldowns —
                 # otherwise a fully-benched pool could never reach its
                 # half-open / probation probe state and the degradation
                 # would be permanent
                 dpool.begin_dispatch()
-        boxes, n_valid, pad, integ = execute_sealed_batch(
-            entry.executor, [p.req for p in batch],
-            input_key=entry.input_key, max_batch=self.cfg.max_batch,
-            session_key=entry.pool.acquire,   # lazy: only consumed if a
-            input_dtype=entry.input_dtype,    # valid request reaches infer
-            trusted=(entry.quarantined and not probe) or degrade_trusted,
-            retry_device=self.cfg.integrity_retry)
+        try:
+            with tracing.activate(self.tracer, batch_span):
+                boxes, n_valid, pad, integ = execute_sealed_batch(
+                    entry.executor, [p.req for p in batch],
+                    input_key=entry.input_key, max_batch=self.cfg.max_batch,
+                    session_key=entry.pool.acquire,  # lazy: only consumed if
+                    input_dtype=entry.input_dtype,   # a valid request infers
+                    trusted=(entry.quarantined and not probe)
+                    or degrade_trusted,
+                    retry_device=self.cfg.integrity_retry)
+        finally:
+            if batch_span is not None and self.tracer is not None:
+                self.tracer.end(batch_span)
+        if batch_span is not None and self.tracer is not None:
+            self.tracer.annotate(batch_span, n_valid=n_valid, pad=pad,
+                                 flagged=integ.flagged,
+                                 trusted=integ.trusted > 0,
+                                 degraded=degrade_trusted, probe=probe)
         if n_valid:
             self.stats.record_batch(n_valid, pad)
-        with self.stats.lock:
-            self.stats.mac_failures += sum(b is None for b in boxes)
-            self.stats.verify_checks += integ.checks
-            self.stats.verify_failures += integ.failures
-            self.stats.device_retries += integ.retried
-            self.stats.recomputes += integ.recomputed
-            self.stats.trusted_batches += integ.trusted
-            self.stats.shard_checks += integ.shard_checks
-            self.stats.shard_failures += integ.shard_failures
-            self.stats.shard_retries += integ.shard_retries
-            self.stats.shard_hedges += integ.shard_hedges
-            self.stats.shard_enclave += integ.shard_enclave
-            self.stats.shard_crashes += integ.shard_crashes
-            self.stats.shard_timeouts += integ.shard_timeouts
+        self.stats.inc_many(
+            mac_failures=sum(b is None for b in boxes),
+            verify_checks=integ.checks,
+            verify_failures=integ.failures,
+            device_retries=integ.retried,
+            recomputes=integ.recomputed,
+            trusted_batches=integ.trusted,
+            shard_checks=integ.shard_checks,
+            shard_failures=integ.shard_failures,
+            shard_retries=integ.shard_retries,
+            shard_hedges=integ.shard_hedges,
+            shard_enclave=integ.shard_enclave,
+            shard_crashes=integ.shard_crashes,
+            shard_timeouts=integ.shard_timeouts)
         if n_valid and entry.quarantined and not per_device:
             if probe:
                 if integ.checks and not integ.failures:
                     entry.quarantined = False
                     entry.consec_failures = 0
                     entry.restores += 1
-                    with self.stats.lock:
-                        self.stats.probation_restores += 1
+                    self.stats.inc("probation_restores")
                 entry.trusted_streak = 0     # clean: healthy again; dirty:
             else:                            # restart the probation clock
                 entry.trusted_streak += 1
@@ -660,8 +738,7 @@ class ServingEngine:
                 if entry.consec_failures >= self.cfg.quarantine_after:
                     entry.quarantined = True
                     entry.trusted_streak = 0
-                    with self.stats.lock:
-                        self.stats.quarantines += 1
+                    self.stats.inc("quarantines")
             elif integ.checks:
                 entry.consec_failures = 0
         elif n_valid and per_device and integ.flagged:
@@ -676,13 +753,11 @@ class ServingEngine:
             if entry.degraded and available:
                 entry.degraded = False
                 entry.recoveries += 1
-                with self.stats.lock:
-                    self.stats.recoveries += 1
+                self.stats.inc("recoveries")
             elif not entry.degraded and not available:
                 entry.degraded = True
                 entry.degradations += 1
-                with self.stats.lock:
-                    self.stats.degradations += 1
+                self.stats.inc("degradations")
         self.watchdog.end_step()
         for p, box in zip(batch, boxes):
             self._finish(p, Response(p.req.rid, box, box is not None,
@@ -692,9 +767,20 @@ class ServingEngine:
                                      error=None if box is not None
                                      else "mac_failed"))
 
+    def _end_queue_span(self, p: _Pending, expired: bool = False) -> None:
+        if p.queue_span is not None and self.tracer is not None:
+            if p.queue_span.t1 is None:
+                self.tracer.end(p.queue_span, expired=expired)
+            p.queue_span = None
+
     def _finish(self, p: _Pending, resp) -> None:
         if resp.ok:
             self.stats.record_done(resp.latency_s)
+        self._end_queue_span(p)
+        if p.span is not None and self.tracer is not None:
+            self.tracer.end(p.span, ok=resp.ok, error=resp.error,
+                            flagged=resp.flagged)
+            p.span = None
         with self._lock:
             self.completion_order.append((p.model, p.req.rid))
             self._futures.pop((p.model, p.req.rid), None)
@@ -707,6 +793,69 @@ class ServingEngine:
     def snapshot(self) -> Dict[str, object]:
         """Aggregate serving telemetry (EngineStats.snapshot shorthand)."""
         return self.stats.snapshot(self)
+
+    def sync_registry(self, legacy: Optional[Dict[str, object]] = None
+                      ) -> MetricsRegistry:
+        """Publish every feeder surface into the one registry as gauges.
+
+        The producers (executor Telemetry, plane ShardReport, DeviceSlot
+        breaker/quarantine state, StepWatchdog EWMAs, session pools) keep
+        their own lightweight accounting on their own hot paths; this
+        pulls a consistent cut of each into the registry under the §13
+        names so ``snapshot()["metrics"]`` is the single queryable view.
+        ``legacy``: the partially-built legacy snapshot dict (when called
+        from EngineStats.snapshot) — reused to avoid re-walking planes.
+        """
+        reg = self.registry
+        reg.gauges({"engine.queue_depth": self.queue_depth(),
+                    "engine.watchdog.p50_s": self.watchdog.p50 or 0.0,
+                    "engine.watchdog.flagged_steps":
+                        self.watchdog.flagged_steps})
+        for name, e in self.models.items():
+            sync_struct(reg, f"model.{name}.telemetry",
+                        e.executor.telemetry_blinded,
+                        ("blinded_bytes", "returned_bytes",
+                         "offloaded_flops", "enclave_flops",
+                         "enclave_peak_feature_bytes", "calls",
+                         "device_matmuls", "enclave_matmuls", "verify_ops",
+                         "verify_flops", "fold_matmuls"))
+            reg.gauge(f"model.{name}.telemetry.trusted_matmuls",
+                      e.executor.telemetry_trusted.trusted_matmuls)
+            for k, v in e.pool.stats().items():
+                if isinstance(v, (int, float)):
+                    reg.gauge(f"session.{name}.{k}", v)
+            reg.gauges({f"model.{name}.quarantined": int(e.quarantined),
+                        f"model.{name}.degraded": int(e.degraded)})
+            plane = e.executor.plane
+            if plane is None:
+                continue
+            sync_struct(reg, f"model.{name}.shard", plane.totals,
+                        ("ops", "dispatches", "checks", "failures",
+                         "retries", "hedges", "enclave_shards", "probes",
+                         "crashes", "timeouts", "backoffs",
+                         "breaker_probes"))
+            psnap = plane.snapshot()
+            wd = psnap.get("watchdog", {})
+            for k, v in wd.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    reg.gauge(f"model.{name}.shard.watchdog.{k}", v)
+            # per-device breaker/quarantine/EWMA gauges (satellite: chaos
+            # drills and hedging decisions must be explainable post-hoc)
+            for idx, slot in enumerate(psnap["pool"]["slots"]):
+                pre = f"device.{name}.{idx}"
+                for k, v in slot.items():
+                    if isinstance(v, bool):
+                        reg.gauge(f"{pre}.{k}", int(v))
+                    elif isinstance(v, (int, float)):
+                        reg.gauge(f"{pre}.{k}", v)
+                    elif k == "breaker" and isinstance(v, str):
+                        # encode breaker state as an ordinal gauge
+                        # (closed=0, half_open=1, open=2) + keep the
+                        # string in the legacy snapshot
+                        order = {"closed": 0, "half_open": 1, "open": 2}
+                        reg.gauge(f"{pre}.breaker_state",
+                                  order.get(v, -1))
+        return reg
 
     # -- lifecycle ---------------------------------------------------------
     def drain(self, timeout_s: float = 60.0) -> bool:
@@ -744,8 +893,7 @@ class ServingEngine:
             self._buckets.clear()
             self._in_flight = 0
         for p in leftovers:
-            with self.stats.lock:
-                self.stats.shutdown_drops += 1
+            self.stats.inc("shutdown_drops")
             self._finish(p, Response(p.req.rid, None, False,
                                      time.monotonic() - p.submit_t,
                                      error="shutdown"))

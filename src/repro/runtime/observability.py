@@ -1,0 +1,151 @@
+"""Unified metrics registry: every pipeline counter under ONE lock.
+
+Before this module the repo had five ad-hoc stat surfaces — ``Telemetry``
+(core/slalom.py), ``EngineStats`` (runtime/engine.py), ``ShardReport``
+(parallel/offload_sharding.py), ``IntegrityTotals`` (runtime/serving.py)
+and the liveness/breaker counters scattered over ``DeviceSlot`` — each
+with its own locking story (or none: ``EngineStats`` counters were bumped
+with bare ``+=`` from three threads). ``MetricsRegistry`` replaces the
+*accounting* layer: named counters, gauges and bounded histograms behind a
+single re-entrant lock, so a multi-field update (``inc_many``) is atomic
+and a ``snapshot()`` is a consistent cut. The legacy dataclasses survive
+as facades/feeders (tests and call sites keep their spelling) but the
+numbers live here, under names shared by ``engine.snapshot()["metrics"]``,
+the benches, and the trace plane (DESIGN.md §13 fixes the naming scheme:
+``<surface>.<counter>``, dotted, lowercase — e.g. ``engine.submitted``,
+``integrity.verify_checks``, ``shard.retries``, ``liveness.degradations``,
+``device.<model>.<idx>.ewma_latency_s``).
+
+Metrics carry **aggregates only** — counts, byte totals, flop totals,
+latency quantiles. Nothing request-identifying and no payload bytes ever
+enter the registry, so exporting a snapshot is redaction-safe by
+construction (values are required to be plain numbers).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from collections import deque
+from typing import Any, Dict, Iterable, Optional
+
+HIST_WINDOW = 4096      # per-histogram sample bound (ring buffer)
+
+
+class MetricsRegistry:
+    """Counters / gauges / histograms behind one RLock.
+
+    The lock is re-entrant and exposed as ``.lock`` so legacy code that
+    did ``with stats.lock: stats.x += 1; stats.y += 1`` keeps its
+    multi-field atomicity when ``stats`` became a facade whose property
+    setters each take the same lock.
+    """
+
+    def __init__(self) -> None:
+        self.lock = threading.RLock()
+        self._counters: Dict[str, int] = {}
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, deque] = {}
+
+    # -- counters ----------------------------------------------------------
+    def inc(self, name: str, n: int = 1) -> int:
+        with self.lock:
+            v = self._counters.get(name, 0) + n
+            self._counters[name] = v
+            return v
+
+    def inc_many(self, **deltas: int) -> None:
+        """Atomically apply several counter deltas (one lock acquisition)."""
+        with self.lock:
+            for name, n in deltas.items():
+                if n:
+                    self._counters[name] = self._counters.get(name, 0) + n
+
+    def set_counter(self, name: str, value: int) -> None:
+        with self.lock:
+            self._counters[name] = value
+
+    def get(self, name: str, default: int = 0) -> int:
+        with self.lock:
+            return self._counters.get(name, default)
+
+    # -- gauges ------------------------------------------------------------
+    def gauge(self, name: str, value: float) -> None:
+        with self.lock:
+            self._gauges[name] = value
+
+    def gauges(self, mapping: Dict[str, float]) -> None:
+        with self.lock:
+            self._gauges.update(mapping)
+
+    def get_gauge(self, name: str, default: float = 0.0) -> float:
+        with self.lock:
+            return self._gauges.get(name, default)
+
+    # -- histograms --------------------------------------------------------
+    def observe(self, name: str, value: float) -> None:
+        with self.lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = deque(maxlen=HIST_WINDOW)
+            h.append(float(value))
+
+    def hist_values(self, name: str) -> list:
+        with self.lock:
+            return list(self._hists.get(name, ()))
+
+    def quantile(self, name: str, q: float) -> float:
+        vals = sorted(self.hist_values(name))
+        if not vals:
+            return 0.0
+        idx = min(len(vals) - 1, max(0, math.ceil(q * len(vals)) - 1))
+        return vals[idx]
+
+    # -- export ------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Consistent cut of every metric: counters and gauges verbatim,
+        histograms summarized (count/p50/p95/max)."""
+        with self.lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = {k: list(v) for k, v in self._hists.items()}
+        out: Dict[str, Any] = {"counters": counters, "gauges": gauges,
+                               "histograms": {}}
+        for name, vals in hists.items():
+            sv = sorted(vals)
+            n = len(sv)
+            summ = {"count": n}
+            if n:
+                summ.update(
+                    p50=sv[min(n - 1, max(0, math.ceil(0.50 * n) - 1))],
+                    p95=sv[min(n - 1, max(0, math.ceil(0.95 * n) - 1))],
+                    max=sv[-1])
+            out["histograms"][name] = summ
+        return out
+
+    def reset(self, prefix: Optional[str] = None) -> None:
+        """Drop metrics (all, or those under a dotted prefix) — bench use."""
+        with self.lock:
+            if prefix is None:
+                self._counters.clear()
+                self._gauges.clear()
+                self._hists.clear()
+                return
+            for store in (self._counters, self._gauges, self._hists):
+                for k in [k for k in store if k.startswith(prefix)]:
+                    del store[k]
+
+
+def sync_struct(registry: MetricsRegistry, prefix: str,
+                obj: Any, fields: Iterable[str]) -> None:
+    """Publish a stats dataclass's numeric fields as gauges under
+    ``<prefix>.<field>`` — the bridge that makes ``Telemetry`` /
+    ``ShardReport`` / session stats readable from the one registry at
+    snapshot time without rewriting their producers."""
+    vals = {}
+    for f in fields:
+        v = getattr(obj, f, None)
+        if isinstance(v, bool) or v is None:
+            v = int(bool(v))
+        if isinstance(v, (int, float)):
+            vals[f"{prefix}.{f}"] = v
+    registry.gauges(vals)

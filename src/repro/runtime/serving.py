@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import tracing
 from repro.core.attestation import Quote, measure_enclave, verify_quote
 from repro.core.origami import OrigamiExecutor
 from repro.core.sealing import SealedBox, seal, unseal
@@ -198,12 +199,15 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
     """
     valid_idx: List[int] = []
     inputs: List[np.ndarray] = []
-    for i, r in enumerate(requests):
-        pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
-                        r.shape)
-        if ok:
-            valid_idx.append(i)
-            inputs.append(np.asarray(pt))
+    with tracing.maybe_span("unseal", "crypto",
+                            n_requests=len(requests)) as usp:
+        for i, r in enumerate(requests):
+            pt, ok = unseal(jnp.asarray(r.session_key, jnp.uint32), r.box,
+                            r.shape)
+            if ok:
+                valid_idx.append(i)
+                inputs.append(np.asarray(pt))
+        tracing.annotate(usp, n_valid=len(inputs))
     boxes: List[Optional[SealedBox]] = [None] * len(requests)
     integ = BatchIntegrity()
     if not inputs:
@@ -219,8 +223,10 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
         # session material — do NOT pop a pool key (its prefetched factor
         # set would be generated and never taken)
         integ.trusted = True
-        result = executor.infer(batch, session_key=_trusted_key(),
-                                trusted=True)
+        with tracing.maybe_span("infer", "infer", attempt="trusted",
+                                trusted=True):
+            result = executor.infer(batch, session_key=_trusted_key(),
+                                    trusted=True)
     else:
         def absorb_shards(res) -> None:
             if res.sharding is None:
@@ -233,29 +239,55 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
             integ.shard_crashes += res.sharding.crashes
             integ.shard_timeouts += res.sharding.timeouts
 
-        sk = session_key() if callable(session_key) else session_key
-        result = executor.infer(batch, session_key=sk)
+        with tracing.maybe_span("session.acquire", "session",
+                                pooled=callable(session_key)):
+            sk = session_key() if callable(session_key) else session_key
+        with tracing.maybe_span("infer", "infer", attempt="blinded") as isp:
+            result = executor.infer(batch, session_key=sk)
+            tracing.annotate(isp, checks=result.integrity.n_checked,
+                             failures=result.integrity.n_failed)
         integ.checks = result.integrity.n_checked
         integ.failures = result.integrity.n_failed
         integ.corrupted = result.integrity.n_corrupted
         absorb_shards(result)
         if not result.integrity.ok and retry_device:
-            sk = _fresh_session(session_key, sk)
-            result = executor.infer(batch, session_key=sk)
+            with tracing.maybe_span("session.acquire", "session",
+                                    pooled=callable(session_key),
+                                    retry=True):
+                sk = _fresh_session(session_key, sk)
+            with tracing.maybe_span("infer", "infer",
+                                    attempt="retry") as isp:
+                result = executor.infer(batch, session_key=sk)
+                tracing.annotate(isp, checks=result.integrity.n_checked,
+                                 failures=result.integrity.n_failed)
             integ.retried = True
             integ.checks += result.integrity.n_checked
             integ.failures += result.integrity.n_failed
             integ.corrupted += result.integrity.n_corrupted
             absorb_shards(result)
         if not result.integrity.ok:
-            result = executor.infer(batch, session_key=_trusted_key(),
-                                    trusted=True)
+            with tracing.maybe_span("infer", "infer", attempt="recompute",
+                                    trusted=True):
+                result = executor.infer(batch, session_key=_trusted_key(),
+                                        trusted=True)
             integ.recomputed = True
-    logits = np.asarray(result.logits, np.float32)[:len(inputs)]
-    for row, i in enumerate(valid_idx):
-        r = requests[i]
-        boxes[i] = seal(jnp.asarray(r.session_key, jnp.uint32),
-                        jnp.asarray(logits[row]), response_nonce(r.rid))
+        # summary of the batch's verification outcome, one span so the
+        # tree reads queue -> batch -> ... -> verify -> seal even though
+        # the checks themselves ran inside the infer attempts
+        with tracing.maybe_span("verify", "verify", checks=integ.checks,
+                                failures=integ.failures,
+                                shard_checks=integ.shard_checks,
+                                shard_failures=integ.shard_failures,
+                                retried=integ.retried,
+                                recomputed=integ.recomputed):
+            pass
+    with tracing.maybe_span("seal", "crypto", n_responses=len(valid_idx),
+                            pad=pad):
+        logits = np.asarray(result.logits, np.float32)[:len(inputs)]
+        for row, i in enumerate(valid_idx):
+            r = requests[i]
+            boxes[i] = seal(jnp.asarray(r.session_key, jnp.uint32),
+                            jnp.asarray(logits[row]), response_nonce(r.rid))
     return boxes, len(inputs), pad, integ
 
 
