@@ -1,0 +1,197 @@
+"""Performance attribution: phase decomposition + cost-model calibration.
+
+Two acceptance bars from DESIGN.md §14 are measured here and recorded as
+``BENCH_attribution.json``:
+
+- **decomposition**: a traced engine round folded by the
+  CriticalPathProfiler must attribute every instant of each request's
+  wall to exactly one phase — per-profile ``critical_sum_s`` within 10%
+  of ``wall_s`` (the fold is exact by construction; the tolerance only
+  absorbs float rounding) — with compile isolated in its own phase
+  instead of inflating ``device_compute``.
+
+- **calibration**: the paper-constant EnclaveParams were transcribed
+  from §VI SGX/TitanXp measurements; this container is neither. A
+  CalibratedCostModel fitted from the same profiler's warm observations
+  must shrink the predicted-vs-measured error of the linear cost model
+  ``t = sum(unit_cost x quantity)`` versus the paper constants — the
+  "before/after calibration" table the ISSUE asks for. The fitted params
+  then re-price a PartitionPlanner sweep (``calibrate()``), recording how
+  the modeled runtime curve moves while the chosen partition stays
+  floor-feasible.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict
+
+import jax
+
+ROUNDS = 3
+REQS_PER_ROUND = 4
+DECOMPOSITION_TOL_PCT = 10.0
+
+BENCH_CONFIG = {
+    "model": "vgg16 (smoke)",
+    "mode": "origami",
+    "rounds": ROUNDS,
+    "requests_per_round": REQS_PER_ROUND,
+    "decomposition_tol_pct": DECOMPOSITION_TOL_PCT,
+}
+
+# the phases the linear cost model prices (queue/seal/other are serving
+# overheads outside the offload cost model)
+_MODEL_PHASES = ("device_compute", "blind", "unblind", "dispatch_wait")
+
+
+def _paper_unit_costs(base, device: str = "gpu") -> Dict[str, float]:
+    """Per-feature unit costs implied by the paper-constant params —
+    the 'before' side of the calibration table."""
+    flops = base.cpu_flops * (base.gpu_speedup if device == "gpu" else 1.0)
+    return {
+        "device_flops": 1.0 / flops,
+        "blind_bytes": 1.0 / base.blind_bytes_per_s,
+        "unblind_bytes": 1.0 / base.enclave_mem_bytes_per_s,
+        "dispatches": base.dispatch_overhead_s,
+    }
+
+
+def _linear_err_pct(costs: Dict[str, float], observations) -> float:
+    """Mean relative error of ``t = sum(c x q)`` over the model phases."""
+    errs = []
+    for quantities, seconds in observations:
+        meas = sum(seconds.get(p, 0.0) for p in _MODEL_PHASES)
+        if meas <= 0.0:
+            continue
+        from repro.core.trust import CalibratedCostModel
+        pred = sum(costs.get(f, 0.0) * quantities.get(f, 0.0)
+                   for f in CalibratedCostModel.PHASE_FEATURES.values())
+        errs.append(abs(pred - meas) / meas * 100.0)
+    return statistics.mean(errs) if errs else float("nan")
+
+
+def run_suite(emit: Callable[[str, float, str], None]) -> Dict[str, Dict]:
+    from repro.configs import get_smoke
+    from repro.core.planner import PartitionPlanner
+    from repro.core.tracing import Tracer
+    from repro.core.trust import CalibratedCostModel, EnclaveParams, EnclaveSim
+    from repro.launch.serve import _sealed_requests
+    from repro.models import model as M
+    from repro.runtime.engine import EngineConfig, ServingEngine
+
+    cfg = get_smoke("vgg16")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tracer = Tracer(kernel_spans=False)
+    engine = ServingEngine(EngineConfig(max_batch=REQS_PER_ROUND,
+                                        max_wait_ms=10.0), tracer=tracer)
+    entry = engine.register_model("vgg16", cfg, params, mode="origami")
+    try:
+        walls = []
+        for i in range(ROUNDS + 1):        # round 0 is the cold round —
+            reqs, _ = _sealed_requests(    # kept: it IS the compile probe
+                cfg, REQS_PER_ROUND, rid0=1_000 * i)
+            t0 = time.perf_counter()
+            futs = [engine.submit("vgg16", r) for r in reqs]
+            resps = [f.result(timeout=300) for f in futs]
+            walls.append(time.perf_counter() - t0)
+            assert all(r.ok for r in resps), \
+                [r.error for r in resps if not r.ok]
+        snap = engine.snapshot()
+    finally:
+        engine.close()
+
+    # -- decomposition bar --------------------------------------------------
+    phases = snap["phases"]
+    max_err = 0.0
+    for key, prof in phases["profiles"].items():
+        if prof["wall_s"] > 0:
+            err = (abs(prof["critical_sum_s"] - prof["wall_s"])
+                   / prof["wall_s"] * 100.0)
+            max_err = max(max_err, err)
+    compile_s = sum(p["compile_s"] for p in phases["profiles"].values())
+    decomp_ok = (max_err < DECOMPOSITION_TOL_PCT and compile_s > 0.0
+                 and phases["requests"] == (ROUNDS + 1) * REQS_PER_ROUND)
+    emit("attribution/decomposition", phases["wall_s"] * 1e6,
+         f"requests={phases['requests']} max_err={max_err:.4f}% "
+         f"compile={compile_s:.2f}s ({'OK' if decomp_ok else 'FAIL'})")
+
+    # -- calibration bar ----------------------------------------------------
+    obs = engine.profiler.cost_observations()
+    base = EnclaveParams()
+    model = CalibratedCostModel(base=base, device="gpu")
+    model.observe_all(obs)
+    base_err = _linear_err_pct(_paper_unit_costs(base), obs)
+    cal_err = _linear_err_pct(model.unit_costs, obs)
+    cal_ok = bool(obs) and cal_err < base_err
+    # predicted-vs-measured error lives next to the phase gauges so a
+    # metrics scrape sees model quality without parsing the bench JSON
+    gauges = {**model.gauges(),
+              "costmodel.err_pct.paper": round(base_err, 2),
+              "costmodel.err_pct.calibrated": round(cal_err, 2)}
+    engine.registry.gauges(gauges)
+
+    # plan-level view: paper vs fitted pricing vs measured warm wall. The
+    # executor batches REQS_PER_ROUND images per infer; the sim prices one.
+    sim = EnclaveSim(cfg, device="gpu")
+    plan = entry.executor.plan
+    paper_pred_s = sim.plan_runtime(plan).runtime_s
+    cal_pred_s = model.predict_plan_s(sim, plan)
+    measured_per_image_s = statistics.median(walls[1:]) / REQS_PER_ROUND
+
+    # planner re-pricing: same sweep, measured params in force
+    planner = PartitionPlanner(privacy_floor=0.35)
+    before = planner.plan(cfg, params, mode="origami")
+    fitted = planner.calibrate(engine.profiler)
+    after = planner.plan(cfg, params, mode="origami")
+    emit("attribution/calibration", cal_err * 1e3,
+         f"obs={len(obs)} base_err={base_err:.1f}% cal_err={cal_err:.1f}% "
+         f"({'OK' if cal_ok else 'FAIL'})")
+    emit("attribution/planner", after.runtime_s.get(after.partition,
+                                                    0.0) * 1e6,
+         f"p={before.partition}->{after.partition} "
+         f"paper={paper_pred_s * 1e3:.2f}ms "
+         f"fitted={after.runtime_s.get(after.partition, 0.0) * 1e3:.2f}ms")
+
+    return {
+        "decomposition": {
+            "requests": phases["requests"],
+            "wall_s": phases["wall_s"],
+            "critical_s": phases["critical_s"],
+            "compile_s": round(compile_s, 6),
+            "max_profile_err_pct": round(max_err, 6),
+            "tol_pct": DECOMPOSITION_TOL_PCT,
+            "pass": decomp_ok,
+        },
+        "calibration": {
+            "observations": len(obs),
+            "unit_costs": {k: float(f"{v:.6g}")
+                           for k, v in model.unit_costs.items()},
+            "paper_err_pct": round(base_err, 2),
+            "calibrated_err_pct": round(cal_err, 2),
+            "gauges": {k: float(f"{v:.6g}") for k, v in gauges.items()},
+            "improvement_x": round(base_err / cal_err, 2)
+            if cal_err > 0 else None,
+            "pass": cal_ok,
+            "plan": {
+                "digest": plan.digest[:12],
+                "paper_pred_s": round(paper_pred_s, 6),
+                "calibrated_pred_s": round(cal_pred_s, 6),
+                "measured_per_image_s": round(measured_per_image_s, 6),
+            },
+            "planner": {
+                "partition_before": before.partition,
+                "partition_after": after.partition,
+                "fitted_cpu_flops": float(f"{fitted.cpu_flops:.6g}"),
+                "modeled_before_s": {
+                    str(p): round(v, 6)
+                    for p, v in before.runtime_s.items()},
+                "modeled_after_s": {
+                    str(p): round(v, 6)
+                    for p, v in after.runtime_s.items()},
+            },
+        },
+        "rounds": {"wall_s": [round(w, 4) for w in walls],
+                   "cold_round_s": round(walls[0], 4),
+                   "warm_median_s": round(statistics.median(walls[1:]), 4)},
+    }

@@ -33,6 +33,7 @@ RECORDED_SUITES = {
     "offload": ("offload_bench", "BENCH_offload.json"),
     "chaos": ("chaos_bench", "BENCH_chaos.json"),
     "trace": ("trace_overhead_bench", "BENCH_trace_overhead.json"),
+    "attribution": ("attribution_bench", "BENCH_attribution.json"),
 }
 
 
@@ -81,7 +82,10 @@ def main() -> None:
                          "one engine degradation cycle into "
                          "BENCH_chaos.json; 'trace' measures span-tracing "
                          "overhead (on vs off, <5%% bar) into "
-                         "BENCH_trace_overhead.json")
+                         "BENCH_trace_overhead.json; 'attribution' folds "
+                         "a traced round into the §14 phase decomposition "
+                         "and fits the calibrated cost model into "
+                         "BENCH_attribution.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent

@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Direction-aware bench regression gate (DESIGN.md §14).
+
+Compares fresh ``BENCH_*.json`` artifacts against the committed baselines
+in ``benchmarks/baselines/`` using per-metric tolerance bands:
+
+- ``lower``-is-better metrics (latencies, overheads) fail when
+  ``fresh > base * (1 + rel) + abs``;
+- ``higher``-is-better metrics (throughput, speedups, detection rates,
+  pass flags) fail when ``fresh < base * (1 - rel) - abs``.
+
+Bands are deliberately generous for wall-clock metrics (CI runners are
+shared and noisy — the gate catches structural regressions, not jitter)
+and tight for correctness-flavored ones (detection rates, pass booleans:
+those never legitimately regress). A missing metric in a fresh artifact
+fails loudly — silent disappearance of a measured bar is itself a
+regression. Baselines are refreshed deliberately via ``--write-baselines``
+(never automatically), so a slow drift needs a reviewed commit to become
+the new normal.
+
+Usage::
+
+    python scripts/bench_check.py                  # gate fresh vs committed
+    python scripts/bench_check.py --write-baselines  # re-seed baselines
+    python scripts/bench_check.py --fresh-dir /tmp/x --suites serving
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+from typing import Any, Dict, List, Optional
+
+# suite -> artifact name (mirrors benchmarks/run.py RECORDED_SUITES)
+FILES = {
+    "blinding": "BENCH_blinding.json",
+    "serving": "BENCH_serving.json",
+    "integrity": "BENCH_integrity.json",
+    "plans": "BENCH_plans.json",
+    "offload": "BENCH_offload.json",
+    "chaos": "BENCH_chaos.json",
+    "trace": "BENCH_trace_overhead.json",
+    "attribution": "BENCH_attribution.json",
+}
+
+# (dotted path into results, direction, rel band, abs band)
+SPECS: Dict[str, List[tuple]] = {
+    "serving": [
+        ("load_burst.achieved_rps", "higher", 0.60, 0.0),
+        ("engine.time_to_first_batch_s", "lower", 1.50, 0.0),
+    ],
+    "blinding": [
+        ("blinding/vgg16_t1l1_fused_pre.us", "lower", 1.00, 0.0),
+        ("blinding/vgg16_t1l2_fused.us", "lower", 1.00, 0.0),
+    ],
+    "integrity": [
+        # pct-point overheads: absolute band (tiny baselines, rel is noise)
+        ("overhead.full_k1.overhead_pct", "lower", 0.0, 10.0),
+        # correctness: full-policy detection NEVER regresses
+        ("detection.bit_flip.full_k1.detection_rate", "higher", 0.0, 0.0),
+        ("detection.row_swap.full_k1.detection_rate", "higher", 0.0, 0.0),
+    ],
+    "plans": [
+        ("origami.us", "lower", 1.00, 0.0),
+        ("mixed.us", "lower", 1.00, 0.0),
+    ],
+    "offload": [
+        ("scaling.rows_2dev.speedup_vs_1dev", "higher", 0.40, 0.0),
+        ("hedging.speedup", "higher", 0.40, 0.0),
+    ],
+    "chaos": [
+        ("classes.crash.detection_s", "lower", 5.00, 0.5),
+        ("engine.liveness.recoveries", "higher", 0.0, 0.0),
+    ],
+    "trace": [
+        ("engine_mixed_plan.overhead_pct", "lower", 0.0, 10.0),
+        ("span_micro.span_us", "lower", 2.00, 0.0),
+    ],
+    "attribution": [
+        ("decomposition.max_profile_err_pct", "lower", 0.0, 5.0),
+        ("decomposition.pass", "higher", 0.0, 0.0),
+        ("calibration.pass", "higher", 0.0, 0.0),
+        ("calibration.improvement_x", "higher", 0.90, 0.0),
+    ],
+}
+
+
+def _get(doc: Dict[str, Any], dotted: str) -> Optional[float]:
+    node: Any = doc.get("results", doc)
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    if isinstance(node, bool):
+        return 1.0 if node else 0.0
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def check_metric(base: float, fresh: float, direction: str,
+                 rel: float, abs_band: float) -> bool:
+    """True when ``fresh`` is within the regression band of ``base``."""
+    if direction == "lower":
+        return fresh <= base * (1.0 + rel) + abs_band
+    return fresh >= base * (1.0 - rel) - abs_band
+
+
+def check_suite(suite: str, base_doc: Dict, fresh_doc: Dict) -> List[str]:
+    """Failure messages for one suite (empty = pass)."""
+    fails = []
+    for dotted, direction, rel, abs_band in SPECS.get(suite, ()):
+        base = _get(base_doc, dotted)
+        fresh = _get(fresh_doc, dotted)
+        if base is None:
+            # baseline predates this metric: nothing to regress against
+            print(f"  [skip] {suite}.{dotted}: not in baseline")
+            continue
+        if fresh is None:
+            fails.append(f"{suite}.{dotted}: missing from fresh artifact "
+                         f"(baseline {base:g})")
+            continue
+        ok = check_metric(base, fresh, direction, rel, abs_band)
+        band = (f"{direction}, rel={rel:g}" +
+                (f", abs={abs_band:g}" if abs_band else ""))
+        mark = "ok  " if ok else "FAIL"
+        print(f"  [{mark}] {suite}.{dotted}: base={base:g} "
+              f"fresh={fresh:g} ({band})")
+        if not ok:
+            fails.append(f"{suite}.{dotted}: {fresh:g} vs baseline "
+                         f"{base:g} ({band})")
+    return fails
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", default=str(root / "benchmarks"
+                                                 / "baselines"))
+    ap.add_argument("--fresh-dir", default=str(root),
+                    help="where the fresh BENCH_*.json live (repo root)")
+    ap.add_argument("--suites", nargs="*", default=None,
+                    help="subset to check (default: every suite with a "
+                         "committed baseline)")
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="seed/refresh baselines from the fresh artifacts "
+                         "instead of checking")
+    args = ap.parse_args()
+    base_dir = pathlib.Path(args.baseline_dir)
+    fresh_dir = pathlib.Path(args.fresh_dir)
+    suites = args.suites or sorted(FILES)
+
+    if args.write_baselines:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        for suite in suites:
+            src = fresh_dir / FILES[suite]
+            if src.exists():
+                shutil.copyfile(src, base_dir / FILES[suite])
+                print(f"seeded {base_dir / FILES[suite]}")
+        return 0
+
+    all_fails: List[str] = []
+    checked = 0
+    for suite in suites:
+        base_path = base_dir / FILES[suite]
+        fresh_path = fresh_dir / FILES[suite]
+        if not base_path.exists():
+            print(f"[skip] {suite}: no committed baseline {base_path}")
+            continue
+        if not fresh_path.exists():
+            # a suite that was gated before must keep producing artifacts
+            all_fails.append(f"{suite}: fresh artifact {fresh_path} missing")
+            print(f"[FAIL] {suite}: fresh artifact missing")
+            continue
+        print(f"[{suite}] {fresh_path} vs {base_path}")
+        all_fails += check_suite(suite, json.loads(base_path.read_text()),
+                                 json.loads(fresh_path.read_text()))
+        checked += 1
+    print(f"\nbench_check: {checked} suite(s), "
+          f"{len(all_fails)} regression(s)")
+    for f in all_fails:
+        print(f"  REGRESSION: {f}")
+    return 1 if all_fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

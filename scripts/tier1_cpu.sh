@@ -35,11 +35,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # observability smoke: the same sharded drill with span tracing on — the
 # trace artifact (queue -> batch -> plan steps -> shard dispatches ->
 # verify -> unseal, DESIGN.md §13) must come out as valid Chrome-trace
-# JSON with a connected tree; CI uploads trace_tier1.json
+# JSON with a connected tree, and the metrics snapshot must carry the §14
+# phase decomposition (per-profile criticals summing to the request wall
+# within 10%); CI uploads trace_tier1.json + metrics_tier1.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --requests 8 --plan mixed --devices 2 --shard rows --inject bit_flip \
-    --verify full --trace-out trace_tier1.json
+    --verify full --trace-out trace_tier1.json \
+    --metrics-out metrics_tier1.json --postmortem-dir postmortem_tier1
 python - <<'PY'
 import json
 doc = json.load(open("trace_tier1.json"))
@@ -52,6 +55,22 @@ need = {"request", "queue", "batch", "unseal", "plan.segment",
 assert need <= names, need - names
 print(f"[trace] OK: {len(ev)} spans, {len(roots)} requests, "
       f"kinds={sorted({e['cat'] for e in ev})}")
+m = json.load(open("metrics_tier1.json"))
+ph = m["phases"]
+assert ph["requests"] == len(roots), (ph["requests"], len(roots))
+for key, prof in ph["profiles"].items():
+    err = abs(prof["critical_sum_s"] - prof["wall_s"])
+    assert err <= 0.10 * prof["wall_s"] + 1e-9, (key, prof)
+# the dishonest device triggered verify-failure post-mortem bundles, and
+# every bundle is redaction-safe JSON (spans carry shapes/timings only)
+assert m["flight_recorder"]["dumps"] > 0, m["flight_recorder"]
+import glob
+bundles = glob.glob("postmortem_tier1/postmortem_*.json")
+assert bundles, "no post-mortem bundle written"
+for b in bundles:
+    json.load(open(b))
+print(f"[phases] OK: {ph['requests']} requests decomposed, "
+      f"{len(bundles)} post-mortem bundle(s)")
 PY
 # liveness chaos smoke: scripted crash on device 0 + hang on device 1
 # (total blackout), a session-refill fault window and a sealing-

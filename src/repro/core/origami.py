@@ -127,6 +127,11 @@ class OrigamiExecutor:
         # logits, used after a failed Freivalds check or under quarantine
         self._jitted_trusted = jax.jit(
             functools.partial(self._traced, trusted=True))
+        # first-call signatures already inferred: the first (trace-kind,
+        # plan, shapes) call pays jax.jit tracing + compilation, and the
+        # profiler (runtime/profiling.py) needs that cold call *named* —
+        # its infer span is stamped first_call=True
+        self._seen_sigs: set = set()
 
     # -- telemetry snapshots -------------------------------------------------
     @property
@@ -278,6 +283,11 @@ class OrigamiExecutor:
         offloaded path — the integrity layer's recovery primitive."""
         key = (session_key if session_key is not None
                else jax.random.PRNGKey(0))
+        shapes = tuple(sorted((k, tuple(jnp.shape(v)))
+                              for k, v in batch.items()))
+        sig = (bool(trusted), self.plan.digest, shapes)
+        first_call = sig not in self._seen_sigs
+        self._seen_sigs.add(sig)
         shard_report = None
         if trusted:
             logits, boundary, rep = self._jitted_trusted(batch, key, None)
@@ -301,6 +311,20 @@ class OrigamiExecutor:
         # as an offload trace (or vice versa)
         self._tele_last = (self._tele_trusted if trusted
                            else self._tele_blinded)
+        # stamp the ambient infer span (runtime/serving.py opens it around
+        # this call) with compile provenance + the cost-model feature
+        # quantities this trace moved — what the profiler folds and the
+        # CalibratedCostModel fits. Plain ints only (redaction allowlist).
+        sp = tracing.current_span()
+        if sp is not None:
+            tele = self._tele_last
+            tracing.annotate(
+                sp, first_call=first_call,
+                device_flops=int(tele.offloaded_flops),
+                enclave_flops=int(tele.enclave_flops),
+                blind_bytes=int(tele.blinded_bytes),
+                unblind_bytes=int(tele.returned_bytes),
+                device_matmuls=int(tele.device_matmuls))
         return OrigamiResult(logits=logits, boundary=boundary,
                              telemetry=self.telemetry,
                              integrity=IG.IntegrityReport(*rep),

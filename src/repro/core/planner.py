@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import plan as PL
 from repro.core.integrity import IntegrityPolicy
-from repro.core.trust import EnclaveSim
+from repro.core.trust import CalibratedCostModel, EnclaveParams, EnclaveSim
 from repro.privacy.data import make_batch
 from repro.privacy.ssim import ssim
 
@@ -181,6 +181,32 @@ class PartitionPlanner:
         self.verify_depth = verify_depth
         self.n_images = n_images
         self.device = device
+        # measured cost-model override (calibrate()); None = paper constants
+        self.enclave_params: Optional[EnclaveParams] = None
+
+    def _sim(self, cfg: ModelConfig) -> EnclaveSim:
+        return EnclaveSim(cfg, params=self.enclave_params,
+                          device=self.device)
+
+    def calibrate(self, source) -> EnclaveParams:
+        """Re-price future plans with *measured* per-phase unit costs.
+
+        ``source`` may be a runtime/profiling.CriticalPathProfiler (its
+        ``cost_observations()`` feed the fit), a pre-fitted
+        CalibratedCostModel, or an explicit EnclaveParams. Returns the
+        params now in force; every subsequent ``plan()`` /
+        ``placement_plan()`` prices with them instead of the paper
+        constants (core/trust.py keeps the paper model untouched — this
+        only swaps the parameter vector this planner instance uses)."""
+        if isinstance(source, EnclaveParams):
+            self.enclave_params = source
+        elif isinstance(source, CalibratedCostModel):
+            self.enclave_params = source.fit()
+        else:                      # profiler (anything with observations)
+            model = CalibratedCostModel(device=self.device)
+            model.observe_all(source.cost_observations())
+            self.enclave_params = model.fit()
+        return self.enclave_params
 
     def plan(self, cfg: ModelConfig, params=None, *, mode: str = "origami",
              partition: Optional[int] = None,
@@ -205,7 +231,7 @@ class PartitionPlanner:
         candidates = sorted(leakage)
         n_max = max(candidates)
         n_blind_all = len(cfg.cnn_layers)   # tier-1 covers every layer
-        sim = EnclaveSim(cfg, device=self.device)
+        sim = self._sim(cfg)
         runtime_s = {p: sim.runtime(mode, p).runtime_s
                      for p in candidates + [n_blind_all]}
 
@@ -265,7 +291,7 @@ class PartitionPlanner:
             assert params is not None, "planner needs params for the proxy"
             leakage = leakage_profile(params, cfg, n_images=self.n_images)
         n = len(cfg.cnn_layers)
-        sim = EnclaveSim(cfg, device=self.device)
+        sim = self._sim(cfg)
         scored: List[PlacementChoice] = []
         for boundary in sorted(leakage):
             for cand in self.placement_candidates(cfg, boundary,

@@ -229,9 +229,13 @@ class Tracer:
                 "dur": round((t1 - s.t0) * 1e6, 3),
                 "args": {**s.attrs, "trace_id": s.trace_id,
                          "span_id": s.span_id, "parent_id": s.parent_id}})
+        # truncation marker: a bounded store drops the NEWEST spans once
+        # full (children of stored parents may be missing) — consumers
+        # must not read a truncated export as a connected tree
         return {"traceEvents": events, "displayTimeUnit": "ms",
                 "otherData": {"epoch_unix": self.epoch_unix,
-                              "dropped_spans": self.dropped}}
+                              "dropped_spans": self.dropped,
+                              "truncated": self.dropped > 0}}
 
     def dump_chrome(self, path) -> int:
         doc = self.to_chrome()
@@ -245,6 +249,12 @@ class Tracer:
         with open(path, "w") as f:
             for s in spans:
                 f.write(json.dumps(s.as_dict()) + "\n")
+            if self.dropped:
+                # same truncation stamp the Chrome export carries — a
+                # trailing marker line, so line-oriented consumers see it
+                # without schema changes to the span records
+                f.write(json.dumps({"truncated": True,
+                                    "dropped_spans": self.dropped}) + "\n")
         return len(spans)
 
 

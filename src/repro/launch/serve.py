@@ -35,6 +35,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -116,6 +117,36 @@ def _print_plans(names, get) -> None:
             print(f"  {mode:8s} {PL.compile_mode(cfg, mode).summary()}")
 
 
+def _flight_recorder(args):
+    """A FlightRecorder for --postmortem-dir (None keeps the engine's
+    default in-memory ring)."""
+    if not args.postmortem_dir:
+        return None
+    from repro.runtime.profiling import FlightRecorder
+    return FlightRecorder(out_dir=args.postmortem_dir)
+
+
+def _dump_observability(args, engine, tag) -> None:
+    """--metrics-out / --postmortem-dir exit dump: one JSON file with the
+    unified registry snapshot, the §14 phase decomposition and the flight
+    recorder's ring summary."""
+    rec = engine.recorder.snapshot()
+    if args.postmortem_dir:
+        print(f"[{tag}] flight recorder: {rec['dumps']} post-mortem "
+              f"bundle(s), {rec['suppressed']} suppressed "
+              f"-> {args.postmortem_dir}")
+    if not args.metrics_out:
+        return
+    snap = engine.snapshot()
+    with open(args.metrics_out, "w") as f:
+        json.dump({"metrics": snap["metrics"], "phases": snap["phases"],
+                   "flight_recorder": rec}, f, indent=2, sort_keys=True,
+                  default=str)
+    print(f"[{tag}] metrics snapshot "
+          f"({len(snap['metrics']['counters'])} counters, "
+          f"{len(snap['metrics']['gauges'])} gauges) -> {args.metrics_out}")
+
+
 def _sealed_requests(cfg, n, rid0=0, rng=None):
     rng = rng or np.random.default_rng(rid0)
     keys, reqs = [], []
@@ -145,7 +176,7 @@ def run_engine(args) -> None:
         tracer = Tracer(kernel_spans=args.trace_kernels)
     engine = ServingEngine(EngineConfig(max_batch=args.batch,
                                         max_wait_ms=args.max_wait_ms),
-                           tracer=tracer)
+                           tracer=tracer, recorder=_flight_recorder(args))
     legacy, per_model = {}, {}
     for i, name in enumerate(names):
         cfg = get(name)
@@ -249,6 +280,12 @@ def run_engine(args) -> None:
         print(f"[engine] trace: {len(tracer.spans())} spans "
               f"({n_events} chrome events, dropped={tracer.dropped}) "
               f"-> {args.trace_out}")
+        phases = engine.profile_phases()
+        roll = phases.get("critical_s", {})
+        top = sorted(roll.items(), key=lambda kv: -kv[1])[:4]
+        print(f"[engine] phases ({phases['requests']} requests): "
+              + " ".join(f"{k}={v * 1e3:.1f}ms" for k, v in top))
+    _dump_observability(args, engine, "engine")
     if mismatches or ok != len(responses):
         raise SystemExit(1)
     if args.devices:
@@ -381,7 +418,7 @@ def run_chaos(args) -> None:
         from repro.core.tracing import Tracer
         tracer = Tracer(kernel_spans=args.trace_kernels)
     engine = ServingEngine(EngineConfig(max_batch=per, max_wait_ms=50.0),
-                           tracer=tracer)
+                           tracer=tracer, recorder=_flight_recorder(args))
     engine.register_model(name, cfg, params, mode=args.mode,
                           devices=pool, shard=args.shard,
                           liveness=LivenessConfig(cold_timeout_s=2.0),
@@ -433,6 +470,7 @@ def run_chaos(args) -> None:
         n_events = tracer.dump_chrome(args.trace_out)
         print(f"[chaos] trace: {len(tracer.spans())} spans "
               f"({n_events} chrome events) -> {args.trace_out}")
+    _dump_observability(args, engine, "chaos")
 
     # the chaos invariant, clause by clause
     fails = []
@@ -558,6 +596,15 @@ def main():
                          "micro-batch -> plan steps -> shard dispatches -> "
                          "verify -> unseal, redacted to shapes/timings. "
                          "Requires --engine.")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the unified metrics-registry snapshot "
+                         "(DESIGN.md §13) plus the §14 phase decomposition "
+                         "as JSON at exit. Requires --engine.")
+    ap.add_argument("--postmortem-dir", default=None, metavar="DIR",
+                    help="write redaction-safe flight-recorder post-mortem "
+                         "bundles (last spans + metric deltas + engine "
+                         "events) on quarantine/breaker-open/degradation/"
+                         "verify-failure. Requires --engine.")
     ap.add_argument("--trace-kernels", action="store_true",
                     help="with --trace-out, also record fenced wall-time "
                          "kernel spans (blind_encode/limb_matmul/fold) — "
@@ -570,6 +617,8 @@ def main():
         ap.error("--trace-out requires --engine")
     if args.chaos is not None and (not args.engine or args.devices < 1):
         ap.error("--chaos requires --engine and --devices >= 1")
+    if (args.metrics_out or args.postmortem_dir) and not args.engine:
+        ap.error("--metrics-out/--postmortem-dir require --engine")
 
     if args.requests is None:
         args.requests = 32 if args.engine else 16

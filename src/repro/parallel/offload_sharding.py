@@ -224,6 +224,10 @@ class OffloadPlane:
             deadline_factor=3.0, warmup_steps=4, window=64))
         self.report = ShardReport()         # current-infer counters
         self.totals = ShardReport()         # lifetime counters
+        # optional runtime/profiling.FlightRecorder (the engine attaches
+        # its own at register time): bad shard outcomes land in the
+        # post-mortem ring even though the plane recovers them locally
+        self.recorder = None
         self._lock = threading.Lock()
 
     @property
@@ -257,6 +261,11 @@ class OffloadPlane:
         tr = tracing.current_tracer()
         if tr is not None:
             tr.end(span, **attrs)
+
+    def _rec_event(self, outcome: str, slot: DeviceSlot) -> None:
+        """Log a bad shard outcome to the attached flight recorder."""
+        if self.recorder is not None:
+            self.recorder.event("shard_" + outcome, device=slot.name)
 
     def _observe_latency(self, dt: float) -> None:
         with self._lock:
@@ -406,6 +415,7 @@ class OffloadPlane:
                         slot, _, sp = futures.pop(f)
                         self._span_end(sp, outcome="timeout")
                         self._record(timeouts=1)
+                        self._rec_event("timeout", slot)
                         self.pool.record_liveness_failure(slot)
                         slot.abandon()
                     if not futures and not redispatch():
@@ -430,6 +440,7 @@ class OffloadPlane:
                 # DEVICE, contained here — it never reaches the batch
                 self._span_end(sp, outcome="crash")
                 self._record(crashes=1)
+                self._rec_event("crash", slot)
                 self.pool.record_liveness_failure(slot)
                 if not futures and not redispatch():
                     return self._enclave_shard(task, w_q)
@@ -447,6 +458,7 @@ class OffloadPlane:
                 return y
             self._span_end(sp, outcome="verify_failed", device_wall_s=dt)
             self._record(failures=1)
+            self._rec_event("verify_failed", slot)
             self.pool.record_failure(slot)
             if not futures:                    # re-dispatch THIS shard only
                 retry = next_spare()

@@ -56,6 +56,7 @@ from repro.core.plan import PlacementPlan
 from repro.core.planner import PartitionPlan, PartitionPlanner
 from repro.core import tracing
 from repro.runtime.observability import MetricsRegistry, sync_struct
+from repro.runtime.profiling import CriticalPathProfiler, FlightRecorder
 from repro.runtime.sessions import SessionPool
 from repro.runtime.straggler import StepWatchdog
 
@@ -122,6 +123,11 @@ class _ModelEntry:
     recoveries: int = 0                  # degraded -> healthy transitions
     degraded_batches: int = 0            # batches served enclave-only
     chaos: Optional[object] = None       # runtime/chaos.ChaosController
+    # flight-recorder trigger edges (batcher thread only): per-device
+    # breaker/quarantine transitions are detected as counter increases
+    # across dispatches, since the transitions happen inside the plane
+    breaker_opens_seen: int = 0
+    dev_quarantines_seen: int = 0
 
 
 class EngineStats:
@@ -304,6 +310,11 @@ class EngineStats:
         # breaker/quarantine state) as gauges, then export one consistent
         # cut — the same names the benches and DESIGN.md §13 use
         engine.sync_registry(out)
+        # performance-attribution plane (§14): fold any newly completed
+        # request trees and export the phase decomposition alongside the
+        # metrics cut it explains
+        out["phases"] = engine.profile_phases()
+        out["flight_recorder"] = engine.recorder.snapshot()
         out["metrics"] = self.registry.snapshot()
         return out
 
@@ -327,12 +338,20 @@ class ServingEngine:
 
     def __init__(self, cfg: Optional[EngineConfig] = None,
                  tracer: Optional[tracing.Tracer] = None,
-                 registry: Optional[MetricsRegistry] = None, **kw):
+                 registry: Optional[MetricsRegistry] = None,
+                 recorder: Optional[FlightRecorder] = None, **kw):
         self.cfg = cfg or EngineConfig(**kw)
         self.models: Dict[str, _ModelEntry] = {}
         self.tracer = tracer
         self.stats = EngineStats(registry)
         self.registry = self.stats.registry
+        # performance-attribution plane: folds completed request trees into
+        # the §14 phase taxonomy; always constructed (ingest is a no-op
+        # without a tracer) so snapshot()["phases"] is a stable surface
+        self.profiler = CriticalPathProfiler()
+        # always-on post-mortem ring; callers pass a FlightRecorder with an
+        # out_dir to get on-disk bundles (serve.py --postmortem-dir)
+        self.recorder = recorder if recorder is not None else FlightRecorder()
         self.watchdog = StepWatchdog()
         self._buckets: "OrderedDict[Tuple[str, Tuple[int, ...]], Deque[_Pending]]" = OrderedDict()
         self._futures: Dict[Tuple[str, int], Future] = {}   # (model, rid)
@@ -439,6 +458,10 @@ class ServingEngine:
             plan=plan, placement=executor.plan,
             input_key=input_key, input_dtype=input_dtype)
         entry.chaos = chaos
+        if executor.plane is not None:
+            # bad shard outcomes (verify-fail/crash/timeout) land in the
+            # post-mortem ring even though the plane recovers them itself
+            executor.plane.recorder = self.recorder
         if chaos is not None:
             chaos.bind(
                 pool=(executor.plane.pool if executor.plane is not None
@@ -631,11 +654,17 @@ class ServingEngine:
             batch_span = self.tracer.start_span(
                 "batch", "batch", parent=anchor.span, model=entry.name,
                 n_requests=len(batch),
+                plan=entry.executor.plan.digest[:12],
                 rids=[p.req.rid for p in batch[:32]])
             for p in batch:
-                if p.span is not None and p is not anchor:
-                    self.tracer.annotate(p.span,
-                                         batch_span_id=batch_span.span_id)
+                if p.span is not None:
+                    # every member root gets the plan digest (the profiler
+                    # keys on it; only the anchor has the batch child)
+                    self.tracer.annotate(
+                        p.span, plan=entry.executor.plan.digest[:12])
+                    if p is not anchor:
+                        self.tracer.annotate(
+                            p.span, batch_span_id=batch_span.span_id)
         entry.batches += 1
         if entry.chaos is not None:
             # the drill clock: arm/disarm scripted faults for this batch
@@ -718,6 +747,15 @@ class ServingEngine:
             shard_enclave=integ.shard_enclave,
             shard_crashes=integ.shard_crashes,
             shard_timeouts=integ.shard_timeouts)
+        if integ.flagged:
+            # post-mortem trigger: a Freivalds failure this batch (whatever
+            # recovered it) — the span tail shows which op/shard lied
+            self.recorder.dump(
+                "verify_failure", tracer=self.tracer,
+                registry=self.registry, model=entry.name,
+                checks=integ.checks, failures=integ.failures,
+                shard_failures=integ.shard_failures,
+                batch_index=entry.batches - 1)
         if n_valid and entry.quarantined and not per_device:
             if probe:
                 if integ.checks and not integ.failures:
@@ -739,6 +777,11 @@ class ServingEngine:
                     entry.quarantined = True
                     entry.trusted_streak = 0
                     self.stats.inc("quarantines")
+                    self.recorder.dump(
+                        "quarantine", tracer=self.tracer,
+                        registry=self.registry, model=entry.name,
+                        consec_failures=entry.consec_failures,
+                        batch_index=entry.batches - 1)
             elif integ.checks:
                 entry.consec_failures = 0
         elif n_valid and per_device and integ.flagged:
@@ -749,15 +792,40 @@ class ServingEngine:
             # serving-eligible count, transitions counted right after the
             # dispatch that caused them (a breaker opening mid-batch
             # degrades here; a successful half-open probe recovers here)
-            available = entry.executor.plane.pool.n_available() > 0
+            dpool = entry.executor.plane.pool
+            available = dpool.n_available() > 0
             if entry.degraded and available:
                 entry.degraded = False
                 entry.recoveries += 1
                 self.stats.inc("recoveries")
+                self.recorder.event("recovery", model=entry.name,
+                                    batch_index=entry.batches - 1)
             elif not entry.degraded and not available:
                 entry.degraded = True
                 entry.degradations += 1
                 self.stats.inc("degradations")
+                self.recorder.dump(
+                    "degradation", tracer=self.tracer,
+                    registry=self.registry, model=entry.name,
+                    batch_index=entry.batches - 1)
+            # per-device transitions happen inside the plane — detect them
+            # as counter edges so breaker-opens/device-quarantines dump too
+            opens = sum(s.breaker_opens for s in dpool.slots)
+            quars = sum(s.quarantines for s in dpool.slots)
+            if opens > entry.breaker_opens_seen:
+                self.recorder.dump(
+                    "breaker_open", tracer=self.tracer,
+                    registry=self.registry, model=entry.name,
+                    new_opens=opens - entry.breaker_opens_seen,
+                    batch_index=entry.batches - 1)
+            if quars > entry.dev_quarantines_seen:
+                self.recorder.dump(
+                    "device_quarantine", tracer=self.tracer,
+                    registry=self.registry, model=entry.name,
+                    new_quarantines=quars - entry.dev_quarantines_seen,
+                    batch_index=entry.batches - 1)
+            entry.breaker_opens_seen = opens
+            entry.dev_quarantines_seen = quars
         self.watchdog.end_step()
         for p, box in zip(batch, boxes):
             self._finish(p, Response(p.req.rid, box, box is not None,
@@ -793,6 +861,13 @@ class ServingEngine:
     def snapshot(self) -> Dict[str, object]:
         """Aggregate serving telemetry (EngineStats.snapshot shorthand)."""
         return self.stats.snapshot(self)
+
+    def profile_phases(self) -> Dict[str, object]:
+        """Fold completed request spans into the §14 phase decomposition."""
+        if self.tracer is not None:
+            self.profiler.ingest(self.tracer)
+            self.profiler.export_gauges(self.registry)
+        return self.profiler.report()
 
     def sync_registry(self, legacy: Optional[Dict[str, object]] = None
                       ) -> MetricsRegistry:

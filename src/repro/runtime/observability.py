@@ -31,6 +31,18 @@ from typing import Any, Dict, Iterable, Optional
 HIST_WINDOW = 4096      # per-histogram sample bound (ring buffer)
 
 
+def nearest_rank(sorted_vals, q: float) -> float:
+    """Nearest-rank quantile over an ascending list: the ceil(q*n)-th
+    order statistic, clamped to [1, n] (q=0 -> min, q=1 -> max; n=1 ->
+    the only sample for every q). The ONE implementation both
+    ``quantile()`` and ``snapshot()`` use — they used to inline the same
+    formula separately, which is exactly how rank-math drift starts."""
+    n = len(sorted_vals)
+    if not n:
+        return 0.0
+    return sorted_vals[min(n - 1, max(0, math.ceil(q * n) - 1))]
+
+
 class MetricsRegistry:
     """Counters / gauges / histograms behind one RLock.
 
@@ -94,16 +106,12 @@ class MetricsRegistry:
             return list(self._hists.get(name, ()))
 
     def quantile(self, name: str, q: float) -> float:
-        vals = sorted(self.hist_values(name))
-        if not vals:
-            return 0.0
-        idx = min(len(vals) - 1, max(0, math.ceil(q * len(vals)) - 1))
-        return vals[idx]
+        return nearest_rank(sorted(self.hist_values(name)), q)
 
     # -- export ------------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
         """Consistent cut of every metric: counters and gauges verbatim,
-        histograms summarized (count/p50/p95/max)."""
+        histograms summarized (count/mean/p50/p95/p99/max)."""
         with self.lock:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
@@ -115,10 +123,11 @@ class MetricsRegistry:
             n = len(sv)
             summ = {"count": n}
             if n:
-                summ.update(
-                    p50=sv[min(n - 1, max(0, math.ceil(0.50 * n) - 1))],
-                    p95=sv[min(n - 1, max(0, math.ceil(0.95 * n) - 1))],
-                    max=sv[-1])
+                summ.update(mean=sum(sv) / n,
+                            p50=nearest_rank(sv, 0.50),
+                            p95=nearest_rank(sv, 0.95),
+                            p99=nearest_rank(sv, 0.99),
+                            max=sv[-1])
             out["histograms"][name] = summ
         return out
 

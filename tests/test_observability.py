@@ -387,3 +387,63 @@ def test_bench_meta_envelope(tmp_path):
     assert doc["meta"]["config"] == {"iters": 3}
     assert doc["meta"]["backend"] == jax.default_backend()
     assert doc["results"] == {"row": {"us": 1.0}}
+
+
+# -- nearest-rank quantile helper (satellite: ONE rank-math impl) ----------
+
+def test_nearest_rank_boundaries():
+    from repro.runtime.observability import HIST_WINDOW, nearest_rank
+    assert nearest_rank([], 0.5) == 0.0
+    # n=1: the only sample answers every quantile
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert nearest_rank([42.0], q) == 42.0
+    # exact ranks on a full window: ceil(q*n)-th order statistic
+    vals = list(range(1, HIST_WINDOW + 1))          # sorted 1..4096
+    assert nearest_rank(vals, 0.0) == 1             # clamped to min
+    assert nearest_rank(vals, 0.50) == 2048
+    assert nearest_rank(vals, 0.95) == 3892         # ceil(0.95*4096)
+    assert nearest_rank(vals, 0.99) == 4056         # ceil(0.99*4096)
+    assert nearest_rank(vals, 1.0) == 4096
+
+
+def test_hist_window_wraps_and_quantiles_follow():
+    """Past HIST_WINDOW samples the ring drops the OLDEST: quantiles are
+    computed over the surviving window, not the full stream."""
+    from repro.runtime.observability import HIST_WINDOW
+    reg = MetricsRegistry()
+    for v in range(HIST_WINDOW + 100):              # 0..4195, keeps 100..4195
+        reg.observe("lat", float(v))
+    vals = reg.hist_values("lat")
+    assert len(vals) == HIST_WINDOW
+    assert min(vals) == 100.0 and max(vals) == float(HIST_WINDOW + 99)
+    h = reg.snapshot()["histograms"]["lat"]
+    assert h["count"] == HIST_WINDOW
+    assert h["p50"] == 100.0 + 2048 - 1             # rank math on the window
+    assert h["p99"] == 100.0 + 4056 - 1
+    assert h["mean"] == pytest.approx(sum(vals) / HIST_WINDOW)
+    assert reg.quantile("lat", 1.0) == h["max"]
+
+
+# -- bounded-tracer truncation markers (satellite 2) -----------------------
+
+def test_tracer_truncation_markers(tmp_path):
+    tr = Tracer(max_spans=3)
+    for i in range(5):
+        tr.end(tr.start_span(f"s{i}", parent=None))
+    assert len(tr.spans()) == 3 and tr.dropped == 2
+    doc = tr.to_chrome()
+    assert doc["otherData"]["truncated"] is True
+    assert doc["otherData"]["dropped_spans"] == 2
+    lines = []
+    p = tmp_path / "t.jsonl"
+    assert tr.dump_jsonl(p) == 3
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert len(lines) == 4                          # 3 spans + marker
+    assert lines[-1] == {"truncated": True, "dropped_spans": 2}
+    # an unbounded-enough tracer emits NO marker anywhere
+    tr2 = Tracer(max_spans=10)
+    tr2.end(tr2.start_span("only", parent=None))
+    assert tr2.to_chrome()["otherData"]["truncated"] is False
+    tr2.dump_jsonl(p)
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert len(lines) == 1 and "truncated" not in lines[0]

@@ -1,0 +1,185 @@
+"""Cost-model plane (DESIGN.md §14 + paper Figs 9/10): the paper-constant
+EnclaveSim strategy table is pinned to the published speedups, the new
+``dispatch_overhead_s`` knob defaults to a bit-identical no-op, and
+``CalibratedCostModel`` recovers known unit costs exactly and re-prices
+``PartitionPlanner`` plans."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.core import plan as PL
+from repro.core.planner import PartitionPlanner
+from repro.core.trust import (CalibratedCostModel, EnclaveParams, EnclaveSim,
+                              vgg_layer_profiles)
+
+# paper Fig 9/10 (GPU) and 12/13 (CPU) speedups vs the enclave baseline.
+# The model derives runtimes from our layers' actual FLOP/byte profiles,
+# so the pins are tolerance bands, not equalities: the GPU table tracks
+# the paper closely; the CPU table runs hot because the paper's CPU
+# numbers fold in framework overheads the model deliberately omits.
+_PAPER = {
+    ("vgg16", "gpu"): {"slalom": 10.0, "origami": 12.7},
+    ("vgg19", "gpu"): {"slalom": 11.0, "origami": 15.1},
+    ("vgg16", "cpu"): {"slalom": 2.9, "origami": 3.9},
+    ("vgg19", "cpu"): {"slalom": 2.9, "origami": 3.9},
+}
+_TOL = {"gpu": 0.15, "cpu": 0.40}
+
+
+@pytest.mark.parametrize("arch,device",
+                         sorted(_PAPER, key=lambda k: (k[0], k[1])))
+def test_fig9_10_strategy_speedups_pin_paper(arch, device):
+    cfg = get_config(arch)
+    sim = EnclaveSim(cfg, device=device)
+    cs = sim.all_strategies(cfg.origami.tier1_layers)
+    base = cs["enclave"].runtime_s
+    for mode, want in _PAPER[(arch, device)].items():
+        got = base / cs[mode].runtime_s
+        assert got == pytest.approx(want, rel=_TOL[device]), \
+            f"{arch}/{device}/{mode}: modeled {got:.2f}x vs paper {want}x"
+    # the structural ordering the paper's figures show, regardless of
+    # absolute calibration: origami > slalom > split > enclave
+    assert (cs["origami"].runtime_s < cs["slalom"].runtime_s
+            < cs["split"].runtime_s < cs["enclave"].runtime_s)
+
+
+def test_benchmark_module_pins_same_paper_table():
+    import pathlib
+    import sys
+    root = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))
+    try:
+        from benchmarks.paper_fig9_10 import PAPER_SPEEDUPS
+    finally:
+        sys.path.pop(0)
+    assert PAPER_SPEEDUPS == _PAPER
+
+
+def test_dispatch_overhead_defaults_to_paper_identity():
+    """``dispatch_overhead_s`` defaults to 0.0 — every Fig 9/10 number is
+    bit-identical to the pre-knob model; a positive value slows exactly
+    the strategies that dispatch to the device."""
+    assert EnclaveParams().dispatch_overhead_s == 0.0
+    cfg = get_smoke("vgg16")
+    p = cfg.origami.tier1_layers
+    plain = EnclaveSim(cfg).all_strategies(p)
+    zeroed = EnclaveSim(
+        cfg, params=EnclaveParams(dispatch_overhead_s=0.0)).all_strategies(p)
+    for mode in plain:
+        assert plain[mode].runtime_s == zeroed[mode].runtime_s
+    taxed = EnclaveSim(
+        cfg, params=EnclaveParams(dispatch_overhead_s=0.01)).all_strategies(p)
+    assert taxed["enclave"].runtime_s == plain["enclave"].runtime_s
+    n_lin = sum(1 for l in vgg_layer_profiles(cfg) if l.linear)
+    assert taxed["slalom"].runtime_s == pytest.approx(
+        plain["slalom"].runtime_s + 0.01 * n_lin)
+    assert taxed["origami"].runtime_s > plain["origami"].runtime_s
+
+
+def test_plan_quantities_match_layer_profiles():
+    cfg = get_smoke("vgg16")
+    sim = EnclaveSim(cfg)
+    L = sim.layers
+    lin = [l for l in L if l.linear]
+    q = sim._plan_quantities(PL.from_string(cfg, "b" * len(L)))
+    assert q["device_flops"] == sum(l.flops for l in lin)
+    assert q["dispatches"] == len(lin)
+    assert q["blind_bytes"] == q["unblind_bytes"] \
+        == 2 * sum(l.out_bytes for l in lin)
+    q = sim._plan_quantities(PL.from_string(cfg, "e" * len(L)))
+    assert q["enclave_flops"] == sum(l.flops for l in L)
+    assert q["device_flops"] == q["dispatches"] == 0.0
+
+
+# -- CalibratedCostModel ----------------------------------------------------
+
+_COSTS = {"device_flops": 2.5e-12, "blind_bytes": 4.0e-10,
+          "unblind_bytes": 8.0e-10, "dispatches": 3.0e-3}
+
+
+def _synthetic_obs(scale: float):
+    quantities = {"device_flops": 1e9 * scale, "blind_bytes": 1e6 * scale,
+                  "unblind_bytes": 1e6 * scale, "dispatches": 8.0 * scale}
+    seconds = {phase: _COSTS[feat] * quantities[feat]
+               for phase, feat in CalibratedCostModel.PHASE_FEATURES.items()
+               if feat in _COSTS}
+    return quantities, seconds
+
+
+def test_fit_recovers_linear_costs_exactly():
+    m = CalibratedCostModel(device="gpu")
+    m.observe_all([_synthetic_obs(s) for s in (0.5, 1.0, 2.0)])
+    assert m.n_observations == 3
+    for feat, want in _COSTS.items():
+        assert m.unit_costs[feat] == pytest.approx(want, rel=1e-12)
+    fitted = m.fit()
+    assert fitted.cpu_flops == pytest.approx(
+        (1.0 / _COSTS["device_flops"]) / m.base.gpu_speedup)
+    assert fitted.blind_bytes_per_s == pytest.approx(
+        1.0 / _COSTS["blind_bytes"])
+    assert fitted.enclave_mem_bytes_per_s == pytest.approx(
+        1.0 / _COSTS["unblind_bytes"])
+    assert fitted.dispatch_overhead_s == pytest.approx(_COSTS["dispatches"])
+    # the paper ratios are held fixed — only the absolute scale moved
+    assert fitted.gpu_speedup == m.base.gpu_speedup
+    assert fitted.sgx_slowdown == m.base.sgx_slowdown
+    # cpu device: the measured throughput IS cpu_flops
+    mc = CalibratedCostModel(device="cpu")
+    mc.observe_all([_synthetic_obs(1.0)])
+    assert mc.fit().cpu_flops == pytest.approx(1.0 / _COSTS["device_flops"])
+
+
+def test_fit_averages_noise_toward_truth():
+    m = CalibratedCostModel()
+    rng = np.random.default_rng(0)
+    for s in rng.uniform(0.5, 2.0, size=64):
+        quantities, seconds = _synthetic_obs(float(s))
+        noisy = {p: t * float(rng.uniform(0.9, 1.1))
+                 for p, t in seconds.items()}
+        m.observe(quantities, noisy)
+    for feat, want in _COSTS.items():
+        assert m.unit_costs[feat] == pytest.approx(want, rel=0.1)
+
+
+def test_unmeasured_features_keep_paper_values():
+    m = CalibratedCostModel()
+    m.observe({"device_flops": 0.0, "blind_bytes": 1e6},
+              {"device_compute": 1.0, "blind": 0.0})
+    assert m.unit_costs == {}                 # q=0 or t=0 never enter
+    fitted = m.fit()
+    assert fitted == m.base                   # nothing measured, no change
+    g = m.gauges()
+    assert g == {"costmodel.observations": 1.0}
+
+
+def test_predict_plan_identity_without_observations():
+    cfg = get_smoke("vgg16")
+    sim = EnclaveSim(cfg)
+    plan = PL.from_string(cfg, "b" * len(sim.layers))
+    m = CalibratedCostModel(base=sim.p, device="gpu")
+    assert m.predict_plan_s(sim, plan) == pytest.approx(
+        sim.plan_runtime(plan).runtime_s)
+
+
+def test_planner_calibrate_accepts_all_three_sources():
+    planner = PartitionPlanner(device="gpu")
+    assert planner.enclave_params is None     # paper constants in force
+
+    explicit = EnclaveParams(cpu_flops=5e10)
+    assert planner.calibrate(explicit) is explicit
+    assert planner.enclave_params.cpu_flops == 5e10
+
+    model = CalibratedCostModel(device="gpu")
+    model.observe_all([_synthetic_obs(1.0)])
+    got = planner.calibrate(model)
+    assert got.cpu_flops == pytest.approx(
+        (1.0 / _COSTS["device_flops"]) / model.base.gpu_speedup)
+
+    class StubProfiler:
+        def cost_observations(self):
+            return [_synthetic_obs(1.0), _synthetic_obs(2.0)]
+
+    got = planner.calibrate(StubProfiler())
+    assert got.dispatch_overhead_s == pytest.approx(_COSTS["dispatches"])
+    # calibrated params flow into subsequent pricing
+    assert planner._sim(get_smoke("vgg16")).p is got
