@@ -5,6 +5,12 @@ several offered loads (Poisson-ish open-loop arrivals via fixed
 inter-arrival sleeps, plus one closed-loop burst) and records achieved
 throughput, latency quantiles and batching efficiency. Successive PRs
 accumulate the JSON next to BENCH_blinding.json as a perf trajectory.
+
+The engine runs compile-once: every (model, shape bucket) executable is
+AOT-compiled at register time (``aot_warm``), so the load points measure
+steady-state serving — ``engine.ttfb_warm_s`` and
+``engine.aot.request_compile_seconds`` in the JSON prove no compile was
+paid on the request path.
 """
 from __future__ import annotations
 
@@ -18,10 +24,12 @@ import numpy as np
 # echoed into BENCH_serving.json's meta header by benchmarks/run.py
 BENCH_CONFIG = {
     "models": ["vgg16", "vgg19"],
-    "n_per_model": 12,
+    # 50 requests per load point: long enough that the last request's
+    # in-flight tail does not dominate the achieved/offered ratio
+    "n_per_model": 25,
     "max_batch": 4,
     "max_wait_ms": 10.0,
-    "loads": ["burst", "50rps", "10rps"],
+    "loads": ["burst", "50rps", "25rps", "10rps", "5rps"],
 }
 
 
@@ -31,7 +39,8 @@ def _build_engine(max_batch: int, max_wait_ms: float):
     from repro.runtime.engine import EngineConfig, ServingEngine
 
     engine = ServingEngine(EngineConfig(max_batch=max_batch,
-                                        max_wait_ms=max_wait_ms))
+                                        max_wait_ms=max_wait_ms,
+                                        aot_warm=True))
     cfgs = {}
     for i, name in enumerate(("vgg16", "vgg19")):
         cfg = get_smoke(name)
@@ -59,17 +68,24 @@ def _drive(engine, mixed, offered_rps: float) -> Dict[str, float]:
     gap = 0.0 if not np.isfinite(offered_rps) else 1.0 / offered_rps
     t0 = time.monotonic()
     futures = []
-    for name, req in mixed:
-        futures.append(engine.submit(name, req))
+    for i, (name, req) in enumerate(mixed):
         if gap:
-            time.sleep(gap)
+            # absolute schedule (t0 + i*gap), not sleep-after-submit:
+            # per-submit cost would otherwise accumulate as rate drift
+            # and understate achieved/offered at the higher load points
+            wait = t0 + i * gap - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
+        futures.append(engine.submit(name, req))
     responses = [f.result(timeout=300) for f in futures]
     dt = time.monotonic() - t0
     ok = sum(r.ok for r in responses)
     lats = sorted(r.latency_s for r in responses if r.ok)
     q = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))] if lats else 0
     return {
-        "offered_rps": offered_rps if np.isfinite(offered_rps) else -1.0,
+        # closed-loop burst has no finite offered rate: null, never a
+        # sentinel number (bench_check treats null as "not applicable")
+        "offered_rps": offered_rps if np.isfinite(offered_rps) else None,
         "achieved_rps": ok / dt,
         "ok": ok, "n": len(responses), "wall_s": round(dt, 3),
         "p50_ms": round(q(0.50) * 1e3, 1),
@@ -78,18 +94,21 @@ def _drive(engine, mixed, offered_rps: float) -> Dict[str, float]:
 
 
 def run_suite(emit: Callable[[str, float, str], None], *,
-              n_per_model: int = 12, max_batch: int = 4,
+              n_per_model: int = 25, max_batch: int = 4,
               max_wait_ms: float = 10.0) -> Dict[str, Dict]:
     engine, cfgs = _build_engine(max_batch, max_wait_ms)
     results: Dict[str, Dict] = {}
     try:
-        # warm the compiled executables + layer caches out of the timings
+        # register_model already AOT-warmed every shape-bucket executable;
+        # one short wave still warms the per-session precompute ring
         warm = _requests(cfgs, max_batch)
         [f.result(timeout=300) for f in
          [engine.submit(m, r) for m, r in warm]]
 
+        # saturation curve: burst + 4 finite offered rates
         loads = [("load_burst", float("inf")), ("load_50rps", 50.0),
-                 ("load_10rps", 10.0)]
+                 ("load_25rps", 25.0), ("load_10rps", 10.0),
+                 ("load_5rps", 5.0)]
         for name, rps in loads:
             mixed = _requests(cfgs, n_per_model)
             r = _drive(engine, mixed, rps)
@@ -102,11 +121,18 @@ def run_suite(emit: Callable[[str, float, str], None], *,
             "padded_slots": stats["padded_slots"],
             "batched_requests": stats["batched_requests"],
             "time_to_first_batch_s": stats["time_to_first_batch_s"],
+            "ttfb_cold_s": stats["ttfb_cold_s"],
+            "ttfb_warm_s": stats["ttfb_warm_s"],
             "sessions": stats["sessions"],
             "matmuls": stats["matmuls"],
+            "aot": stats["aot"],
+            "buckets": stats["buckets"],
         }
         emit("serving/batches", float(stats["batches"]),
              f"padded={stats['padded_slots']}")
+        emit("serving/ttfb_warm_s", stats["ttfb_warm_s"],
+             f"cold={stats['ttfb_cold_s']:.3f} "
+             f"req_compile_s={stats['aot']['request_compile_seconds']:.2f}")
     finally:
         engine.close()
     return results

@@ -72,6 +72,26 @@ for b in bundles:
 print(f"[phases] OK: {ph['requests']} requests decomposed, "
       f"{len(bundles)} post-mortem bundle(s)")
 PY
+# compile-once smoke (DESIGN.md §15): AOT-warm every shape bucket at
+# register time with a persistent on-disk compilation cache — the request
+# path must pay ZERO compile seconds (that is the compile-once contract),
+# responses stay bit-exact vs the legacy oracle, and the cache stats land
+# in aot_tier1.json (uploaded alongside metrics_tier1.json)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m repro.launch.serve --smoke --engine --models vgg16 \
+    --requests 8 --aot-warm --compile-cache-dir .aot_cache_tier1 \
+    --metrics-out aot_tier1.json
+python - <<'PY'
+import json
+m = json.load(open("aot_tier1.json"))
+aot = m["aot"]
+assert aot["compiles"] > 0, aot
+assert aot["request_compile_seconds"] == 0.0, aot
+assert m["ttfb_warm_s"] < 1.0, m["ttfb_warm_s"]
+print(f"[aot] OK: {aot['compiles']} compile(s) all off the request path "
+      f"({aot['compile_seconds']:.1f}s warmup), stores={aot['stores']} "
+      f"ttfb_warm={m['ttfb_warm_s'] * 1e3:.0f}ms buckets={m['buckets']}")
+PY
 # liveness chaos smoke: scripted crash on device 0 + hang on device 1
 # (total blackout), a session-refill fault window and a sealing-
 # corruption window — the drill fails unless every future resolves, the

@@ -42,6 +42,9 @@ from repro.core.precompute import BlindedLayerCache
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models import vgg as V
+# repro.runtime is a namespace package and aot.py imports only jax, so
+# this does not create a core <-> runtime import cycle
+from repro.runtime import aot as AOT
 
 MODES = PL.LEGACY_MODES
 
@@ -127,6 +130,21 @@ class OrigamiExecutor:
         # logits, used after a failed Freivalds check or under quarantine
         self._jitted_trusted = jax.jit(
             functools.partial(self._traced, trusted=True))
+        # AOT serving path: executables compiled explicitly (lower+compile)
+        # through a CompileCache (runtime/aot.py) instead of first-call jit.
+        # The session factors buffer is donated off-CPU — it is per-session
+        # material the cache hands over exactly once (take()), never reused
+        # after the call. The *batch* is deliberately NOT donated: the §9
+        # integrity ladder re-feeds the same batch to the retry and
+        # enclave-recompute executables after a failed verify, and a donated
+        # input would already be dead by then. (CPU donation is unimplemented
+        # in XLA and only warns, but gating keeps the logs clean.)
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._aot_jit = jax.jit(self._traced, donate_argnums=donate)
+        self._aot_jit_trusted = jax.jit(
+            functools.partial(self._traced, trusted=True))
+        self._aot: AOT.CompileCache = AOT.CompileCache(None)  # memo-only
+        self._executables: Dict[Any, Any] = {}   # sig -> compiled (COW)
         # first-call signatures already inferred: the first (trace-kind,
         # plan, shapes) call pays jax.jit tracing + compilation, and the
         # profiler (runtime/profiling.py) needs that cold call *named* —
@@ -272,6 +290,95 @@ class OrigamiExecutor:
             return None
         return self.cache.take(session_key)
 
+    # -- AOT executables -----------------------------------------------------
+    def attach_aot(self, cache: AOT.CompileCache) -> None:
+        """Adopt a shared (engine-level) compile cache: cross-executor
+        memoization, exactly-once compiles under concurrent registration,
+        optional on-disk persistence, and counters in the engine's
+        MetricsRegistry. Keeps any executables already compiled."""
+        for key, compiled in self._aot._memo.items():
+            cache._memo.setdefault(key, compiled)
+        self._aot = cache
+
+    def _ensure_executable(self, sig, batch, session_key, factors,
+                           trusted: bool):
+        """The one compile path: memo -> disk -> timed lower+compile."""
+        compiled = self._executables.get(sig)
+        if compiled is not None:
+            return compiled
+        kind = "trusted" if trusted else "blinded"
+        jfn = self._aot_jit_trusted if trusted else self._aot_jit
+        args = (batch, session_key, factors)
+        ck = self._aot.entry_key(self.plan.digest, kind, args)
+
+        def build():
+            with tracing.maybe_span("compile.aot", "compile",
+                                    trusted=int(trusted)):
+                return jfn.lower(*args).compile()
+
+        def replay_telemetry():
+            # a deserialized executable never runs _traced, so the
+            # trace-time telemetry side effects (_tele_blinded/_tele_trusted)
+            # would stay stale — replay the trace abstractly (no FLOPs)
+            with tracing.maybe_span("compile.aot", "compile",
+                                    trusted=int(trusted), disk_hit=1):
+                jax.eval_shape(functools.partial(self._traced,
+                                                 trusted=trusted), *args)
+
+        compiled, _ = self._aot.compile_once(ck, build,
+                                             on_disk_hit=replay_telemetry)
+        # copy-on-write rebind: read concurrently by warm (register) and
+        # serve (device-stage) threads
+        self._executables = {**self._executables, sig: compiled}
+        return compiled
+
+    def _call_executable(self, sig, compiled, args, trusted: bool):
+        try:
+            return compiled(*args)
+        except Exception:  # noqa: BLE001 — e.g. a disk-loaded executable
+            # incompatible at call time (runtime/toolchain drift the key
+            # did not capture): fall back to the plain jit path and evict,
+            # never fail the request
+            self._aot.record_fallback()
+            self._executables = {k: v for k, v in self._executables.items()
+                                 if k != sig}
+            fn = self._jitted_trusted if trusted else self._jitted
+            return fn(*args)
+
+    def warm_aot(self, input_key: str, request_shape, buckets,
+                 dtype=None, trusted_too: bool = True) -> int:
+        """Compile every (trace kind, shape bucket) executable — and build
+        the per-bucket factor caches — ahead of the first request.
+
+        Called by ``ServingEngine.register_model``: after this, a request
+        only ever hits already-compiled executables (its infer span is
+        stamped ``first_call=False``), and the SessionPool prefetches
+        sessions into every bucket's cache. The trusted recovery trace is
+        warmed too (``trusted_too``) so the §9 recompute ladder and §12
+        degraded mode don't pay a first-call compile mid-incident.
+        Returns the number of signatures ensured. No-op for offload-plane
+        executors (their trace runs eagerly)."""
+        if self._plane_live:
+            return 0
+        key0 = jax.random.PRNGKey(0)
+        n = 0
+        with self._aot.warmup_scope():
+            for b in buckets:
+                x = jnp.zeros((int(b),) + tuple(request_shape),
+                              dtype if dtype is not None else jnp.float32)
+                batch = {input_key: x}
+                shapes = tuple(sorted((k, tuple(jnp.shape(v)))
+                                      for k, v in batch.items()))
+                for trusted in ((False, True) if trusted_too else (False,)):
+                    sig = (trusted, self.plan.digest, shapes)
+                    factors = (None if trusted
+                               else self._session_factors(batch, key0))
+                    self._ensure_executable(sig, batch, key0, factors,
+                                            trusted)
+                    self._seen_sigs.add(sig)
+                    n += 1
+        return n
+
     # -- public API ----------------------------------------------------------
     def infer(self, batch: Dict[str, jax.Array],
               session_key: Optional[jax.Array] = None,
@@ -290,7 +397,9 @@ class OrigamiExecutor:
         self._seen_sigs.add(sig)
         shard_report = None
         if trusted:
-            logits, boundary, rep = self._jitted_trusted(batch, key, None)
+            ex = self._ensure_executable(sig, batch, key, None, True)
+            logits, boundary, rep = self._call_executable(
+                sig, ex, (batch, key, None), True)
         else:
             factors = self._session_factors(batch, key)
             # the plane's host-side dispatch (retry, hedging, per-device
@@ -299,13 +408,17 @@ class OrigamiExecutor:
             # stay bit-identical to the jitted trace for batch >= 2 (XLA
             # picks a different conv algorithm at batch 1), which is the
             # regime the cross-checking drills run in
-            fn = (self._jitted if jit and not self._plane_live
-                  else self._traced)
             if self._plane_live:
                 self.plane.begin_infer()
-            logits, boundary, rep = fn(batch, key, factors)
-            if self._plane_live:
+                logits, boundary, rep = self._traced(batch, key, factors)
                 shard_report = self.plane.report
+            elif jit:
+                ex = self._ensure_executable(sig, batch, key, factors,
+                                             False)
+                logits, boundary, rep = self._call_executable(
+                    sig, ex, (batch, key, factors), False)
+            else:
+                logits, boundary, rep = self._traced(batch, key, factors)
         # the jit cache may skip re-tracing; point the public snapshot at
         # the last trace of THIS kind so a recovery trace never masquerades
         # as an offload trace (or vice versa)

@@ -11,6 +11,13 @@ MAC verification compares canonical byte encodings with
 ``hmac.compare_digest`` — a data-dependent early-exit ``==`` would hand a
 network attacker a timing oracle over the tag (and the jnp comparison it
 replaced also forced a device sync per word).
+
+The cipher/MAC arithmetic is jitted (``_seal_core`` / ``_unseal_core``):
+the keystream derivation and the per-word MAC scan are pure integer ops
+whose eager dispatch used to cost ~100 ms per 3 K-word request — two
+orders of magnitude more than the compiled loop, for bit-identical words.
+Only the trust-boundary tag compare stays on the host (a Python bool from
+``hmac.compare_digest``), so the security posture is unchanged.
 """
 from __future__ import annotations
 
@@ -62,14 +69,29 @@ def _authenticated_words(nonce: jax.Array, ct: jax.Array) -> jax.Array:
     return jnp.concatenate([jnp.asarray([n.size], jnp.uint32), n, ct])
 
 
-def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
-    """Encrypt + authenticate a float tensor under the session key."""
+@jax.jit
+def _seal_core(key: jax.Array, x: jax.Array,
+               nonce: jax.Array) -> Tuple[jax.Array, jax.Array]:
     bits = jax.lax.bitcast_convert_type(
         x.astype(jnp.float32), jnp.uint32).reshape(-1)
     ks = _keystream(key, nonce, bits.size)
     ct = bits ^ ks
-    return SealedBox(ciphertext=ct.reshape(x.shape), nonce=nonce,
-                     mac=_mac(key, _authenticated_words(nonce, ct)))
+    return (ct.reshape(x.shape),
+            _mac(key, _authenticated_words(nonce, ct)))
+
+
+@jax.jit
+def _unseal_core(key: jax.Array, ct_flat: jax.Array,
+                 nonce: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    want = _mac(key, _authenticated_words(nonce, ct_flat))
+    ks = _keystream(key, nonce, ct_flat.size)
+    return jax.lax.bitcast_convert_type(ct_flat ^ ks, jnp.float32), want
+
+
+def seal(key: jax.Array, x: jax.Array, nonce: jax.Array) -> SealedBox:
+    """Encrypt + authenticate a float tensor under the session key."""
+    ct, mac = _seal_core(key, jnp.asarray(x), jnp.asarray(nonce, jnp.uint32))
+    return SealedBox(ciphertext=ct, nonce=nonce, mac=mac)
 
 
 def unseal(key: jax.Array, box: SealedBox,
@@ -77,14 +99,13 @@ def unseal(key: jax.Array, box: SealedBox,
     """Returns (plaintext, mac_ok). Enclave-side.
 
     ``mac_ok`` is a Python bool from a constant-time compare over the
-    canonical little-endian uint32 encodings of the two tags (unseal is an
-    eager trust-boundary decision, never traced).
+    canonical little-endian uint32 encodings of the two tags — the accept
+    decision itself is never traced; only the tag/keystream arithmetic is.
     """
-    ct = box.ciphertext.reshape(-1)
-    want = _mac(key, _authenticated_words(box.nonce, ct))
+    pt, want = _unseal_core(jnp.asarray(key),
+                            jnp.asarray(box.ciphertext).reshape(-1),
+                            jnp.asarray(box.nonce, jnp.uint32))
     ok = hmac.compare_digest(
         np.asarray(want, np.uint32).tobytes(),
         np.asarray(box.mac, np.uint32).tobytes())
-    ks = _keystream(key, box.nonce, ct.size)
-    pt = jax.lax.bitcast_convert_type(ct ^ ks, jnp.float32)
     return pt.reshape(shape), ok

@@ -2,8 +2,10 @@
 
 ``field_matmul(x, w)`` takes field matrices in [0, p) (int32), handles limb
 decomposition, padding to kernel block multiples, and backend selection:
-Pallas-compiled on TPU, Pallas ``interpret=True`` elsewhere (bit-exact, used
-by CPU tests), or the pure-jnp reference for very small shapes.
+Pallas-compiled on TPU, the pure-jnp reference elsewhere (bit-identical and
+far faster than interpreted Pallas on CPU — the serving hot path), with
+``impl="interpret"`` keeping the Pallas interpreter reachable for kernel
+parity tests.
 
 ``fused_blinded_matmul`` is the single-chain fast path (DESIGN.md §6): one
 Pallas pass that scales+quantizes+blinds+limb-encodes the activations, one
@@ -88,7 +90,11 @@ def _field_matmul_jit(x_field, w_field, *, impl: str = "auto",
     M, K = x_field.shape
     K2, N = w_field.shape
     assert K == K2
-    if impl == "ref" or (impl == "auto" and M * N * K <= 64 ** 3):
+    # auto: off-TPU the pure-jnp reference (f32-exact limb GEMMs for
+    # K ≤ 2^10) beats interpreted Pallas by orders of magnitude and is
+    # bit-identical — same policy _field_fold_jit has always used.
+    if impl == "ref" or (impl == "auto" and
+                         (not _on_tpu() or M * N * K <= 64 ** 3)):
         return ref.field_matmul_ref(x_field, w_field)
     bm_, bn_, bk_, _, _, _ = block_plan(M, K, N, bm=bm, bn=bn, bk=bk)
     xl = jnp.moveaxis(ref.to_limbs(ref.to_signed(x_field)), -1, 0)  # (3,M,K)
@@ -125,8 +131,11 @@ def _fused_blinded_matmul_jit(x, r, w_limbs, u, inv_scale, out_scale, *,
     assert w_limbs.shape == (3, Kp, Np), (w_limbs.shape, (3, Kp, Np))
     inv2 = jnp.asarray(inv_scale, jnp.float32).reshape(1, 1)
     sc2 = jnp.asarray(out_scale, jnp.float32).reshape(1, 1)
-    if impl == "ref" or (impl == "auto" and M * N * K <= 64 ** 3):
-        # pure-jnp fallback, same op order as the kernels (bit-exact)
+    if impl == "ref" or (impl == "auto" and
+                         (not _on_tpu() or M * N * K <= 64 ** 3)):
+        # pure-jnp fallback, same op order as the kernels (bit-exact);
+        # selected off-TPU like _field_matmul_jit / _field_fold_jit
+        # because interpreted Pallas pays per-element python dispatch
         from repro.kernels.blind.ref import blind_ref
         xs = x.astype(jnp.float32) * inv2[0, 0]
         w_f = ref.from_signed(

@@ -140,6 +140,9 @@ def _dump_observability(args, engine, tag) -> None:
     snap = engine.snapshot()
     with open(args.metrics_out, "w") as f:
         json.dump({"metrics": snap["metrics"], "phases": snap["phases"],
+                   "aot": snap["aot"], "buckets": snap["buckets"],
+                   "ttfb_cold_s": snap["ttfb_cold_s"],
+                   "ttfb_warm_s": snap["ttfb_warm_s"],
                    "flight_recorder": rec}, f, indent=2, sort_keys=True,
                   default=str)
     print(f"[{tag}] metrics snapshot "
@@ -174,9 +177,11 @@ def run_engine(args) -> None:
     if args.trace_out:
         from repro.core.tracing import Tracer
         tracer = Tracer(kernel_spans=args.trace_kernels)
-    engine = ServingEngine(EngineConfig(max_batch=args.batch,
-                                        max_wait_ms=args.max_wait_ms),
-                           tracer=tracer, recorder=_flight_recorder(args))
+    engine = ServingEngine(
+        EngineConfig(max_batch=args.batch, max_wait_ms=args.max_wait_ms,
+                     compile_cache_dir=args.compile_cache_dir,
+                     aot_warm=args.aot_warm),
+        tracer=tracer, recorder=_flight_recorder(args))
     legacy, per_model = {}, {}
     for i, name in enumerate(names):
         cfg = get(name)
@@ -251,7 +256,15 @@ def run_engine(args) -> None:
     print(f"[engine] p50={stats['p50_latency_s']:.3f}s "
           f"p95={stats['p95_latency_s']:.3f}s "
           f"ttfb={stats['time_to_first_batch_s']:.3f}s "
+          f"(cold={stats['ttfb_cold_s']:.3f}s "
+          f"warm={stats['ttfb_warm_s']:.3f}s) "
           f"sessions={stats['sessions']}")
+    aot = stats["aot"]
+    print(f"[engine] aot: compiles={aot['compiles']} "
+          f"memo_hits={aot['memo_hits']} disk_hits={aot['disk_hits']} "
+          f"compile_s={aot['compile_seconds']:.2f} "
+          f"request_compile_s={aot['request_compile_seconds']:.2f} "
+          f"buckets={stats['buckets']}")
     print(f"[engine] bit-identical vs legacy: "
           f"{'OK' if mismatches == 0 else f'{mismatches} MISMATCHES'}")
     integ = stats["integrity"]
@@ -545,6 +558,18 @@ def main():
     ap.add_argument("--models", default="vgg16,vgg19",
                     help="comma list for --engine (mixed traffic)")
     ap.add_argument("--max-wait-ms", type=float, default=50.0)
+    ap.add_argument("--compile-cache-dir", default=None, metavar="DIR",
+                    help="persistent AOT compilation cache (DESIGN.md §15): "
+                         "compiled executables are serialized here keyed by "
+                         "(plan digest, shape bucket, backend, code version) "
+                         "and reloaded on the next boot, so a restarted "
+                         "server never pays first-request compile. Requires "
+                         "--engine.")
+    ap.add_argument("--aot-warm", action="store_true",
+                    help="with --engine, AOT-compile every (model, shape "
+                         "bucket) executable at register_model time "
+                         "(lower+compile off the request path) — the first "
+                         "request then never traces or compiles")
     ap.add_argument("--plan", default=None,
                     help="per-layer PlacementPlan (core/plan.py): 'print' "
                          "lists compiled plans; a legacy mode name; "
@@ -619,6 +644,8 @@ def main():
         ap.error("--chaos requires --engine and --devices >= 1")
     if (args.metrics_out or args.postmortem_dir) and not args.engine:
         ap.error("--metrics-out/--postmortem-dir require --engine")
+    if (args.compile_cache_dir or args.aot_warm) and not args.engine:
+        ap.error("--compile-cache-dir/--aot-warm require --engine")
 
     if args.requests is None:
         args.requests = 32 if args.engine else 16

@@ -32,17 +32,38 @@ layer Privado-style systems put in front of enclave inference:
   the flag automatically.
 - **draining shutdown**: ``close()`` stops admission, lets the batcher
   flush everything already queued (bounded by the plane's liveness
-  timeouts), force-resolves anything left with an explicit ``shutdown``
-  error, and only then stops session pools and device queues — no future
-  is ever left pending and no dispatched work is orphaned.
+  timeouts), drains the device stage, force-resolves anything left with an
+  explicit ``shutdown`` error, and only then stops session pools and
+  device queues — no future is ever left pending and no dispatched work
+  is orphaned.
+- **compile-once AOT serving** (DESIGN.md §15): every executable is
+  compiled explicitly (``lower().compile()``) through a shared
+  ``CompileCache`` (runtime/aot.py) — optionally persisted on disk across
+  processes — and ``aot_warm`` registration pre-compiles every
+  (trace kind, shape bucket) executable plus the sealing cores, so a
+  model's first request never pays compile.
+- **two-stage pipeline**: the dispatch splits into an enclave stage
+  (unseal -> MAC-filter -> bucket-pad, on the batcher thread) and a
+  device stage (blinded infer -> verify -> recovery -> seal, on a
+  dedicated worker), joined by a bounded handoff queue — batch N+1's
+  unseal overlaps batch N's device compute. On this box the enclave's
+  crypto and the device matmuls are the two dominant phases (§14), so
+  the overlap is the §15 throughput lever.
 
-Batches execute on the single batcher thread (the enclave executes one
-batch at a time; JAX async dispatch still overlaps the session pool's
-factor matmuls), so per-executor state needs no further locking.
+Every batch COMPLETES on the single device-stage thread in FIFO handoff
+order (the enclave stage only unseals; chaos-bound models defer even that
+so scripted sealed-box corruption still lands before the MAC check), so
+per-model entry state, the watchdog, and the quarantine/degradation state
+machines need no locking — they all live in the completion stage, exactly
+as they lived in the single batcher thread before the split. Setting
+``EngineConfig.pipeline=False`` collapses the two stages back onto the
+batcher thread (bit-identical either way — the stages are the same two
+halves of the one sealed-batch primitive).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
 import threading
 import time
 from collections import OrderedDict, deque
@@ -55,6 +76,7 @@ from repro.core.origami import OrigamiExecutor
 from repro.core.plan import PlacementPlan
 from repro.core.planner import PartitionPlan, PartitionPlanner
 from repro.core import tracing
+from repro.runtime.aot import CompileCache, bucket_ladder
 from repro.runtime.observability import MetricsRegistry, sync_struct
 from repro.runtime.profiling import CriticalPathProfiler, FlightRecorder
 from repro.runtime.sessions import SessionPool
@@ -83,6 +105,21 @@ class EngineConfig:
     integrity_retry: bool = True
     quarantine_after: int = 3
     probation_after: int = 8
+    # compile-once AOT serving (DESIGN.md §15): ``compile_cache_dir``
+    # persists serialized executables across processes; ``aot_warm``
+    # pre-compiles every (trace kind, shape bucket) executable — and the
+    # sealing cores — at register time, so the first request never pays
+    # compile. Warm is opt-in (the production launcher and benches set it)
+    # because it compiles the whole bucket ladder up front, which a
+    # short-lived engine hitting one shape would never amortize.
+    compile_cache_dir: Optional[str] = None
+    aot_warm: bool = False
+    # two-stage enclave/device pipeline: ``pipeline_depth`` bounds the
+    # prepared-batch handoff queue (the batcher blocks past it — natural
+    # backpressure); ``pipeline=False`` collapses both stages onto the
+    # batcher thread (the pre-§15 serial dispatch, bit-identical)
+    pipeline: bool = True
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -128,6 +165,20 @@ class _ModelEntry:
     # across dispatches, since the transitions happen inside the plane
     breaker_opens_seen: int = 0
     dev_quarantines_seen: int = 0
+
+
+@dataclasses.dataclass
+class _BatchWork:
+    """Handoff unit between the enclave stage and the device stage.
+
+    ``prep`` is the enclave stage's product (serving.PreparedBatch); None
+    means the enclave stage was deferred into the completion stage (serial
+    ``pipeline=False`` dispatch, or a chaos-bound model whose drill must
+    corrupt sealed boxes before the MAC check)."""
+    entry: _ModelEntry
+    batch: List[_Pending]
+    batch_span: Optional[object]
+    prep: Optional[object]
 
 
 class EngineStats:
@@ -189,6 +240,11 @@ class EngineStats:
             self.registry.set_counter(metric, 0)
         self.start_t = time.monotonic()
         self.first_batch_t: Optional[float] = None
+        self.first_submit_t: Optional[float] = None
+        # request-path compile seconds accrued by the time the first batch
+        # completed (CompileCache.request_compile_seconds) — what separates
+        # ttfb_cold_s from ttfb_warm_s
+        self.first_batch_compile_s: float = 0.0
 
     # -- recording ---------------------------------------------------------
     def inc(self, attr: str, n: int = 1) -> None:
@@ -200,10 +256,18 @@ class EngineStats:
         self.registry.inc_many(
             **{self.COUNTERS[a]: n for a, n in deltas.items()})
 
-    def record_batch(self, n_valid: int, pad: int) -> None:
+    def record_submit(self) -> None:
+        with self.lock:
+            if self.first_submit_t is None:
+                self.first_submit_t = time.monotonic()
+            self.inc("submitted")
+
+    def record_batch(self, n_valid: int, pad: int,
+                     request_compile_s: Optional[float] = None) -> None:
         with self.lock:
             if self.first_batch_t is None:
                 self.first_batch_t = time.monotonic()
+                self.first_batch_compile_s = float(request_compile_s or 0.0)
             self.inc_many(batches=1, batched_requests=n_valid,
                           padded_slots=pad)
 
@@ -222,6 +286,25 @@ class EngineStats:
         if self.first_batch_t is None:
             return None
         return self.first_batch_t - self.start_t
+
+    @property
+    def ttfb_cold_s(self) -> Optional[float]:
+        """First submit -> first completed batch, compile included."""
+        if self.first_batch_t is None or self.first_submit_t is None:
+            return None
+        return self.first_batch_t - self.first_submit_t
+
+    @property
+    def ttfb_warm_s(self) -> Optional[float]:
+        """``ttfb_cold_s`` minus the request-path compile seconds measured
+        by the CompileCache up to the first batch — what a warmed (AOT or
+        disk-cached) engine actually delivers, and the §15 bench gate.
+        Equals ``ttfb_cold_s`` when registration pre-compiled everything
+        (there was no request-path compile left to subtract)."""
+        cold = self.ttfb_cold_s
+        if cold is None:
+            return None
+        return max(0.0, cold - self.first_batch_compile_s)
 
     def _quantile(self, q: float) -> Optional[float]:
         lat = sorted(self.latencies)
@@ -246,8 +329,11 @@ class EngineStats:
         }
         out["queue_depth"] = engine.queue_depth()
         out["time_to_first_batch_s"] = self.time_to_first_batch_s
+        out["ttfb_cold_s"] = self.ttfb_cold_s
+        out["ttfb_warm_s"] = self.ttfb_warm_s
         out["p50_latency_s"] = self.p50_latency_s()
         out["p95_latency_s"] = self.p95_latency_s()
+        out["aot"] = engine.aot.stats()
         out["integrity"] = {
             k: c[k] for k in (
                 "verify_checks", "verify_failures", "device_retries",
@@ -316,6 +402,14 @@ class EngineStats:
         out["phases"] = engine.profile_phases()
         out["flight_recorder"] = engine.recorder.snapshot()
         out["metrics"] = self.registry.snapshot()
+        # per-bucket occupancy view of the §15 shape ladder, derived from
+        # the engine.bucket.<b>.* counters the device stage bumps
+        buckets: Dict[int, Dict[str, int]] = {}
+        for mname, v in out["metrics"]["counters"].items():
+            if mname.startswith("engine.bucket."):
+                _, _, b, fld = mname.split(".")
+                buckets.setdefault(int(b), {})[fld] = v
+        out["buckets"] = buckets
         return out
 
 
@@ -353,6 +447,10 @@ class ServingEngine:
         # out_dir to get on-disk bundles (serve.py --postmortem-dir)
         self.recorder = recorder if recorder is not None else FlightRecorder()
         self.watchdog = StepWatchdog()
+        # the shared compile-once cache (§15): attached to every registered
+        # executor; counters land in this engine's registry
+        self.aot = CompileCache(self.cfg.compile_cache_dir,
+                                registry=self.registry)
         self._buckets: "OrderedDict[Tuple[str, Tuple[int, ...]], Deque[_Pending]]" = OrderedDict()
         self._futures: Dict[Tuple[str, int], Future] = {}   # (model, rid)
         self._in_flight = 0
@@ -361,6 +459,12 @@ class ServingEngine:
         self._flush_t = -1.0              # see flush()
         self._closed = False
         self._thread: Optional[threading.Thread] = None
+        # two-stage pipeline: bounded handoff of prepared batches from the
+        # batcher (enclave stage) to the device-stage worker
+        self._pipe: "queue_mod.Queue" = queue_mod.Queue(
+            maxsize=max(1, self.cfg.pipeline_depth))
+        self._pipe_inflight = 0           # handed off, not yet completed
+        self._device_thread: Optional[threading.Thread] = None
         # (model, rid) completion log, bounded like EngineStats.latencies —
         # an unbounded list would leak one tuple per request forever
         self.completion_order: Deque[Tuple[str, int]] = deque(
@@ -467,9 +571,45 @@ class ServingEngine:
                 pool=(executor.plane.pool if executor.plane is not None
                       else None),
                 sessions=entry.pool)
+        executor.attach_aot(self.aot)
+        if self.cfg.aot_warm:
+            self.warm(entry)
         with self._lock:
             self.models[name] = entry
         return entry
+
+    def warm(self, entry: _ModelEntry,
+             warm_shape: Optional[Tuple[int, ...]] = None) -> int:
+        """AOT-compile the model's serving surface before its first
+        request: every (trace kind, shape bucket) executable on the §15
+        ladder — which also builds the per-bucket factor caches the
+        SessionPool prefetches into — plus the sealing cores for the
+        request and response shapes. ``warm_shape`` overrides the
+        per-request input shape; by default it is derived for CNN configs
+        (image HWC) and non-CNN models are skipped (their request shapes
+        aren't statically known here). Returns executables ensured."""
+        import jax.numpy as jnp
+        from repro.core.sealing import seal, unseal
+        from repro.runtime.serving import request_nonce, response_nonce
+        cfg = entry.cfg
+        shape = warm_shape
+        if shape is None and getattr(cfg, "family", None) == "cnn":
+            shape = (cfg.image_size, cfg.image_size, cfg.image_channels)
+        if shape is None:
+            return 0
+        n = entry.executor.warm_aot(
+            entry.input_key, shape, bucket_ladder(self.cfg.max_batch),
+            dtype=entry.input_dtype)
+        # sealing cores (core/sealing.py jits, keyed by payload/nonce
+        # shape): one request-direction unseal, one response-direction seal
+        key = jnp.zeros((2,), jnp.uint32)
+        box = seal(key, jnp.zeros(shape, jnp.float32), request_nonce(0))
+        unseal(key, box, shape)
+        n_out = getattr(cfg, "num_classes", None)
+        if n_out:
+            seal(key, jnp.zeros((int(n_out),), jnp.float32),
+                 response_nonce(0))
+        return n
 
     def attest(self, name: str) -> Quote:
         return self.models[name].quote
@@ -489,7 +629,7 @@ class ServingEngine:
         deadline = (deadline_s if deadline_s is not None
                     else self.cfg.default_deadline_s)
         with self._cv:
-            self.stats.inc("submitted")
+            self.stats.record_submit()
             entry = self.models.get(model)
             if entry is None or self._closed:
                 self.stats.inc("rejected")
@@ -540,8 +680,11 @@ class ServingEngine:
             self._cv.notify_all()
 
     def queue_depth(self) -> int:
+        """Requests not yet resolved: queued in buckets plus handed off to
+        (or executing on) the device stage — so ``drain()`` waits for the
+        pipeline's tail, not just for empty buckets."""
         with self._lock:
-            return self._in_flight
+            return self._in_flight + self._pipe_inflight
 
     # -- batcher -----------------------------------------------------------
     def _ensure_thread(self) -> None:
@@ -550,6 +693,13 @@ class ServingEngine:
                                             name="serving-engine-batcher",
                                             daemon=True)
             self._thread.start()
+
+    def _ensure_device_thread(self) -> None:
+        if self._device_thread is None or not self._device_thread.is_alive():
+            self._device_thread = threading.Thread(
+                target=self._device_loop, name="serving-engine-device",
+                daemon=True)
+            self._device_thread.start()
 
     def _ready_bucket(self, now: float):
         """The ready bucket (full or past max_wait) whose head request has
@@ -609,8 +759,26 @@ class ServingEngine:
                                          time.monotonic() - p.submit_t,
                                          error="deadline_exceeded"))
             if batch:
+                entry = self.models[batch[0].model]
                 try:
-                    self._dispatch(self.models[batch[0].model], batch)
+                    if self.cfg.pipeline:
+                        # enclave stage here; completion on the device
+                        # thread. Chaos-bound models defer the unseal too
+                        # (their drill may corrupt sealed boxes, which must
+                        # land before the MAC check) — their work item just
+                        # rides the same FIFO with the enclave stage folded
+                        # into the completion stage.
+                        work = self._stage_prepare(
+                            entry, batch, unseal_now=entry.chaos is None)
+                        if work is not None:
+                            self._ensure_device_thread()
+                            with self._lock:
+                                self._pipe_inflight += len(work.batch)
+                            self._pipe.put(work)   # blocks at depth: the
+                            # batcher back-pressures instead of out-running
+                            # the device stage without bound
+                    else:
+                        self._dispatch(entry, batch)
                 except Exception as exc:  # noqa: BLE001 — fail the batch,
                     for p in batch:       # not the engine
                         with self._lock:
@@ -618,12 +786,44 @@ class ServingEngine:
                         if not p.future.done():
                             p.future.set_exception(exc)
 
+    def _device_loop(self) -> None:
+        """Device-stage worker: completes prepared batches in handoff
+        order. ALL post-dispatch bookkeeping (watchdog, integrity/
+        degradation state machines, stats, flight-recorder dumps, future
+        resolution) runs here and only here — the single-thread ownership
+        the pre-pipeline batcher had, preserved by construction."""
+        while True:
+            work = self._pipe.get()
+            if work is None:           # close() sentinel
+                return
+            try:
+                self._stage_complete(work)
+            except Exception as exc:   # noqa: BLE001 — fail the batch,
+                for p in work.batch:   # not the pipeline
+                    with self._lock:
+                        self._futures.pop((p.model, p.req.rid), None)
+                    if not p.future.done():
+                        p.future.set_exception(exc)
+            finally:
+                with self._lock:
+                    self._pipe_inflight -= len(work.batch)
+
     def _dispatch(self, entry: _ModelEntry, batch: List[_Pending]) -> None:
-        """One enclave dispatch through the same sealed-batch primitive as
-        the legacy server (runtime/serving.py) — single-sourcing the
-        unseal -> MAC-filter -> pad -> infer -> seal pipeline is what keeps
-        the engine bit-identical to its legacy oracle."""
-        from repro.runtime.serving import Response, execute_sealed_batch
+        """One serial enclave dispatch (``pipeline=False`` and direct
+        callers): both stages back-to-back on the calling thread — the
+        legacy single-threaded order, which is also why the unseal is
+        deferred into the completion stage here."""
+        work = self._stage_prepare(entry, batch, unseal_now=False)
+        if work is not None:
+            self._stage_complete(work)
+
+    def _stage_prepare(self, entry: _ModelEntry, batch: List[_Pending],
+                       unseal_now: bool) -> Optional["_BatchWork"]:
+        """Enclave stage: deadline re-check, span bookkeeping and (when
+        ``unseal_now``) the unseal -> MAC-filter -> bucket-pad half of the
+        sealed-batch primitive. Touches no per-model mutable state — that
+        all belongs to the completion stage."""
+        from repro.runtime.serving import Response, prepare_sealed_batch
         # deadline re-check at dispatch time (DESIGN.md §12): formation and
         # dispatch are back-to-back on the batcher thread, but a slow
         # previous batch can age this one past its deadline — don't burn
@@ -641,7 +841,7 @@ class ServingEngine:
                 live.append(p)
         batch = live
         if not batch:
-            return
+            return None
         # trace plane: close every member's queue span, open one "batch"
         # span parented at the OLDEST request's root (the request whose
         # wait formed the batch); other members' roots carry the batch
@@ -665,6 +865,28 @@ class ServingEngine:
                     if p is not anchor:
                         self.tracer.annotate(
                             p.span, batch_span_id=batch_span.span_id)
+        prep = None
+        if unseal_now:
+            try:
+                with tracing.activate(self.tracer, batch_span):
+                    prep = prepare_sealed_batch(
+                        [p.req for p in batch],
+                        max_batch=self.cfg.max_batch,
+                        input_dtype=entry.input_dtype)
+            except Exception:
+                if batch_span is not None and self.tracer is not None:
+                    self.tracer.end(batch_span)
+                raise
+        return _BatchWork(entry=entry, batch=batch, batch_span=batch_span,
+                          prep=prep)
+
+    def _stage_complete(self, work: "_BatchWork") -> None:
+        """Device stage: infer -> verify -> §9/§12 recovery -> seal, plus
+        every piece of post-dispatch bookkeeping. Single-threaded (the
+        device worker, or the caller when ``pipeline=False``)."""
+        from repro.runtime.serving import (Response, complete_prepared_batch,
+                                           prepare_sealed_batch)
+        entry, batch, batch_span = work.entry, work.batch, work.batch_span
         entry.batches += 1
         if entry.chaos is not None:
             # the drill clock: arm/disarm scripted faults for this batch
@@ -715,24 +937,40 @@ class ServingEngine:
                 dpool.begin_dispatch()
         try:
             with tracing.activate(self.tracer, batch_span):
-                boxes, n_valid, pad, integ = execute_sealed_batch(
-                    entry.executor, [p.req for p in batch],
-                    input_key=entry.input_key, max_batch=self.cfg.max_batch,
-                    session_key=entry.pool.acquire,  # lazy: only consumed if
-                    input_dtype=entry.input_dtype,   # a valid request infers
-                    trusted=(entry.quarantined and not probe)
-                    or degrade_trusted,
-                    retry_device=self.cfg.integrity_retry)
+                prep = work.prep
+                if prep is None:      # serial path / chaos: enclave stage
+                    prep = prepare_sealed_batch(        # runs here instead
+                        [p.req for p in batch],
+                        max_batch=self.cfg.max_batch,
+                        input_dtype=entry.input_dtype)
+                if prep.x is None:    # every MAC failed: nothing to infer
+                    boxes, n_valid, pad, integ = (prep.boxes, 0, 0,
+                                                  prep.integ)
+                else:
+                    boxes, n_valid, pad, integ = complete_prepared_batch(
+                        entry.executor, prep, input_key=entry.input_key,
+                        session_key=entry.pool.acquire,  # lazy: only
+                        # consumed if a valid request infers
+                        trusted=(entry.quarantined and not probe)
+                        or degrade_trusted,
+                        retry_device=self.cfg.integrity_retry)
         finally:
             if batch_span is not None and self.tracer is not None:
                 self.tracer.end(batch_span)
         if batch_span is not None and self.tracer is not None:
             self.tracer.annotate(batch_span, n_valid=n_valid, pad=pad,
+                                 bucket=prep.bucket,
                                  flagged=integ.flagged,
                                  trusted=integ.trusted > 0,
                                  degraded=degrade_trusted, probe=probe)
         if n_valid:
-            self.stats.record_batch(n_valid, pad)
+            self.stats.record_batch(
+                n_valid, pad,
+                request_compile_s=self.aot.request_compile_seconds)
+            # per-bucket occupancy counters for the §15 shape ladder
+            self.registry.inc_many(**{
+                f"engine.bucket.{prep.bucket}.batches": 1,
+                f"engine.bucket.{prep.bucket}.padded_slots": pad})
         self.stats.inc_many(
             mac_failures=sum(b is None for b in boxes),
             verify_checks=integ.checks,
@@ -945,10 +1183,11 @@ class ServingEngine:
     def close(self, drain_s: float = 30.0) -> None:
         """Graceful shutdown (DESIGN.md §12): stop admitting, let the
         batcher flush everything already queued (the plane's liveness
-        timeouts bound how long a wedged device can stall that), then
-        force-resolve anything still pending with an explicit ``shutdown``
-        error — **every submitted future resolves** — and only then stop
-        the session pools and drain the device queues."""
+        timeouts bound how long a wedged device can stall that), drain the
+        device stage behind it, then force-resolve anything still pending
+        with an explicit ``shutdown`` error — **every submitted future
+        resolves** — and only then stop the session pools and drain the
+        device queues."""
         from repro.runtime.serving import Response
         with self._cv:
             self._closed = True
@@ -958,10 +1197,25 @@ class ServingEngine:
             self._cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=drain_s)
-        # forced resolution: anything the batcher left behind (it died, or
-        # the drain timed out) resolves NOW — a shutdown may abandon work,
-        # never a caller
+        # the batcher has stopped enqueueing: sentinel the device stage so
+        # it finishes everything already handed off, then exits
+        if (self._device_thread is not None
+                and self._device_thread.is_alive()):
+            self._pipe.put(None)
+            self._device_thread.join(timeout=drain_s)
+        # forced resolution: anything the batcher or device stage left
+        # behind (a thread died, or the drain timed out) resolves NOW — a
+        # shutdown may abandon work, never a caller
         leftovers: List[_Pending] = []
+        while True:
+            try:
+                work = self._pipe.get_nowait()
+            except queue_mod.Empty:
+                break
+            if work is not None:
+                leftovers.extend(work.batch)
+                with self._lock:
+                    self._pipe_inflight -= len(work.batch)
         with self._cv:
             for bucket in self._buckets.values():
                 leftovers.extend(bucket)

@@ -44,9 +44,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.tracing import Span, Tracer, redact
 
-# the fixed taxonomy (DESIGN.md §14) — every span name maps to exactly one
-PHASES = ("queue_wait", "compile", "unseal", "blind", "dispatch_wait",
-          "device_compute", "verify", "unblind", "seal", "other")
+# the fixed taxonomy (DESIGN.md §14) — every span name maps to exactly one.
+# ``compile_aot`` is ahead-of-time compilation at register_model time
+# (runtime/aot.py): it happens *before* any request exists, so it shows up
+# in registration-scoped spans and engine counters rather than request
+# trees — but it owns a phase so the taxonomy can say where cold-start
+# seconds went once requests stop paying them.
+PHASES = ("queue_wait", "compile", "compile_aot", "unseal", "blind",
+          "dispatch_wait", "device_compute", "verify", "unblind", "seal",
+          "other")
 
 # span name -> phase. ``shard.matmul`` keeps only its *self*-time (host
 # fan-out/join around the dispatches) -> dispatch_wait; the dispatches
@@ -54,6 +60,7 @@ PHASES = ("queue_wait", "compile", "unseal", "blind", "dispatch_wait",
 # unblind + re-encode work around the device call -> unblind.
 _NAME_PHASE = {
     "queue": "queue_wait",
+    "compile.aot": "compile_aot",
     "unseal": "unseal",
     "seal": "seal",
     "session.acquire": "blind",

@@ -35,6 +35,7 @@ from repro.core import tracing
 from repro.core.attestation import Quote, measure_enclave, verify_quote
 from repro.core.origami import OrigamiExecutor
 from repro.core.sealing import SealedBox, seal, unseal
+from repro.runtime.aot import bucket_for
 from repro.runtime.straggler import StepWatchdog
 
 # third nonce word for enclave->client traffic (requests use 2-word nonces;
@@ -170,32 +171,41 @@ def _trusted_key() -> jax.Array:
     return jax.random.PRNGKey(0)
 
 
-def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
-                         *, input_key: str, max_batch: int,
-                         session_key, input_dtype: Optional[str] = None,
-                         trusted: bool = False, retry_device: bool = True
-                         ) -> Tuple[List[Optional[SealedBox]], int, int,
-                                    BatchIntegrity]:
-    """The one sealed-batch primitive both serving paths share:
-    unseal -> filter failed MACs -> pad -> blinded infer (Freivalds-verified
-    per the executor's policy) -> recover on failure -> seal responses.
+@dataclasses.dataclass
+class PreparedBatch:
+    """Product of the enclave stage of one sealed-batch dispatch: requests
+    unsealed, failed MACs filtered, survivors stacked and zero-padded to a
+    shape bucket. Everything after this (infer/verify/recovery/seal) is the
+    device stage — the two-stage serving pipeline (runtime/engine.py)
+    overlaps batch N+1's prepare with batch N's completion across threads,
+    handing exactly this object between them."""
+    requests: List[Request]
+    boxes: List[Optional[SealedBox]]     # positional; None = MAC failed
+    valid_idx: List[int]
+    x: Optional[jax.Array]               # bucket-padded input, None if empty
+    pad: int                             # zero rows added (bucket - n_valid)
+    bucket: int                          # padded batch dim (0 if empty)
+    integ: BatchIntegrity
 
-    Returns ``(boxes, n_valid, pad, integrity)`` with ``boxes`` positional —
-    ``boxes[i] is None`` iff request i failed its MAC (it never reached
-    the executor: no inference slot, no blinding, no telemetry skew).
-    ``session_key`` may be a zero-arg callable (e.g. ``SessionPool.
-    acquire``), only invoked once at least one valid request will reach
-    the executor — an all-invalid batch must not burn a blinding session.
-    Keeping this in one place is what keeps the async engine bit-identical
-    to the legacy server it is cross-checked against.
+    @property
+    def n_valid(self) -> int:
+        return len(self.valid_idx)
 
-    Integrity flow (DESIGN.md §9): a failed check discards the device's
-    answer; ``retry_device`` grants one re-offload under a fresh blinding
-    session (a transient fault clears, a persistent adversary fails
-    again), after which the enclave recomputes the batch itself —
-    ``trusted=True`` (engine quarantine) skips the device entirely. The
-    blinded result is session-independent, so every recovery path is
-    bit-identical to an honest device's response.
+
+def prepare_sealed_batch(requests: List[Request], *, max_batch: int,
+                         input_dtype: Optional[str] = None) -> PreparedBatch:
+    """Enclave stage: unseal -> filter failed MACs -> bucket-pad.
+
+    Padding goes to the smallest power-of-two shape bucket that holds the
+    survivors (``aot.bucket_for``), not straight to ``max_batch``: a lone
+    request in a quiet period pads to 1 row of work, not 8. The bucket is
+    a pure function of the valid count, so any two paths fed the same
+    request list pick the same bucket — and hence the same compiled
+    executable, which is what keeps the engine bit-identical to the legacy
+    oracle (XLA may legally pick different float kernels at different
+    batch shapes). Zero pad rows are exact no-ops for the blinded trace:
+    they never raise the activation absmax, so the quantization scale —
+    and therefore every data row's logits — is untouched.
     """
     valid_idx: List[int] = []
     inputs: List[np.ndarray] = []
@@ -211,13 +221,69 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
     boxes: List[Optional[SealedBox]] = [None] * len(requests)
     integ = BatchIntegrity()
     if not inputs:
-        return boxes, 0, 0, integ
-    # pad to max_batch so one compiled executable serves all sizes
-    pad = max_batch - len(inputs)
+        return PreparedBatch(requests, boxes, valid_idx, None, 0, 0, integ)
+    bucket = bucket_for(len(inputs), max_batch)
+    pad = bucket - len(inputs)
     x = jnp.asarray(np.stack(inputs + [np.zeros_like(inputs[0])] * pad))
     if input_dtype is not None:          # LM tokens ride as f32 payloads
         x = x.astype(input_dtype)
-    batch = {input_key: x}
+    return PreparedBatch(requests, boxes, valid_idx, x, pad, bucket, integ)
+
+
+def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
+                         *, input_key: str, max_batch: int,
+                         session_key, input_dtype: Optional[str] = None,
+                         trusted: bool = False, retry_device: bool = True
+                         ) -> Tuple[List[Optional[SealedBox]], int, int,
+                                    BatchIntegrity]:
+    """The one sealed-batch primitive both serving paths share:
+    unseal -> filter failed MACs -> bucket-pad -> blinded infer
+    (Freivalds-verified per the executor's policy) -> recover on failure ->
+    seal responses. Composition of ``prepare_sealed_batch`` (enclave
+    stage) and ``complete_prepared_batch`` (device stage) — the pipelined
+    engine calls the two halves on different threads, so this composition
+    IS the single-threaded legacy oracle it is cross-checked against.
+
+    Returns ``(boxes, n_valid, pad, integrity)`` with ``boxes`` positional —
+    ``boxes[i] is None`` iff request i failed its MAC (it never reached
+    the executor: no inference slot, no blinding, no telemetry skew).
+    ``session_key`` may be a zero-arg callable (e.g. ``SessionPool.
+    acquire``), only invoked once at least one valid request will reach
+    the executor — an all-invalid batch must not burn a blinding session.
+
+    Integrity flow (DESIGN.md §9): a failed check discards the device's
+    answer; ``retry_device`` grants one re-offload under a fresh blinding
+    session (a transient fault clears, a persistent adversary fails
+    again), after which the enclave recomputes the batch itself —
+    ``trusted=True`` (engine quarantine) skips the device entirely. The
+    blinded result is session-independent, so every recovery path is
+    bit-identical to an honest device's response.
+    """
+    prep = prepare_sealed_batch(requests, max_batch=max_batch,
+                                input_dtype=input_dtype)
+    if prep.x is None:
+        return prep.boxes, 0, 0, prep.integ
+    return complete_prepared_batch(executor, prep, input_key=input_key,
+                                   session_key=session_key, trusted=trusted,
+                                   retry_device=retry_device)
+
+
+def complete_prepared_batch(executor: OrigamiExecutor, prep: PreparedBatch,
+                            *, input_key: str, session_key,
+                            trusted: bool = False, retry_device: bool = True
+                            ) -> Tuple[List[Optional[SealedBox]], int, int,
+                                       BatchIntegrity]:
+    """Device stage: blinded infer -> verify -> §9 recovery ladder -> seal.
+
+    ``prep.x`` must be non-None (the caller short-circuits empty batches).
+    A batch that fails its Freivalds check drains through the full
+    detect -> retry -> recompute ladder *inside this stage*, on whichever
+    thread runs it — the pipeline never reorders or splits a batch's
+    recovery."""
+    requests, boxes, integ = prep.requests, prep.boxes, prep.integ
+    valid_idx, pad = prep.valid_idx, prep.pad
+    n_valid = prep.n_valid
+    batch = {input_key: prep.x}
     if trusted:
         # the trusted trace neither blinds nor verifies, so it consumes no
         # session material — do NOT pop a pool key (its prefetched factor
@@ -283,12 +349,12 @@ def execute_sealed_batch(executor: OrigamiExecutor, requests: List[Request],
             pass
     with tracing.maybe_span("seal", "crypto", n_responses=len(valid_idx),
                             pad=pad):
-        logits = np.asarray(result.logits, np.float32)[:len(inputs)]
+        logits = np.asarray(result.logits, np.float32)[:n_valid]
         for row, i in enumerate(valid_idx):
             r = requests[i]
             boxes[i] = seal(jnp.asarray(r.session_key, jnp.uint32),
                             jnp.asarray(logits[row]), response_nonce(r.rid))
-    return boxes, len(inputs), pad, integ
+    return boxes, n_valid, pad, integ
 
 
 class PrivateInferenceServer:
