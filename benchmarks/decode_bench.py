@@ -1,0 +1,126 @@
+"""Private decode suite (BENCH_decode.json): tokens/sec across trust modes.
+
+Measures autoregressive generation (DESIGN.md §16) on the smollm smoke
+config, same prompt batch through three ladders:
+
+- ``open``     — the plain ``generate()`` reference loop, no protocol:
+                 the ceiling any private path is paying against;
+- ``trusted``  — ``private_generate(trusted=True)``: every matmul
+                 recomputed in the enclave (the §9 recovery rung and the
+                 §12 degraded mode), no device traffic;
+- ``private``  — blinded ring-fed decode with full per-step Freivalds
+                 verification: pads from the token-slot ring, KV-facing
+                 matmuls on the device, every step verified.
+
+The suite also records ``parity_bitexact`` — private tokens AND logits
+must equal the trusted oracle bit for bit (the gate pins this at
+never-regress) — plus the ring's refill counters and the §16
+``tier1_cache_bytes`` enclave-residency figure for the measured shape.
+
+Timings are steady-state: every path runs once to compile (prefill +
+decode executables land in the AOT cache) before the timed repeats.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+BATCH = 2
+PROMPT_LEN = 6
+NEW_TOKENS = 12
+REPEATS = 3
+
+# echoed into BENCH_decode.json's meta header by benchmarks/run.py
+BENCH_CONFIG = {"model": "smollm_135m", "batch": BATCH,
+                "prompt_len": PROMPT_LEN, "new_tokens": NEW_TOKENS,
+                "repeats": REPEATS, "integrity": "full_k2"}
+
+
+def _tokens_per_s(fn, n_tokens: int) -> Dict:
+    fn()                                    # compile / warm
+    laps = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        laps.append(time.perf_counter() - t0)
+    best = min(laps)
+    return {"tokens_per_s": round(n_tokens / best, 2),
+            "s_per_seq": round(best, 4)}
+
+
+def run_suite(emit) -> Dict:
+    from repro.configs import get_smoke
+    from repro.core import integrity as IG
+    from repro.models import model as M
+    from repro.runtime import generate as G
+
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (BATCH, PROMPT_LEN), 0, cfg.vocab_size)
+    pol = IG.IntegrityPolicy.full(k=2)
+    skey = jax.random.PRNGKey(7)
+    n_tokens = BATCH * NEW_TOKENS
+    max_seq = PROMPT_LEN + NEW_TOKENS
+
+    # one executor so all modes share compiled decode/prefill executables
+    ex = G.GenerateExecutor(cfg, params, prompt_len=PROMPT_LEN,
+                            max_new_tokens=NEW_TOKENS, integrity=pol)
+
+    def run_open():
+        res = G.generate(params, prompt, cfg, max_new_tokens=NEW_TOKENS)
+        jax.block_until_ready(res.tokens)
+        return res
+
+    def run_trusted():
+        res = G.private_generate(params, prompt, cfg,
+                                 max_new_tokens=NEW_TOKENS,
+                                 session_key=skey, trusted=True,
+                                 executor=ex)
+        jax.block_until_ready(res.tokens)
+        return res
+
+    def run_private():
+        res = G.private_generate(params, prompt, cfg,
+                                 max_new_tokens=NEW_TOKENS,
+                                 session_key=skey, executor=ex)
+        jax.block_until_ready(res.tokens)
+        return res
+
+    results: Dict[str, Dict] = {
+        "open": _tokens_per_s(run_open, n_tokens),
+        "trusted": _tokens_per_s(run_trusted, n_tokens),
+        "private": _tokens_per_s(run_private, n_tokens),
+    }
+
+    # parity + protocol counters from one final instrumented pair
+    priv, oracle = run_private(), run_trusted()
+    bitexact = (np.array_equal(np.asarray(priv.tokens),
+                               np.asarray(oracle.tokens))
+                and np.array_equal(np.asarray(priv.logits),
+                                   np.asarray(oracle.logits)))
+    results["private"].update({
+        "parity_bitexact": bool(bitexact),
+        "verified_ops": int(priv.integrity.n_checked),
+        "integrity_ok": bool(priv.integrity.ok),
+        "ring": priv.ring,
+    })
+    results["private"]["overhead_x"] = round(
+        results["open"]["tokens_per_s"]
+        / max(results["private"]["tokens_per_s"], 1e-9), 2)
+    results["trusted"]["overhead_x"] = round(
+        results["open"]["tokens_per_s"]
+        / max(results["trusted"]["tokens_per_s"], 1e-9), 2)
+    results["cache"] = {
+        "tier1_cache_bytes": G.tier1_cache_bytes(cfg, BATCH, max_seq),
+        "plan_digest": priv.plan_digest[:16],
+    }
+
+    for mode in ("open", "trusted", "private"):
+        emit(f"decode/{mode}", results[mode]["s_per_seq"] * 1e6,
+             f"{results[mode]['tokens_per_s']} tok/s")
+    emit("decode/parity", 0.0, f"bitexact={bitexact}")
+    return results

@@ -34,6 +34,7 @@ RECORDED_SUITES = {
     "chaos": ("chaos_bench", "BENCH_chaos.json"),
     "trace": ("trace_overhead_bench", "BENCH_trace_overhead.json"),
     "attribution": ("attribution_bench", "BENCH_attribution.json"),
+    "decode": ("decode_bench", "BENCH_decode.json"),
 }
 
 
@@ -85,7 +86,9 @@ def main() -> None:
                          "BENCH_trace_overhead.json; 'attribution' folds "
                          "a traced round into the §14 phase decomposition "
                          "and fits the calibrated cost model into "
-                         "BENCH_attribution.json")
+                         "BENCH_attribution.json; 'decode' measures "
+                         "private vs trusted-only vs open autoregressive "
+                         "tokens/sec (§16) into BENCH_decode.json")
     args, _ = ap.parse_known_args()
 
     root = pathlib.Path(__file__).resolve().parent.parent

@@ -43,6 +43,7 @@ FILES = {
     "chaos": "BENCH_chaos.json",
     "trace": "BENCH_trace_overhead.json",
     "attribution": "BENCH_attribution.json",
+    "decode": "BENCH_decode.json",
 }
 
 # (dotted path into results, direction, rel band, abs band)
@@ -88,6 +89,17 @@ SPECS: Dict[str, List[tuple]] = {
         ("decomposition.pass", "higher", 0.0, 0.0),
         ("calibration.pass", "higher", 0.0, 0.0),
         ("calibration.improvement_x", "higher", 0.90, 0.0),
+    ],
+    "decode": [
+        # correctness: private decode must stay bit-exact vs the trusted
+        # oracle — this never legitimately regresses
+        ("private.parity_bitexact", "higher", 0.0, 0.0),
+        ("private.integrity_ok", "higher", 0.0, 0.0),
+        ("private.verified_ops", "higher", 0.0, 0.0),
+        # throughput: generous wall-clock bands (shared CI runners)
+        ("private.tokens_per_s", "higher", 0.60, 0.0),
+        ("trusted.tokens_per_s", "higher", 0.60, 0.0),
+        ("open.tokens_per_s", "higher", 0.60, 0.0),
     ],
 }
 

@@ -102,3 +102,42 @@ PY
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m repro.launch.serve --smoke --engine --models vgg16 \
     --devices 2 --chaos "dev0.crash@1-2,dev1.hang@1-2,refill@7-8,seal@10"
+# private-decode smoke (DESIGN.md §16): blinded ring-fed autoregressive
+# generation on the smollm smoke config with full per-step Freivalds —
+# tokens AND logits must be bit-exact vs the trusted=True enclave oracle,
+# every offloaded op verified, one ring slot consumed per decode step;
+# CI uploads decode_tier1.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import json
+import jax
+import numpy as np
+from repro.configs import get_smoke
+from repro.core import integrity as IG
+from repro.models import model as M
+from repro.runtime import generate as G
+
+cfg = get_smoke("smollm_135m")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                            cfg.vocab_size)
+kw = dict(max_new_tokens=6, integrity=IG.IntegrityPolicy.full(k=2),
+          session_key=jax.random.PRNGKey(9))
+priv = G.private_generate(params, prompt, cfg, **kw)
+oracle = G.private_generate(params, prompt, cfg, trusted=True, **kw)
+assert np.array_equal(np.asarray(priv.tokens), np.asarray(oracle.tokens))
+assert np.array_equal(np.asarray(priv.logits), np.asarray(oracle.logits))
+assert priv.telemetry.device_matmuls > 0 and priv.telemetry.verify_ops > 0
+assert priv.integrity.ok and priv.integrity.n_checked == priv.integrity.n_ops
+assert priv.ring["consumed"] == priv.decode_steps, priv.ring
+json.dump({"plan_digest": priv.plan_digest,
+           "decode_steps": priv.decode_steps,
+           "verified_ops": int(priv.integrity.n_checked),
+           "device_matmuls": int(priv.telemetry.device_matmuls),
+           "ring": priv.ring,
+           "tier1_cache_bytes": G.tier1_cache_bytes(cfg, 2, 12),
+           "bitexact_vs_trusted": True},
+          open("decode_tier1.json", "w"), indent=1)
+print(f"[decode] OK: {priv.decode_steps} private decode steps bit-exact "
+      f"vs trusted oracle, {int(priv.integrity.n_checked)} ops verified, "
+      f"ring={priv.ring}")
+PY

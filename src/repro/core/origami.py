@@ -150,6 +150,12 @@ class OrigamiExecutor:
         # profiler (runtime/profiling.py) needs that cold call *named* —
         # its infer span is stamped first_call=True
         self._seen_sigs: set = set()
+        # decode plane (attach_decode_plan): scan segments + token-slot
+        # factor caches, DESIGN.md §16
+        self.dplan: Optional[PL.DecodePlan] = None
+        self._decode_caches: Dict[int, BlindedLayerCache] = {}
+        self._jit_decode = None
+        self._jit_prefill = None
 
     # -- telemetry snapshots -------------------------------------------------
     @property
@@ -229,6 +235,311 @@ class OrigamiExecutor:
                 boundary = x
         return prog.epilogue(params, x, batch, memory), boundary
 
+    # -- decode plans: scan segments + token slots (DESIGN.md §16) -----------
+    def attach_decode_plan(self, dplan: Optional[PL.DecodePlan] = None, *,
+                           max_steps: int = 256) -> PL.DecodePlan:
+        """Adopt a DecodePlan (core/plan.py:make_decode_plan) and stand up
+        the decode interpreter: a jitted prompt pass over the BASE plan's
+        segments and ONE jitted token step over the scan segments. Raises
+        plan.ScanExclusion for families outside plan.DECODE_FAMILIES —
+        the typed form of the former "scanned families fall back" branch.
+
+        When ``dplan`` is omitted one is compiled from this executor's own
+        plan, inheriting the executor's Freivalds policy as the per-step
+        policy of every offloaded scan segment."""
+        if dplan is None:
+            dplan = PL.make_decode_plan(
+                self.cfg, self.plan, max_steps=max_steps,
+                integrity=(self.integrity if self.integrity.enabled
+                           else None))
+        assert dplan.base.digest == self.plan.digest, \
+            "decode plan extends a different base plan"
+        self.dplan = dplan
+        self._jit_decode = jax.jit(self._traced_decode,
+                                   static_argnames=("trusted",))
+        self._jit_prefill = jax.jit(self._traced_prefill,
+                                    static_argnames=("trusted", "max_seq"))
+        return dplan
+
+    def decode_cache(self, batch_size: int) -> Optional[BlindedLayerCache]:
+        """Quantize-once weight material + per-(session, token, layer)
+        factor store for the decode walk — one BlindedLayerCache per batch
+        size, memoized. The TokenSlotRing (runtime/sessions.py) streams
+        ``session_factors(key, step=token)`` out of it; the ``step`` slot
+        of the factor keying IS the token index, so every (session, token,
+        layer) triple draws a distinct pad (DESIGN.md §16). Returns None
+        when the decode plan has no offloaded scan segments."""
+        assert self.dplan is not None, "attach_decode_plan first"
+        if not self.dplan.has_offload:
+            return None
+        cache = self._decode_caches.get(batch_size)
+        if cache is None:
+            cache = BlindedLayerCache.from_records(
+                self._decode_records(batch_size), self.spec,
+                integrity=self.integrity)
+            # copy-on-write rebind: read by the ring's refill thread
+            self._decode_caches = {**self._decode_caches,
+                                   batch_size: cache}
+        return cache
+
+    def _decode_records(self, batch_size: int):
+        """Static per-op descriptors for the decode walk, in trace order —
+        captured by running one EAGER token step with a recording dense
+        impl (weights are concrete here, unlike inside the jitted decode
+        trace). Only offloaded scan segments record; plain segments run
+        the scanned fast path and touch no factor material."""
+        cfg, params = self.cfg, self.params
+        records = []
+
+        def capture(p, xx):
+            w = p["w"]
+            t = 1
+            for s_ in xx.shape[:-1]:
+                t *= s_
+            records.append({"kind": "dense", "w": w, "t": int(t),
+                            "d_in": int(w.shape[0]),
+                            "d_out": int(w.shape[1])})
+            y = xx @ w.astype(xx.dtype)
+            if "b" in p:
+                y = y + p["b"].astype(xx.dtype)
+            return y
+
+        caches = M.init_caches(cfg, batch_size, 8)
+        token = jnp.zeros((batch_size, 1), jnp.int32)
+        x = M.embed_tokens_at(params, token, jnp.int32(0), cfg)
+        pos = jnp.int32(0)
+        for seg in self.dplan.scan:
+            if seg.regime == "plain":
+                x, caches = M.decode_range(params, x, caches, pos, cfg,
+                                           seg.lo, seg.hi)
+                continue
+            pol = seg.policy if seg.policy is not None else self.integrity
+            start = len(records)
+            with L.dense_impl(capture):
+                x, caches = M.decode_range_unrolled(
+                    params, x, caches, pos, cfg, seg.lo, seg.hi)
+            for rec in records[start:]:
+                rec["unblinded"] = seg.regime == "verified"
+                rec["policy"] = pol
+        return records
+
+    def _traced_decode(self, token, caches, pos, session_key, factors=None,
+                       trusted: bool = False):
+        """ONE token step under the decode plan's scan segments.
+
+        ``ctx.step`` is set to the TRACED position, so a single compiled
+        executable serves every token of every session while drawing fresh
+        per-token pads, fold vectors and sampled-check decisions
+        (``fold_in`` accepts traced ints) — and the TokenSlotRing's cached
+        factors for ``step == pos`` are bit-identical to this trace's live
+        derivation. ``per_op=True`` overrides the scanned-weight inference
+        in core/slalom.py: the block walk is unrolled at trace time, so
+        each traced dense call stands for exactly one runtime op and
+        verification/injection bind per (token, layer)."""
+        tele = SL.Telemetry()
+        ctx = SL.SlalomContext(
+            session_key, self.spec, telemetry=tele, impl=self.impl,
+            factors=factors, integrity=IG.IntegrityPolicy.off(),
+            fault=None if trusted else self.fault, trusted=trusted,
+            step=pos, per_op=True)
+        params, cfg = self.params, self.cfg
+        x = M.embed_tokens_at(params, token, pos, cfg)
+        for seg in self.dplan.scan:
+            if seg.regime == "plain":
+                x, caches = M.decode_range(params, x, caches, pos, cfg,
+                                           seg.lo, seg.hi)
+                continue
+            policy = (seg.policy if seg.policy is not None
+                      else self.integrity)
+            with ExitStack() as stack:
+                stack.enter_context(ctx.segment_overrides(
+                    policy, unblinded=(seg.regime == "verified"),
+                    shard=seg.shard))
+                stack.enter_context(L.dense_impl(
+                    functools.partial(SL.blinded_dense, ctx)))
+                x, caches = M.decode_range_unrolled(
+                    params, x, caches, pos, cfg, seg.lo, seg.hi)
+        logits = M.head(params, x, cfg)
+        rep = self._fold_log(ctx)
+        if trusted:
+            self._tele_trusted = tele
+        else:
+            self._tele_blinded = tele
+        return logits, caches, rep
+
+    def _traced_prefill(self, tokens, session_key, trusted: bool = False,
+                        *, max_seq: int):
+        """Prompt pass through the BASE plan's segments, returning
+        ``(last-position logits, decode caches, integrity log)``.
+
+        Offloaded segments run the block walk UNROLLED — per-op
+        addressable even at prefill, so every prompt op gets its own
+        blinding key and Freivalds fold (no cross-layer pad sharing) —
+        while plain segments keep the scanned fast path. Prefill ops use
+        ``step=0``; decode steps use ``step=pos >= 1`` (positions count
+        from the prompt length), so the two key domains never collide."""
+        tele = SL.Telemetry()
+        ctx = SL.SlalomContext(
+            session_key, self.spec, telemetry=tele, impl=self.impl,
+            factors=None, integrity=IG.IntegrityPolicy.off(),
+            fault=None if trusted else self.fault, trusted=trusted,
+            step=0, per_op=True)
+        params, cfg = self.params, self.cfg
+        x = M.embed_tokens(params, tokens, cfg)
+        parts = []
+        for seg in self.plan.segments:
+            if seg.regime == "plain":
+                x, c = M.prefill_range(params, x, cfg, seg.lo, seg.hi)
+            else:
+                policy = (seg.policy if seg.policy is not None
+                          else self.integrity)
+                with ExitStack() as stack:
+                    stack.enter_context(ctx.segment_overrides(
+                        policy, unblinded=(seg.regime == "verified"),
+                        shard=seg.shard))
+                    stack.enter_context(L.dense_impl(
+                        functools.partial(SL.blinded_dense, ctx)))
+                    x, c = M.prefill_range_unrolled(params, x, cfg,
+                                                    seg.lo, seg.hi)
+            parts.append(c)
+        caches = M.concat_layer_caches(parts, max_seq)
+        logits = M.head(params, x[:, -1:], cfg)
+        rep = self._fold_log(ctx)
+        if trusted:
+            self._tele_trusted = tele
+        else:
+            self._tele_blinded = tele
+        return logits, caches, rep
+
+    @staticmethod
+    def _fold_log(ctx):
+        if ctx.integrity_log:
+            return tuple(jnp.stack([e[i] for e in ctx.integrity_log])
+                         for i in range(3))
+        z = jnp.zeros((0,), jnp.bool_)
+        return (z, z, z)
+
+    @staticmethod
+    def _cache_seq(caches) -> int:
+        for leaf in jax.tree.leaves(caches):
+            return int(leaf.shape[2])
+        return 0
+
+    def _ensure_decode_exec(self, sig, jfn, traced, kind, args, kw):
+        """Decode-plane twin of ``_ensure_executable``: memo -> disk ->
+        timed lower+compile, keyed on the DECODE plan digest (distinct
+        from the base plan's — DecodePlan.digest covers scan structure)."""
+        compiled = self._executables.get(sig)
+        if compiled is not None:
+            return compiled
+        ck = self._aot.entry_key(self.dplan.digest, kind, args)
+
+        def build():
+            with tracing.maybe_span("compile.aot", "compile", trace=kind):
+                return jfn.lower(*args, **kw).compile()
+
+        def replay_telemetry():
+            with tracing.maybe_span("compile.aot", "compile", trace=kind,
+                                    disk_hit=1):
+                jax.eval_shape(functools.partial(traced, **kw), *args)
+
+        compiled, _ = self._aot.compile_once(ck, build,
+                                             on_disk_hit=replay_telemetry)
+        self._executables = {**self._executables, sig: compiled}
+        return compiled
+
+    def _call_decode_exec(self, sig, compiled, jfn, args, kw):
+        try:
+            return compiled(*args)
+        except Exception:  # noqa: BLE001 — same contract as
+            # _call_executable: evict + fall back to the implicit-jit path
+            self._aot.record_fallback()
+            self._executables = {k: v for k, v in self._executables.items()
+                                 if k != sig}
+            return jfn(*args, **kw)
+
+    def prefill_session(self, tokens, session_key, *, max_seq: int,
+                        trusted: bool = False, jit: bool = True):
+        """Public prompt pass: (logits at the last position, decode caches
+        padded to ``max_seq``, IntegrityReport over the prefill ops)."""
+        assert self.dplan is not None, "attach_decode_plan first"
+        kw = {"trusted": trusted, "max_seq": int(max_seq)}
+        args = (tokens, session_key)
+        if jit:
+            sig = ("prefill", bool(trusted), self.dplan.digest,
+                   tuple(tokens.shape), int(max_seq))
+            ex = self._ensure_decode_exec(
+                sig, self._jit_prefill, self._traced_prefill,
+                f"prefill{int(max_seq)}" + ("_trusted" if trusted else ""),
+                args, kw)
+            logits, caches, rep = self._call_decode_exec(
+                sig, ex, self._jit_prefill, args, kw)
+        else:
+            logits, caches, rep = self._traced_prefill(*args, **kw)
+        self._tele_last = (self._tele_trusted if trusted
+                           else self._tele_blinded)
+        return logits, caches, IG.IntegrityReport(*rep)
+
+    def decode_once(self, token, caches, pos, session_key, factors=None,
+                    *, trusted: bool = False, jit: bool = True):
+        """Public single-token step: (logits, updated caches,
+        IntegrityReport for this token's offloaded ops). ``factors`` is
+        one TokenSlotRing slot (take(token)) or None for the live /
+        trusted derivations."""
+        assert self.dplan is not None, "attach_decode_plan first"
+        pos = jnp.asarray(pos, jnp.int32)
+        kw = {"trusted": trusted}
+        args = (token, caches, pos, session_key, factors)
+        if jit:
+            sig = ("decode", bool(trusted), self.dplan.digest,
+                   tuple(token.shape), self._cache_seq(caches),
+                   factors is None)
+            ex = self._ensure_decode_exec(
+                sig, self._jit_decode, self._traced_decode,
+                "decode" + ("_trusted" if trusted else ""), args, kw)
+            logits, caches, rep = self._call_decode_exec(
+                sig, ex, self._jit_decode, args, kw)
+        else:
+            logits, caches, rep = self._traced_decode(*args, **kw)
+        self._tele_last = (self._tele_trusted if trusted
+                           else self._tele_blinded)
+        return logits, caches, IG.IntegrityReport(*rep)
+
+    def warm_decode_aot(self, batch: int, prompt_len: int, max_seq: int,
+                        trusted_too: bool = True) -> int:
+        """Compile the prefill + token-step executables (and the trusted
+        recovery twins) ahead of the first request — the decode analogue
+        of ``warm_aot``. Returns the number of signatures ensured."""
+        assert self.dplan is not None, "attach_decode_plan first"
+        key0 = jax.random.PRNGKey(0)
+        tokens = jnp.zeros((batch, int(prompt_len)), jnp.int32)
+        token = jnp.zeros((batch, 1), jnp.int32)
+        caches = M.init_caches(self.cfg, batch, int(max_seq))
+        cache = self.decode_cache(batch)
+        n = 0
+        with self._aot.warmup_scope():
+            for trusted in ((False, True) if trusted_too else (False,)):
+                sig = ("prefill", trusted, self.dplan.digest,
+                       tuple(tokens.shape), int(max_seq))
+                self._ensure_decode_exec(
+                    sig, self._jit_prefill, self._traced_prefill,
+                    f"prefill{int(max_seq)}"
+                    + ("_trusted" if trusted else ""),
+                    (tokens, key0),
+                    {"trusted": trusted, "max_seq": int(max_seq)})
+                n += 1
+                factors = (None if trusted or cache is None
+                           else cache.session_factors(key0, 0))
+                sig = ("decode", trusted, self.dplan.digest,
+                       tuple(token.shape), int(max_seq), factors is None)
+                self._ensure_decode_exec(
+                    sig, self._jit_decode, self._traced_decode,
+                    "decode" + ("_trusted" if trusted else ""),
+                    (token, caches, jnp.int32(prompt_len), key0, factors),
+                    {"trusted": trusted})
+                n += 1
+        return n
+
     # -- precompute pipeline -------------------------------------------------
     def build_cache(self, batch) -> Optional[BlindedLayerCache]:
         """Quantize/limb-encode every offloaded layer's weights once and
@@ -236,9 +547,11 @@ class OrigamiExecutor:
 
         The blinded-op records come straight from the plan's static layer
         shapes (``plan.cache_ops`` slots + models/vgg.py shape algebra) —
-        no eval_shape re-trace. Families whose offloaded ops trace under
-        ``lax.scan`` have no cache slots (per-layer factors can't be bound
-        positionally) and stay on the on-the-fly path.
+        no eval_shape re-trace. Forward traces of scanned LM families have
+        no cache slots (``plan.cache_ops`` is empty — the typed
+        ``plan.ScanExclusion`` domain); their DECODE walk gets per-op
+        slots through ``decode_cache``/``_decode_records`` instead
+        (DESIGN.md §16).
         """
         ops = self.plan.cache_ops
         if not ops:
@@ -286,8 +599,8 @@ class OrigamiExecutor:
                 self._cache_key = key
             else:
                 self.build_cache(batch)
-        if self.cache is None:          # precompute unsupported (scanned)
-            return None
+        if self.cache is None:          # forward trace has no cache slots
+            return None                 # (decode slots: decode_cache())
         return self.cache.take(session_key)
 
     # -- AOT executables -----------------------------------------------------

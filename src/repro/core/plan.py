@@ -52,6 +52,35 @@ PLACEMENTS = ("open", "enclave", "blinded")
 LEGACY_MODES = ("open", "enclave", "split", "slalom", "origami")
 SHARD_MODES = ("rows", "shares")
 
+# families whose decode walk is per-op addressable (models/model.py
+# decode_range_unrolled): every block is a uniform stack of static-weight
+# linear ops, so a decode plan can bind per-(token, layer) factor slots and
+# per-step Freivalds folds. Everything else raises ScanExclusion with the
+# documented reason (make_decode_plan).
+DECODE_FAMILIES = ("dense",)
+
+_DECODE_EXCLUSIONS = {
+    "cnn": "feed-forward family: no autoregressive decode loop exists",
+    "moe": "expert weights are data-dependent gathers (top-k routing), so "
+           "per-op unblinding factors u = r @ W cannot be precomputed — "
+           "run MoE decode enclave-resident or blinded-unverified",
+    "hybrid": "decode walks grouped mamba super-blocks under lax.scan; the "
+              "recurrent state update is not a static-weight linear map",
+    "ssm": "decode walks grouped m/sLSTM super-blocks under lax.scan; the "
+           "recurrent state update is not a static-weight linear map",
+    "audio": "decoder blocks carry cross-attention against the encoder "
+             "memory and decode under lax.scan (grouped super-blocks)",
+    "vlm": "decoder blocks carry cross-attention against the vision "
+           "memory and decode under lax.scan (grouped super-blocks)",
+}
+
+
+class ScanExclusion(ValueError):
+    """A placement/decode feature is structurally unavailable for this
+    family — the typed form of the former "scanned families fall back"
+    branches. Subclasses ValueError so legacy callers keep working; the
+    message always names the documented reason (DESIGN.md §16)."""
+
 # placement-string alphabet (``from_string`` / ``placement_string``):
 # o = open, e = enclave, b = blinded, v = verified-open (open + Freivalds)
 _CHAR_PLACEMENT = {"o": "open", "e": "enclave", "b": "blinded", "v": "open"}
@@ -263,11 +292,15 @@ class PlacementPlan:
 def linear_layers(cfg: ModelConfig) -> Optional[Tuple[bool, ...]]:
     """Per-layer "carries an individually-addressable linear op" mask.
 
-    ``None`` for families whose blinded ops trace under ``lax.scan`` (one
-    traced call stands for many runtime layers): those ops can be blinded
-    but neither positionally cached NOR per-op verified — the DESIGN.md
-    §4/§9 restriction. This is the single source of truth both the slot
-    assigner and the verified-open constructors consult."""
+    ``None`` for families whose blinded ops trace under ``lax.scan`` in
+    the FORWARD/prefill trace (one traced call stands for many runtime
+    layers): those ops can be blinded but neither positionally cached NOR
+    per-op verified there — the DESIGN.md §4/§9 restriction. This is the
+    single source of truth both the slot assigner and the verified-open
+    constructors consult. It is a statement about the forward trace only:
+    the DECODE walk of ``DECODE_FAMILIES`` is per-op addressable
+    (``make_decode_plan`` / DESIGN.md §16), which is where per-step
+    integrity for LM families lives."""
     if cfg.family != "cnn":
         return None
     from repro.models import vgg as V
@@ -308,17 +341,21 @@ def make_plan(cfg: ModelConfig, placements: Sequence[str], *,
     if linear_layers(cfg) is None and any(
             p is not None and p.enabled for p in integrity.values()):
         # scanned families (LM/audio/vlm) trace many runtime layers
-        # through one call — per-op verification cannot bind there, so an
-        # enabled per-step policy would be silently unenforced. For an
-        # open step that is catastrophic: the op would run UNBLINDED and
-        # UNCHECKED while the plan digest (and the attestation quote)
-        # advertises verified offload. Fail at compile time instead.
-        raise ValueError(
+        # through one call in the FORWARD trace — per-op verification
+        # cannot bind there, so an enabled per-step policy would be
+        # silently unenforced. For an open step that is catastrophic: the
+        # op would run UNBLINDED and UNCHECKED while the plan digest (and
+        # the attestation quote) advertises verified offload. Fail at
+        # compile time instead; token-wise per-step integrity for decode
+        # is expressed through make_decode_plan's ScanSegments (§16).
+        raise ScanExclusion(
             f"{cfg.name} ({cfg.family}): per-step integrity policies "
             "(verified-open 'v' placements) need per-op verification, "
             "which is unavailable for families whose ops trace under "
-            "lax.scan — use 'blinded' placements and an executor-wide "
-            "policy instead (DESIGN.md §9/§10)")
+            "lax.scan in the forward trace — use 'blinded' placements "
+            "with an executor-wide policy, or a decode plan "
+            "(make_decode_plan) for token-wise verification "
+            "(DESIGN.md §9/§10/§16)")
     if boundary is None:
         boundary = n
         while boundary > 0 and placements[boundary - 1] == "open":
@@ -402,8 +439,10 @@ def make_vopen(cfg: ModelConfig, boundary: Optional[int] = None,
     pol = verify or IG.IntegrityPolicy.full(1)
     linear = linear_layers(cfg)
     if linear is None:
-        raise ValueError(f"{cfg.name}: verified-open needs per-op "
-                         "verification (see linear_layers)")
+        raise ScanExclusion(
+            f"{cfg.name}: verified-open needs per-op verification in the "
+            "forward trace (see linear_layers); for LM decode use "
+            "make_decode_plan's verified scan segments (DESIGN.md §16)")
     integ = {i: pol for i in range(p, n) if linear[i]}
     return make_plan(cfg, ["blinded"] * p + ["open"] * (n - p),
                      integrity=integ, boundary=p, label=label)
@@ -428,6 +467,111 @@ def classify_legacy(plan: PlacementPlan) -> Optional[Tuple[str, int]]:
     if ps == ["blinded"] * b + ["open"] * (n - b):
         return "origami", b
     return None
+
+
+# ---------------------------------------------------------------------------
+# decode plans: scan segments + token-slot binding (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScanSegment:
+    """One decode-time segment: the per-token walk of blocks [lo, hi)
+    under one execution regime, repeated for decode steps
+    [steps[0], steps[1]).
+
+    ``regime``/``policy``/``shard`` mirror ``Segment``, but the policy is
+    *per step*: each token step re-derives its Freivalds fold vectors and
+    (in sampled mode) its check/skip decisions from
+    ``(session, op, token)``, so verification coverage is token-wise.
+    ``slot_binding``: how the segment's blinded ops obtain factors —
+    ``"token"`` (each step consumes the per-(session, token, layer) slot
+    of a streaming TokenSlotRing; blinded and verified regimes) or
+    ``"none"`` (plain segments touch no factor material)."""
+    lo: int
+    hi: int
+    regime: str
+    steps: Tuple[int, int]
+    policy: Optional[IG.IntegrityPolicy] = None
+    shard: Optional[ShardPolicy] = None
+    slot_binding: str = "token"
+
+    def __post_init__(self):
+        assert self.regime in ("plain", "blinded", "verified"), self.regime
+        assert self.slot_binding in ("token", "none"), self.slot_binding
+        assert 0 <= self.steps[0] <= self.steps[1], self.steps
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """A PlacementPlan applied token-wise: the decode loop walks ``scan``
+    once per token, carrying the KV caches and the token-slot cursor.
+
+    ``digest`` extends the base plan's digest with the scan-segment
+    structure and the step range, so the attestation quote and the AOT
+    executable cache key a *decode* plan distinctly from the forward plan
+    it was derived from (same property the forward digest has had since
+    PR 4)."""
+    base: PlacementPlan
+    scan: Tuple[ScanSegment, ...]
+    max_steps: int
+
+    @cached_property
+    def digest(self) -> str:
+        body = {
+            "base": self.base.digest,
+            "max_steps": self.max_steps,
+            "scan": [(s.lo, s.hi, s.regime, list(s.steps),
+                      _policy_key(s.policy), _shard_key(s.shard),
+                      s.slot_binding) for s in self.scan],
+        }
+        return hashlib.sha256(
+            json.dumps(body, sort_keys=True).encode()).hexdigest()
+
+    @property
+    def has_offload(self) -> bool:
+        return any(s.regime != "plain" for s in self.scan)
+
+    @property
+    def has_verification(self) -> bool:
+        return any(s.regime != "plain" and s.policy is not None
+                   and s.policy.enabled for s in self.scan)
+
+    def summary(self) -> str:
+        segs = " ".join(f"[{s.lo},{s.hi}){s.regime[0]}" for s in self.scan)
+        return (f"{self.base.model}[decode] {segs} steps={self.max_steps} "
+                f"plan={self.digest[:12]}")
+
+
+def make_decode_plan(cfg: ModelConfig, plan: Optional[PlacementPlan] = None,
+                     *, max_steps: int,
+                     partition: Optional[int] = None,
+                     integrity: Optional[IG.IntegrityPolicy] = None
+                     ) -> DecodePlan:
+    """Compile a decode plan: the base plan's segments applied token-wise.
+
+    ``plan`` defaults to ``compile_mode(cfg, "origami", partition)``.
+    ``integrity`` attaches a per-step Freivalds policy to every offloaded
+    scan segment that has no per-step override of its own — legal here
+    (unlike ``make_plan`` for scanned forward traces) because the decode
+    walk is per-op addressable. Raises ScanExclusion for families outside
+    DECODE_FAMILIES, with the documented structural reason."""
+    if cfg.family not in DECODE_FAMILIES:
+        reason = _DECODE_EXCLUSIONS.get(cfg.family, "no decode walk")
+        raise ScanExclusion(
+            f"{cfg.name} ({cfg.family}): private decode unavailable — "
+            f"{reason} (DESIGN.md §16)")
+    assert max_steps >= 1, max_steps
+    if plan is None:
+        plan = compile_mode(cfg, "origami", partition)
+    scan = []
+    for seg in plan.segments:
+        policy = seg.policy
+        if policy is None and seg.regime != "plain":
+            policy = integrity
+        scan.append(ScanSegment(
+            seg.lo, seg.hi, seg.regime, (0, max_steps), policy, seg.shard,
+            slot_binding="none" if seg.regime == "plain" else "token"))
+    return DecodePlan(plan, tuple(scan), max_steps)
 
 
 # ---------------------------------------------------------------------------

@@ -120,7 +120,11 @@ class SlalomContext:
     session_key: jax.Array
     spec: B.BlindingSpec = dfield(default_factory=B.BlindingSpec)
     telemetry: Telemetry = dfield(default_factory=Telemetry)
-    step: int = 0
+    # stream-key step component. An int for single-shot traces; the decode
+    # interpreter (core/origami.py) sets it to the TRACED token position so
+    # one compiled token-step executable draws fresh per-token pads, fold
+    # vectors and sampling decisions (fold_in accepts traced ints).
+    step: Any = 0
     impl: str = "fused"                       # "fused" | "unfused"
     factors: Optional[List[Any]] = None
     integrity: IG.IntegrityPolicy = dfield(
@@ -130,6 +134,13 @@ class SlalomContext:
     unblinded: bool = False
     plane: Optional[Any] = None               # offload_sharding.OffloadPlane
     shard: Optional[Any] = None               # plan.ShardPolicy override
+    # per-op addressability verdict override. The default (None) infers
+    # "scanned" from the weight leaf being a tracer — right for forward
+    # traces, where a tracer weight means lax.scan over stacked blocks.
+    # The decode interpreter unrolls the block walk at trace time, so its
+    # weights are tracers (jit args) yet every op IS individually
+    # addressable: it sets per_op=True and verification/injection bind.
+    per_op: Optional[bool] = None
     integrity_log: List[Any] = dfield(default_factory=list)
     _layer_counter: int = 0
 
@@ -286,9 +297,15 @@ def _blinded_dense(ctx: SlalomContext, p, x,
     # verification/injection cannot bind per-op state for ops traced inside
     # lax.scan (one traced call stands for many runtime layers, and traced
     # values appended to integrity_log would leak out of the scan) — same
-    # restriction as the precompute cache; such ops stay unverified.
+    # restriction as the precompute cache; such ops stay unverified. The
+    # decode interpreter's unrolled walk overrides the verdict via
+    # ctx.per_op: its weights are jit-arg tracers but each traced call
+    # stands for exactly one runtime op (DESIGN.md §16).
     if scanned is None:
-        scanned = isinstance(w, jax.core.Tracer)
+        if ctx.per_op is not None:
+            scanned = not ctx.per_op
+        else:
+            scanned = isinstance(w, jax.core.Tracer)
     # --- enclave: per-request absmax activation scale ---
     x_scale = jnp.maximum(jnp.max(jnp.abs(xt.astype(jnp.float32))), 1e-9)
     if ctx.plane is not None and not scanned:

@@ -505,6 +505,91 @@ def decode_range(params, x, caches, pos, cfg: ModelConfig,
     return x, merged
 
 
+def decode_range_unrolled(params, x, caches, pos, cfg: ModelConfig,
+                          lo: int, hi: int):
+    """``decode_range`` with the block walk UNROLLED at trace time
+    (dense family): a Python loop over blocks [lo, hi) instead of
+    ``lax.scan`` over stacked params.
+
+    Every linear op of every block becomes an individually-addressable
+    traced call, which is what lets the decode interpreter
+    (core/origami.py) bind per-(token, layer) blinding factors from the
+    token-slot ring and run per-step Freivalds verification — the thing
+    the scanned walk structurally cannot do (DESIGN.md §16). Numerically
+    identical to ``decode_range``; the scanned form stays the fast path
+    for plain segments and open generation."""
+    new = []
+    for i in range(lo, hi):
+        p_i = jax.tree.map(lambda t: t[i], params["blocks"])
+        c_i = jax.tree.map(lambda c: None if c is None else c[i], caches,
+                           is_leaf=lambda v: v is None)
+        x, c_new = T.decoder_block_decode(p_i, x, c_i, pos, cfg)
+        new.append(c_new)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *new)
+    merged = jax.tree.map(
+        lambda full, upd: jax.lax.dynamic_update_slice_in_dim(
+            full, upd.astype(full.dtype), lo, axis=0)
+        if full is not None else None,
+        caches, stacked, is_leaf=lambda v: v is None)
+    return x, merged
+
+
+def prefill_range(params, x, cfg: ModelConfig, lo: int, hi: int, *,
+                  cost_mode=False):
+    """Prefill blocks [lo, hi) on hidden states x (dense/moe families).
+
+    Returns ``(x, caches)`` with the caches' leading dim = hi - lo — the
+    per-segment half of ``prefill``, so the plan interpreter can walk the
+    prompt through the base plan's segments (blinded prefix under the
+    dense intercept, open suffix without) and still come out with the
+    full KV caches the decode loop needs."""
+    blocks = T.slice_layers(params["blocks"], lo, hi)
+
+    def body(carry, p_i):
+        h, cache, _aux = T.decoder_block_prefill(p_i, carry, cfg,
+                                                 cost_mode=cost_mode)
+        return h, cache
+
+    return jax.lax.scan(body, x, blocks)
+
+
+def prefill_range_unrolled(params, x, cfg: ModelConfig, lo: int, hi: int, *,
+                           cost_mode=False):
+    """``prefill_range`` with the block walk unrolled at trace time —
+    the prompt-side twin of ``decode_range_unrolled``: inside a blinded
+    plan segment every prompt linear op becomes its own traced call, so
+    it draws its own blinding key and Freivalds fold instead of sharing
+    one scanned call (and one pad) across layers."""
+    cs = []
+    for i in range(lo, hi):
+        p_i = jax.tree.map(lambda t: t[i], params["blocks"])
+        x, cache, _aux = T.decoder_block_prefill(p_i, x, cfg,
+                                                 cost_mode=cost_mode)
+        cs.append(cache)
+    return x, jax.tree.map(lambda *a: jnp.stack(a), *cs)
+
+
+def concat_layer_caches(parts, max_seq: int, dtype=jnp.bfloat16):
+    """Stitch per-segment prefill caches (leading layer dim) back into one
+    stack, padded along the sequence axis to ``max_seq`` and cast to the
+    decode cache dtype."""
+    caches = jax.tree.map(
+        lambda *cs: (None if cs[0] is None
+                     else jnp.concatenate(cs, axis=0)),
+        *parts, is_leaf=lambda v: v is None)
+
+    def pad(c):
+        if c is None:
+            return None
+        if c.shape[2] == max_seq:
+            return c.astype(dtype)
+        padw = [(0, 0)] * c.ndim
+        padw[2] = (0, max_seq - c.shape[2])
+        return jnp.pad(c, padw).astype(dtype)
+
+    return jax.tree.map(pad, caches, is_leaf=lambda v: v is None)
+
+
 def decode_step(params, token, caches, pos, cfg: ModelConfig):
     """token: (B, 1) int32; pos: scalar int32. Returns (logits, caches)."""
     fam = cfg.family

@@ -554,9 +554,13 @@ class ServingEngine:
                                      None, {}, {}, ())
         entry = _ModelEntry(
             name=name, cfg=executor.cfg, executor=executor,
+            # generate-capable executors attest their DECODE plan digest
+            # (covers the scan-segment structure, core/plan.py §16)
             quote=measure_enclave(executor.cfg, executor.params,
                                   executor.partition,
-                                  plan_digest=executor.plan.digest),
+                                  plan_digest=getattr(
+                                      executor, "attested_digest",
+                                      executor.plan.digest)),
             pool=pool or SessionPool(executor,
                                      depth=self.cfg.session_pool_depth),
             plan=plan, placement=executor.plan,
@@ -593,6 +597,10 @@ class ServingEngine:
         from repro.runtime.serving import request_nonce, response_nonce
         cfg = entry.cfg
         shape = warm_shape
+        if shape is None:
+            # generate-capable executors declare their own request shape
+            # (the prompt length) — runtime/generate.py GenerateExecutor
+            shape = getattr(entry.executor, "request_shape", None)
         if shape is None and getattr(cfg, "family", None) == "cnn":
             shape = (cfg.image_size, cfg.image_size, cfg.image_channels)
         if shape is None:
@@ -605,7 +613,8 @@ class ServingEngine:
         key = jnp.zeros((2,), jnp.uint32)
         box = seal(key, jnp.zeros(shape, jnp.float32), request_nonce(0))
         unseal(key, box, shape)
-        n_out = getattr(cfg, "num_classes", None)
+        n_out = (getattr(entry.executor, "response_elems", None)
+                 or getattr(cfg, "num_classes", None))
         if n_out:
             seal(key, jnp.zeros((int(n_out),), jnp.float32),
                  response_nonce(0))

@@ -12,16 +12,19 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import integrity as IG
+from repro.core import origami as OG
 from repro.core import slalom as SL
 from repro.core.blinding import BlindingSpec
 from repro.models import layers as L
 from repro.models import model as M
+from repro.runtime.sessions import TokenSlotRing
 
 
 @dataclass
@@ -38,6 +41,36 @@ def _sample(logits, key, temperature: float, vocab_size: int):
                                   axis=-1).astype(jnp.int32)
 
 
+# jit caches keyed on the (hashable, frozen) config: recreating the jitted
+# callable per generate() call would retrace/recompile on every sequence
+@functools.lru_cache(maxsize=None)
+def _jit_decode_step(cfg: ModelConfig):
+    return jax.jit(functools.partial(M.decode_step, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(cfg: ModelConfig, max_seq: int, vlm: bool):
+    fn = M.prefill_vlm if vlm else M.prefill
+    return jax.jit(functools.partial(fn, cfg=cfg, max_seq=max_seq))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_recurrent(cfg: ModelConfig, S0: int):
+    @jax.jit
+    def prefill_recurrent(params, prompt, caches):
+        logits, caches = M.decode_step(params, prompt[:, 0:1], caches,
+                                       jnp.int32(0), cfg)
+
+        def body(t, carry):
+            _, c = carry
+            tok = jax.lax.dynamic_slice_in_dim(prompt, t, 1, axis=1)
+            return M.decode_step(params, tok, c, t, cfg)
+
+        return jax.lax.fori_loop(1, S0, body, (logits, caches))
+
+    return prefill_recurrent
+
+
 def generate(params, prompt, cfg: ModelConfig, *, max_new_tokens: int,
              temperature: float = 0.0, key=None) -> GenerationResult:
     """Open (non-private) generation for any family with a decode path."""
@@ -47,17 +80,19 @@ def generate(params, prompt, cfg: ModelConfig, *, max_new_tokens: int,
 
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         batch = {"tokens": prompt}
-        logits, caches = (M.prefill_vlm if cfg.family == "vlm" else M.prefill)(
-            params, batch, cfg, max_seq=total)
+        logits, caches = _jit_prefill(cfg, total, cfg.family == "vlm")(
+            params, batch)
     else:
-        # recurrent families: build state by stepping through the prompt
+        # recurrent families: build state by stepping through the prompt —
+        # ONE jitted fori_loop over the token index instead of S0 eager
+        # decode_step dispatches (each step is the same computation up to
+        # the token slice, so the loop compiles once and prompt
+        # processing pays no per-token Python/dispatch overhead)
         caches = M.init_caches(cfg, B, total)
-        logits = None
-        for t in range(S0):
-            logits, caches = M.decode_step(params, prompt[:, t:t + 1],
-                                           caches, jnp.int32(t), cfg)
+        logits, caches = _jit_prefill_recurrent(cfg, S0)(params, prompt,
+                                                         caches)
 
-    decode = jax.jit(functools.partial(M.decode_step, cfg=cfg))
+    decode = _jit_decode_step(cfg)
     tokens = prompt
     key, k = jax.random.split(key)
     nxt = _sample(logits[:, -1], k, temperature, cfg.vocab_size)[:, None]
@@ -108,6 +143,173 @@ def generate_origami(params, prompt, cfg: ModelConfig, *,
         if t >= S0 - 1:
             tokens = jnp.concatenate([tokens, nxt], axis=1)
     return GenerationResult(tokens=tokens, telemetry=ctx.telemetry)
+
+
+@dataclass
+class PrivateGenerationResult:
+    """Outcome of one ``private_generate`` stream.
+
+    ``logits``: (B, max_new_tokens, vocab) — the logits each sampled token
+    was drawn from (position S0-1 .. total-2), the bit-exactness surface
+    the ``trusted=True`` recompute oracle is compared against.
+    ``telemetry`` is the last per-step trace snapshot (static per step —
+    multiply by ``decode_steps`` for whole-stream totals); ``integrity``
+    concatenates the per-op fold outcomes of the prefill pass and every
+    decode step, in execution order."""
+    tokens: jax.Array                    # (B, prompt+new)
+    logits: jax.Array                    # (B, new, vocab)
+    telemetry: Optional[SL.Telemetry]
+    integrity: IG.IntegrityReport
+    ring: Optional[Dict[str, int]]       # TokenSlotRing.stats(), None if
+    trusted: bool                        # nothing was blinded / trusted
+    plan_digest: str                     # DecodePlan digest (attestation)
+    decode_steps: int
+
+
+def _concat_reports(reps) -> IG.IntegrityReport:
+    cat = lambda xs: (jnp.concatenate(xs) if xs
+                      else jnp.zeros((0,), jnp.bool_))
+    return IG.IntegrityReport(
+        checked=cat([r.checked for r in reps if r.n_ops]),
+        failed=cat([r.failed for r in reps if r.n_ops]),
+        corrupted=cat([r.corrupted for r in reps if r.n_ops]))
+
+
+def private_generate(params, prompt, cfg: ModelConfig, *,
+                     max_new_tokens: int, partition: Optional[int] = None,
+                     integrity: Optional[IG.IntegrityPolicy] = None,
+                     temperature: float = 0.0, session_key=None, key=None,
+                     trusted: bool = False, ring_depth: int = 8,
+                     executor: Optional["OG.OrigamiExecutor"] = None,
+                     jit: bool = True) -> PrivateGenerationResult:
+    """Private autoregressive generation under a DecodePlan (DESIGN.md §16).
+
+    Prefill runs the prompt through the BASE plan's segments (blinded
+    prefix offloaded per-op, open suffix in the clear); each decode step
+    walks the plan's scan segments, consuming one per-token slot from a
+    streaming TokenSlotRing for its blinded KV-cache-facing matmuls and
+    folding a per-step Freivalds check over every offloaded op.
+
+    ``trusted=True`` is the recovery oracle: the same quantized math runs
+    entirely inside the enclave (no device, no blinding, no ring) and the
+    logits — hence the sampled tokens — are bit-identical to the honest
+    offloaded path. ``executor``: reuse a prepared OrigamiExecutor (its
+    decode plan is attached on first use); otherwise one is built from
+    ``partition``/``integrity``."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    session_key = (session_key if session_key is not None
+                   else jax.random.PRNGKey(7))
+    B, S0 = prompt.shape
+    total = S0 + max_new_tokens
+    if executor is None:
+        executor = OG.OrigamiExecutor(cfg, params, "origami", partition,
+                                      integrity=integrity)
+    if executor.dplan is None:
+        executor.attach_decode_plan(max_steps=max_new_tokens)
+    ring = None
+    if not trusted:
+        cache = executor.decode_cache(B)
+        if cache is not None:
+            # decode positions start at S0 >= 1; prefill ops use step 0 —
+            # the ring's slot domain never collides with the prompt's
+            ring = TokenSlotRing(cache, session_key, lo=S0,
+                                 depth=ring_depth)
+    logits, caches, rep = executor.prefill_session(
+        prompt, session_key, max_seq=total, trusted=trusted, jit=jit)
+    reps = [rep]
+    key, k = jax.random.split(key)
+    nxt = _sample(logits[:, -1], k, temperature, cfg.vocab_size)[:, None]
+    tokens = jnp.concatenate([prompt, nxt], axis=1)
+    step_logits = [logits[:, -1]]
+    for t in range(S0, total - 1):
+        factors = ring.take(t) if ring is not None else None
+        logits, caches, rep = executor.decode_once(
+            tokens[:, -1:], caches, t, session_key, factors,
+            trusted=trusted, jit=jit)
+        reps.append(rep)
+        key, k = jax.random.split(key)
+        nxt = _sample(logits[:, 0], k, temperature, cfg.vocab_size)[:, None]
+        tokens = jnp.concatenate([tokens, nxt], axis=1)
+        step_logits.append(logits[:, 0])
+    ring_stats = None
+    if ring is not None:
+        ring_stats = ring.stats()
+        ring.close()
+    return PrivateGenerationResult(
+        tokens=tokens, logits=jnp.stack(step_logits, axis=1),
+        telemetry=executor.telemetry, integrity=_concat_reports(reps),
+        ring=ring_stats, trusted=trusted,
+        plan_digest=executor.dplan.digest,
+        decode_steps=max(0, max_new_tokens - 1))
+
+
+class GenerateExecutor(OG.OrigamiExecutor):
+    """Engine adapter: serve private token STREAMS through the sealed
+    single-shot batcher (runtime/engine.py).
+
+    A request's payload is the prompt — ``prompt_len`` int32 token ids
+    riding the float32 sealing channel — and the response is the full
+    generated sequence, returned tokens-as-logits (float32 is exact for
+    every vocab < 2^24, and the engine's seal path already ships float32
+    rows). ``infer`` runs the whole prefill + decode loop per batch:
+    greedy/fixed-key sampling, so the §9 recovery ladder's trusted
+    recompute reproduces the stream bit-for-bit. The attested digest is
+    the DECODE plan's (covers the scan structure, not just the base
+    plan). Decode-aware bucket selection comes for free: the engine pads
+    to the §15 shape-bucket ladder, and ``warm_aot`` compiles the
+    per-bucket prefill + token-step executables (plus trusted twins) and
+    builds each bucket's decode factor cache."""
+
+    def __init__(self, cfg: ModelConfig, params, *, prompt_len: int,
+                 max_new_tokens: int, mode: str = "origami",
+                 partition: Optional[int] = None,
+                 integrity: Optional[IG.IntegrityPolicy] = None,
+                 ring_depth: int = 8, temperature: float = 0.0, **kw):
+        super().__init__(cfg, params, mode, partition,
+                         integrity=integrity, **kw)
+        self.prompt_len = int(prompt_len)
+        self.max_new_tokens = int(max_new_tokens)
+        self.ring_depth = int(ring_depth)
+        self.temperature = float(temperature)
+        self.attach_decode_plan(max_steps=self.max_new_tokens)
+        # engine.warm consults these instead of the CNN image shape
+        self.request_shape: Tuple[int, ...] = (self.prompt_len,)
+        self.response_elems: int = self.prompt_len + self.max_new_tokens
+
+    @property
+    def attested_digest(self) -> str:
+        return self.dplan.digest
+
+    def infer(self, batch, session_key=None, jit: bool = True,
+              trusted: bool = False) -> OG.OrigamiResult:
+        (prompt,) = batch.values()
+        prompt = jnp.asarray(prompt, jnp.int32)
+        assert prompt.shape[1] == self.prompt_len, prompt.shape
+        key = (session_key if session_key is not None
+               else jax.random.PRNGKey(0))
+        res = private_generate(
+            self.params, prompt, self.cfg,
+            max_new_tokens=self.max_new_tokens,
+            temperature=self.temperature, session_key=key,
+            key=jax.random.PRNGKey(0),   # fixed sampling stream: recovery
+            trusted=trusted,             # recompute must replay the tokens
+            ring_depth=self.ring_depth, executor=self, jit=jit)
+        self._tele_last = (self._tele_trusted if trusted
+                           else self._tele_blinded)
+        return OG.OrigamiResult(
+            logits=res.tokens.astype(jnp.float32), boundary=None,
+            telemetry=self.telemetry, integrity=res.integrity,
+            trusted=trusted, sharding=None)
+
+    def warm_aot(self, input_key: str, request_shape, buckets,
+                 dtype=None, trusted_too: bool = True) -> int:
+        n = 0
+        for b in buckets:
+            n += self.warm_decode_aot(
+                int(b), self.prompt_len,
+                self.prompt_len + self.max_new_tokens,
+                trusted_too=trusted_too)
+        return n
 
 
 def tier1_cache_bytes(cfg: ModelConfig, batch: int, max_seq: int,

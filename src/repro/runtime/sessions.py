@@ -49,6 +49,13 @@ class SessionReuseError(RuntimeError):
     """A blinding session key was issued twice — one-time pad violation."""
 
 
+class SlotReuseError(RuntimeError):
+    """A (session, token) factor slot was issued twice — each decode step's
+    pads are one-time material exactly like a forward session's
+    (DESIGN.md §16): re-issuing token t would offload two different
+    activation vectors under the same r."""
+
+
 def fresh_root(seed: Optional[int] = None) -> jax.Array:
     """64 entropy bits via two 32-bit words (PRNGKey seeds are C-long)."""
     if seed is not None:
@@ -222,6 +229,143 @@ class SessionPool:
                     "misses": self.misses, "reuse_checked": self.reuse_checked,
                     "refill_errors": self.refill_errors,
                     "depth": self.depth, "pending": self._next - self._head}
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def acquire_stream(self, cache, *, lo: int = 0, depth: int = 8,
+                       background: bool = True):
+        """Pop the next never-reused session key AND bind a per-token
+        factor stream to it: ``(key, TokenSlotRing | None)``.
+
+        ``cache`` is the executor's decode-walk BlindedLayerCache
+        (core/origami.py ``decode_cache``) — per-session material, so it
+        is NOT part of the pool's forward prefetch ring; each generate
+        stream gets its own ring whose slots are keyed by token index.
+        ``None`` ring when the decode plan has nothing to blind."""
+        key = self.acquire()
+        if cache is None:
+            return key, None
+        return key, TokenSlotRing(cache, key, lo=lo, depth=depth,
+                                  background=background,
+                                  refill_fault=self.refill_fault)
+
+
+class TokenSlotRing:
+    """Streaming per-token blinding/fold slots for ONE decode session.
+
+    The SessionPool's ring is N sessions deep — a fixed set of
+    (session, layer, step=0) factor sets for single-shot traces. Decode
+    needs an UNBOUNDED stream instead: every generated token consumes the
+    (session, layer, token) factor set of every offloaded op in the scan
+    segment. The ring keeps ``depth`` future token slots prefetched
+    through ``BlindedLayerCache.session_factors(key, step=token)`` — the
+    token index rides the factor keying's existing ``step`` slot, which is
+    exactly the stream the jitted token step derives live (ctx.step = the
+    traced position), so ring-fed and live traces are bit-identical.
+
+    - **reuse guard**: ``take(token)`` remembers every token index issued
+      and raises SlotReuseError on re-issue — one-time pads per
+      (session, token, layer).
+    - **refill**: a daemon thread tops the ring up ahead of the consumer;
+      outrunning it is a counted miss (``take`` falls back to synchronous
+      factor generation), never an error.
+    - **fault containment**: a failing refill increments
+      ``refill_errors`` and the thread keeps going; ``refill_fault`` is
+      the chaos hook (called with the token index), as in SessionPool.
+    """
+
+    def __init__(self, cache, session_key, *, lo: int = 0, depth: int = 8,
+                 background: bool = True,
+                 refill_fault: Optional[Callable[[int], None]] = None):
+        assert depth >= 1, depth
+        self.cache = cache
+        self.session_key = session_key
+        self.depth = depth
+        self.refill_fault = refill_fault
+        self._issued: Set[int] = set()
+        self._head = lo                    # lowest token not yet taken
+        self._next = lo                    # next token to prefetch
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
+        self.consumed = 0
+        self.refilled = 0
+        self.misses = 0
+        self.refill_errors = 0
+        # the ring's slots must not FIFO-evict each other before they are
+        # taken; leave slack for a take that jumps the head forward
+        cache.max_prefetched = max(depth + 2, cache.max_prefetched)
+        self._thread: Optional[threading.Thread] = None
+        if background:
+            self._thread = threading.Thread(
+                target=self._refill_loop, name="token-slot-refill",
+                daemon=True)
+            self._thread.start()
+
+    def _refill_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and (
+                        self._next - self._head >= self.depth):
+                    self._cv.wait()
+                if self._closed:
+                    return
+                token = self._next
+                self._next += 1
+            try:
+                if self.refill_fault is not None:
+                    self.refill_fault(token)
+                self.cache.prefetch(self.session_key, step=token)
+            except Exception:  # noqa: BLE001 — keep the stream alive; the
+                # consumer falls back to synchronous factors for this token
+                with self._lock:
+                    self.refill_errors += 1
+                continue
+            with self._lock:
+                self.refilled += 1
+
+    # -- public API --------------------------------------------------------
+    def take(self, token: int):
+        """Factor set for decode step ``token`` — prefetched if the ring
+        kept up, synchronously generated otherwise (counted miss). Raises
+        SlotReuseError if this (session, token) was ever issued before."""
+        token = int(token)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("token-slot ring closed")
+            if token in self._issued:
+                raise SlotReuseError(
+                    f"token slot {token} issued twice for this session")
+            self._issued.add(token)
+            self.consumed += 1
+            if token >= self._head:
+                self._head = token + 1
+            if self._head > self._next:    # consumer outran the refill
+                self._next = self._head
+            if not self.cache.prefetched(self.session_key, step=token):
+                self.misses += 1
+            self._cv.notify_all()          # wake refill to top the ring up
+        return self.cache.take(self.session_key, step=token)
+
+    def ready(self) -> int:
+        """How many not-yet-taken upcoming slots are prefetched."""
+        with self._lock:
+            head, nxt = self._head, self._next
+        return sum(self.cache.prefetched(self.session_key, step=t)
+                   for t in range(head, nxt))
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"consumed": self.consumed, "refilled": self.refilled,
+                    "misses": self.misses,
+                    "refill_errors": self.refill_errors,
+                    "depth": self.depth,
+                    "pending": self._next - self._head}
 
     def close(self) -> None:
         with self._cv:

@@ -1,0 +1,98 @@
+"""Decode-plan IR (core/plan.py §16): scan segments, digest coverage,
+typed exclusions, and the config-zoo no-bit-rot sweep."""
+import pytest
+
+from repro.configs import ARCHS, PAPER_MODELS, get_smoke
+from repro.core import integrity as IG
+from repro.core import plan as PL
+
+
+def _smoke(name):
+    return get_smoke(name)
+
+
+# ---------------------------------------------------------------------------
+# ScanSegment / DecodePlan structure
+# ---------------------------------------------------------------------------
+
+def test_decode_plan_mirrors_base_segments():
+    cfg = _smoke("smollm_135m")
+    dplan = PL.make_decode_plan(cfg, max_steps=16)
+    base = dplan.base
+    assert len(dplan.scan) == len(base.segments)
+    for seg, sseg in zip(base.segments, dplan.scan):
+        assert (sseg.lo, sseg.hi, sseg.regime) == (seg.lo, seg.hi,
+                                                   seg.regime)
+        assert sseg.steps == (0, 16)
+        # plain segments touch no factor material; offloaded ones bind
+        # per-token slots from the ring
+        expect = "none" if seg.regime == "plain" else "token"
+        assert sseg.slot_binding == expect
+    assert dplan.has_offload == base.has_offload
+
+
+def test_decode_plan_attaches_per_step_integrity():
+    cfg = _smoke("smollm_135m")
+    pol = IG.IntegrityPolicy.sampled(0.5, k=3)
+    dplan = PL.make_decode_plan(cfg, max_steps=8, integrity=pol)
+    offloaded = [s for s in dplan.scan if s.regime != "plain"]
+    assert offloaded and all(s.policy is pol for s in offloaded)
+    assert all(s.policy is None for s in dplan.scan
+               if s.regime == "plain")
+    assert dplan.has_verification
+
+
+def test_decode_digest_covers_scan_structure():
+    """Attestation/AOT keys must distinguish decode plans from their base
+    plan AND from each other (step range, policy, max_steps)."""
+    cfg = _smoke("smollm_135m")
+    d8 = PL.make_decode_plan(cfg, max_steps=8)
+    d8b = PL.make_decode_plan(cfg, max_steps=8)
+    d16 = PL.make_decode_plan(cfg, max_steps=16)
+    dver = PL.make_decode_plan(cfg, max_steps=8,
+                               integrity=IG.IntegrityPolicy.full(k=2))
+    assert d8.digest == d8b.digest            # deterministic
+    assert d8.digest != d8.base.digest        # distinct from forward plan
+    assert len({d8.digest, d16.digest, dver.digest}) == 3
+    assert d8.base.digest == d16.base.digest  # same base underneath
+
+
+def test_scan_exclusion_is_typed_and_documented():
+    """The former "scanned families fall back" branches are now a typed
+    error naming the structural reason — and still a ValueError so legacy
+    callers keep working."""
+    assert issubclass(PL.ScanExclusion, ValueError)
+    cfg = _smoke("qwen3_moe_235b")
+    with pytest.raises(PL.ScanExclusion) as ei:
+        PL.make_decode_plan(cfg, max_steps=4)
+    msg = str(ei.value)
+    assert "DESIGN.md" in msg and cfg.family in msg
+
+
+def test_decode_families_gate():
+    assert "dense" in PL.DECODE_FAMILIES
+    for fam in ("moe", "hybrid", "ssm", "audio", "vlm", "cnn"):
+        assert fam in PL._DECODE_EXCLUSIONS, fam
+
+
+# ---------------------------------------------------------------------------
+# config zoo: every dormant config must plan or raise the typed exclusion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(ARCHS) + list(PAPER_MODELS))
+def test_config_zoo_plans_or_excludes(name):
+    """No silent bit-rot: every shipped config produces a valid layer
+    program and compiles a forward plan; decode planning either succeeds
+    (DECODE_FAMILIES) or raises the documented typed exclusion."""
+    cfg = _smoke(name)
+    prog = PL.program_for(cfg)
+    assert prog.n_layers == PL.num_blocks(cfg) > 0
+    plan = PL.compile_mode(cfg, "origami")
+    assert plan.n_layers == prog.n_layers
+    assert plan.digest
+    if cfg.family in PL.DECODE_FAMILIES:
+        dplan = PL.make_decode_plan(cfg, plan, max_steps=4)
+        assert dplan.scan and dplan.digest != plan.digest
+    else:
+        with pytest.raises(PL.ScanExclusion, match="DESIGN.md"):
+            PL.make_decode_plan(cfg, plan, max_steps=4)

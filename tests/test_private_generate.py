@@ -1,0 +1,177 @@
+"""Private autoregressive decode (DESIGN.md §16): blinded ring-fed decode
+vs the trusted enclave oracle, ring-vs-live in-trace parity, the jitted
+recurrent prefill, and engine token-stream serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import integrity as IG
+from repro.models import model as M
+from repro.runtime import generate as G
+from repro.runtime.engine import EngineConfig, ServingEngine
+from repro.runtime.serving import PrivateInferenceServer, Request
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_smoke("smollm_135m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, batch=2, length=6, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, length),
+                              0, cfg.vocab_size)
+
+
+def test_private_generate_bit_exact_vs_trusted_oracle(smollm):
+    """The acceptance smoke: blinded KV-facing matmuls + per-step
+    Freivalds on, logits AND tokens bit-exact vs trusted=True."""
+    cfg, params = smollm
+    prompt = _prompt(cfg)
+    pol = IG.IntegrityPolicy.full(k=2)
+    kw = dict(max_new_tokens=5, integrity=pol,
+              session_key=jax.random.PRNGKey(9))
+    priv = G.private_generate(params, prompt, cfg, **kw)
+    oracle = G.private_generate(params, prompt, cfg, trusted=True, **kw)
+    np.testing.assert_array_equal(np.asarray(priv.tokens),
+                                  np.asarray(oracle.tokens))
+    np.testing.assert_array_equal(np.asarray(priv.logits),
+                                  np.asarray(oracle.logits))
+    # the private run actually offloaded and verified
+    assert priv.telemetry.device_matmuls > 0
+    assert priv.telemetry.verify_ops > 0
+    assert priv.integrity.n_ops > 0
+    assert priv.integrity.n_checked == priv.integrity.n_ops
+    assert priv.integrity.ok
+    # the trusted oracle ran everything in the enclave
+    assert oracle.telemetry.device_matmuls == 0
+    assert oracle.telemetry.trusted_matmuls > 0
+    assert oracle.ring is None
+    # one ring slot consumed per decode step
+    assert priv.ring["consumed"] == priv.decode_steps
+    assert priv.plan_digest == oracle.plan_digest
+
+
+def test_decode_once_ring_vs_live_factors_bit_exact(smollm):
+    """One token step fed by a ring slot == the same step deriving its
+    factors live in-trace — the end-to-end form of the cached-vs-live
+    stream identity."""
+    cfg, params = smollm
+    from repro.core.origami import OrigamiExecutor
+    from repro.runtime.sessions import TokenSlotRing
+    pol = IG.IntegrityPolicy.full(k=2)
+    ex = OrigamiExecutor(cfg, params, "origami", integrity=pol)
+    ex.attach_decode_plan(max_steps=16)
+    key = jax.random.PRNGKey(3)
+    prompt = _prompt(cfg)
+    S0 = prompt.shape[1]
+    logits, caches, _ = ex.prefill_session(prompt, key,
+                                           max_seq=S0 + 4)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    ring = TokenSlotRing(ex.decode_cache(prompt.shape[0]), key, lo=S0,
+                         depth=2, background=False)
+    try:
+        y_ring, _, rep_ring = ex.decode_once(tok, caches, S0, key,
+                                             ring.take(S0))
+        y_live, _, rep_live = ex.decode_once(tok, caches, S0, key, None)
+    finally:
+        ring.close()
+    np.testing.assert_array_equal(np.asarray(y_ring), np.asarray(y_live))
+    assert rep_ring.n_checked == rep_live.n_checked > 0
+    assert rep_ring.ok and rep_live.ok
+
+
+def test_private_generate_detects_dishonest_device(smollm):
+    """A corrupting device fails the per-step Freivalds folds."""
+    cfg, params = smollm
+    from repro.core.origami import OrigamiExecutor
+    from repro.runtime.faults import DishonestDevice, FaultSpec
+    prompt = _prompt(cfg)
+    ex = OrigamiExecutor(cfg, params, "origami",
+                         integrity=IG.IntegrityPolicy.full(k=2),
+                         fault=DishonestDevice(FaultSpec("bit_flip")))
+    res = G.private_generate(params, prompt, cfg, max_new_tokens=3,
+                             session_key=jax.random.PRNGKey(4),
+                             executor=ex)
+    assert res.integrity.n_failed > 0
+    assert not res.integrity.ok
+
+
+def test_recurrent_prefill_jitted_matches_eager_loop():
+    """Satellite: the fori_loop prompt prefill for recurrent families is
+    bit-identical to the per-token eager loop it replaced."""
+    cfg = get_smoke("zamba2_1_2b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S0, new = 2, 5, 3
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (B, S0), 0,
+                                cfg.vocab_size)
+    total = S0 + new
+    # the replaced implementation, verbatim
+    caches = M.init_caches(cfg, B, total)
+    logits = None
+    for t in range(S0):
+        logits, caches = M.decode_step(params, prompt[:, t:t + 1], caches,
+                                       jnp.int32(t), cfg)
+    res = G.generate(params, prompt, cfg, max_new_tokens=new)
+    assert res.tokens.shape == (B, total)
+    # oracle continuation from the eager-prefill state
+    tokens = jnp.concatenate(
+        [prompt, jnp.argmax(logits[:, -1:, :cfg.vocab_size],
+                            axis=-1).astype(jnp.int32)], axis=1)
+    for t in range(S0, total - 1):
+        logits, caches = M.decode_step(params, tokens[:, -1:], caches,
+                                       jnp.int32(t), cfg)
+        tokens = jnp.concatenate(
+            [tokens, jnp.argmax(logits[:, :1, :cfg.vocab_size],
+                                axis=-1).astype(jnp.int32)], axis=1)
+    np.testing.assert_array_equal(np.asarray(res.tokens),
+                                  np.asarray(tokens))
+
+
+def test_engine_serves_token_streams(smollm):
+    """GenerateExecutor through the batcher: sealed prompts in, sealed
+    full sequences out, bit-exact vs the trusted oracle on the same
+    padded batch (greedy sampling makes the stream deterministic)."""
+    cfg, params = smollm
+    prompt_len, new = 6, 4
+    ex = G.GenerateExecutor(cfg, params, prompt_len=prompt_len,
+                            max_new_tokens=new,
+                            integrity=IG.IntegrityPolicy.full(k=2))
+    assert ex.attested_digest == ex.dplan.digest != ex.plan.digest
+    engine = ServingEngine(EngineConfig(max_batch=4, max_wait_ms=50.0))
+    engine.register_executor("smollm-gen", ex, input_key="tokens",
+                             input_dtype="int32")
+    assert engine.attest("smollm-gen").plan_digest == ex.dplan.digest
+    rng = np.random.default_rng(0)
+    prompts, keys, futs = [], [], []
+    try:
+        for rid in range(4):                    # full bucket
+            toks = rng.integers(0, cfg.vocab_size,
+                                size=(prompt_len,)).astype(np.float32)
+            key = rng.integers(0, 2 ** 32 - 1, size=(2,), dtype=np.uint32)
+            box = PrivateInferenceServer.client_seal(key, toks, rid)
+            futs.append(engine.submit(
+                "smollm-gen", Request(rid=rid, box=box,
+                                      shape=(prompt_len,),
+                                      session_key=key)))
+            prompts.append(toks.astype(np.int64))
+            keys.append(key)
+        outs = []
+        for rid, (f, key) in enumerate(zip(futs, keys)):
+            resp = f.result(timeout=300)
+            assert resp.ok, resp
+            out = PrivateInferenceServer.client_open(
+                key, resp.box, (prompt_len + new,))
+            outs.append(out.astype(np.int64))
+    finally:
+        engine.close()
+    oracle = G.private_generate(
+        params, jnp.asarray(np.stack(prompts), jnp.int32), cfg,
+        max_new_tokens=new, trusted=True, executor=ex,
+        key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.stack(outs),
+                                  np.asarray(oracle.tokens))
+    assert engine.stats.completed == 4

@@ -1,0 +1,137 @@
+"""Token-slot ring (runtime/sessions.py): per-(session, token, layer)
+reuse guard, refill-thread outrun, and bit-exact cached-vs-live factors
+across >= 64 decode steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import blinding as B
+from repro.core import integrity as IG
+from repro.core.origami import OrigamiExecutor
+from repro.core.precompute import BlindedLayerCache
+from repro.kernels.limb_matmul.ops import field_matmul
+from repro.runtime.sessions import SessionPool, SlotReuseError, TokenSlotRing
+
+
+def _decode_cache(batch=2, integrity=None):
+    cfg = get_smoke("smollm_135m")
+    params = None  # set below; keep init in one place
+    import repro.models.model as M
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ex = OrigamiExecutor(cfg, params, "origami", integrity=integrity)
+    ex.attach_decode_plan(max_steps=256)
+    return ex.decode_cache(batch)
+
+
+def test_reuse_guard_raises_on_token_reissue():
+    cache = _decode_cache()
+    ring = TokenSlotRing(cache, jax.random.PRNGKey(5), lo=3, depth=4)
+    try:
+        first = ring.take(3)
+        assert first and all("r" in e for e in first)
+        with pytest.raises(SlotReuseError):
+            ring.take(3)
+        # non-contiguous issue is fine; the re-issue is what dies
+        ring.take(7)
+        with pytest.raises(SlotReuseError):
+            ring.take(7)
+        assert ring.stats()["consumed"] == 2
+    finally:
+        ring.close()
+
+
+def test_take_after_close_refuses():
+    cache = _decode_cache()
+    ring = TokenSlotRing(cache, jax.random.PRNGKey(5), depth=2)
+    ring.close()
+    with pytest.raises(RuntimeError):
+        ring.take(0)
+
+
+def test_refill_outrun_falls_back_synchronously():
+    """A consumer faster than the refill thread gets counted misses and
+    correct factors — never an error, never a stall."""
+    cache = _decode_cache()
+    ring = TokenSlotRing(cache, jax.random.PRNGKey(6), lo=0, depth=2)
+    try:
+        for t in range(64):
+            got = ring.take(t)
+            assert len(got) == cache.num_layers
+        st = ring.stats()
+        assert st["consumed"] == 64
+        assert st["refill_errors"] == 0
+        # everything the ring prefetched + everything taken synchronously
+        # adds up: no token was silently skipped
+        assert st["refilled"] + st["misses"] >= 64 - st["depth"]
+    finally:
+        ring.close()
+
+
+def test_refill_fault_contained():
+    boom = {"n": 0}
+
+    def fault(token):
+        boom["n"] += 1
+        raise RuntimeError("chaos")
+
+    cache = _decode_cache()
+    ring = TokenSlotRing(cache, jax.random.PRNGKey(8), depth=2,
+                         refill_fault=fault)
+    try:
+        for t in range(8):
+            assert ring.take(t)
+        st = ring.stats()
+        assert st["consumed"] == 8
+        assert st["refill_errors"] >= 1 and boom["n"] >= 1
+    finally:
+        ring.close()
+
+
+def test_ring_factors_bit_exact_vs_live_derivation():
+    """>= 64 decode steps: every ring slot's (r, u, s, ws) must equal the
+    live in-trace derivation — stream_key/fold_stream keyed by
+    (session, layer, token) — bit for bit. This is the property that lets
+    one compiled token-step executable consume either source."""
+    pol = IG.IntegrityPolicy.full(k=2)
+    cache = _decode_cache(batch=2, integrity=pol)
+    key = jax.random.PRNGKey(11)
+    ring = TokenSlotRing(cache, key, lo=1, depth=8)
+    try:
+        for t in range(1, 66):
+            slot = ring.take(t)
+            for i, (entry, lyr) in enumerate(zip(slot, cache.layers)):
+                r_live = B.blinding_stream(B.stream_key(key, i, t),
+                                           (lyr.t, lyr.d_in))
+                np.testing.assert_array_equal(np.asarray(entry["r"]),
+                                              np.asarray(r_live))
+                np.testing.assert_array_equal(
+                    np.asarray(entry["u"]),
+                    np.asarray(field_matmul(r_live, lyr.w_q)))
+                s_live = IG.fold_stream(key, i, t, lyr.d_out, pol.k)
+                np.testing.assert_array_equal(np.asarray(entry["s"]),
+                                              np.asarray(s_live))
+                np.testing.assert_array_equal(
+                    np.asarray(entry["ws"]),
+                    np.asarray(field_matmul(lyr.w_q, s_live)))
+    finally:
+        ring.close()
+
+
+def test_pool_acquire_stream_composes_key_and_ring():
+    cache = _decode_cache()
+    pool = SessionPool(None, depth=2, background=False)
+    try:
+        k1, r1 = pool.acquire_stream(cache, lo=4, depth=2,
+                                     background=False)
+        k2, r2 = pool.acquire_stream(cache, lo=4, depth=2,
+                                     background=False)
+        assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+        assert r1.take(4) and r2.take(4)   # same token, different sessions
+        with pytest.raises(SlotReuseError):
+            r1.take(4)
+        kn, rn = pool.acquire_stream(None)
+        assert rn is None and kn is not None
+    finally:
+        pool.close()
